@@ -1,0 +1,43 @@
+"""Betweenness-centrality-style workload (paper s7 future work): multi-source
+traversal waves on the LIVJ analogue.  The active-set oscillation between
+waves is where elastic placement wins most -- VMs spin down between sweeps.
+
+Reports cost per strategy for a 6-source BC forward phase.
+"""
+
+from __future__ import annotations
+
+from repro.core import BillingModel, TimeFunction, evaluate, STRATEGIES
+from repro.data import paper_workloads
+from repro.graph.bsp import run_bc_forward
+
+
+def run(verbose: bool = True) -> dict:
+    wl = paper_workloads(("LIVJ/8P",))[0]
+    sources = [0, 101, 2002, 30003, 4004, 505]
+    trace = run_bc_forward(wl.pg, sources)
+    tf = TimeFunction.from_trace(trace).scaled_to_tmin(21.0 * len(sources))
+    model = BillingModel(delta=60.0)
+    out = {}
+    if verbose:
+        print(
+            f"BC forward: {len(sources)} waves, {trace.n_supersteps} supersteps, "
+            f"mean active fraction {trace.mean_active_fraction():.0%}"
+        )
+        print(f"{'strategy':10s} {'T/Tmin':>7s} {'cost':>5s} {'peak VMs':>9s}")
+    for name, strat in STRATEGIES.items():
+        r = evaluate(strat(tf), model)
+        out[name] = r
+        if verbose:
+            print(
+                f"{name:10s} {r.makespan_over_tmin:7.3f} {r.cost_quanta:5d} "
+                f"{r.peak_vms:9d}"
+            )
+    if verbose:
+        save = 1 - out["lap"].cost_quanta / out["default"].cost_quanta
+        print(f"LA/P saves {save:.0%} vs default on the BC workload")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,40 @@
+"""Beyond-paper: billing-granularity sweep (the paper's s7 notes the 1-min
+quantum is too coarse for these runtimes and anticipates per-second container
+billing).  Sweeps delta over {60, 30, 10, 1} s and reports the cost ratio of
+each elastic strategy vs the default placement."""
+
+from __future__ import annotations
+
+from repro.core import BillingModel, evaluate, STRATEGIES
+from repro.data import paper_workloads
+
+DELTAS = (60.0, 30.0, 10.0, 1.0)
+
+
+def run(verbose: bool = True) -> dict:
+    out: dict = {}
+    for wl in paper_workloads():
+        table = {}
+        for delta in DELTAS:
+            model = BillingModel(delta=delta)
+            costs = {
+                name: evaluate(strat(wl.tf), model).cost_quanta * (delta / 60.0)
+                for name, strat in STRATEGIES.items()
+            }
+            table[delta] = {
+                k: costs[k] / costs["default"] for k in costs if k != "default"
+            }
+        out[wl.name] = table
+        if verbose:
+            print(f"{wl.name}: cost vs default (core-min equivalents)")
+            print("  delta_s " + " ".join(f"{k:>6s}" for k in table[DELTAS[0]]))
+            for delta, ratios in table.items():
+                print(
+                    f"  {delta:7.0f} "
+                    + " ".join(f"{v:6.2f}" for v in ratios.values())
+                )
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,80 @@
+"""Halo-sharding hillclimb artifact: lowers the pna:ogb_products cell through
+the shard_map halo-exchange path on the production mesh and reports the
+roofline terms (EXPERIMENTS.md s.Perf cell 3).
+
+Run standalone (needs its own process: forces 512 host devices):
+  PYTHONPATH=src python -m benchmarks.halo_probe
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS
+from repro.launch.dryrun import parse_collectives
+from repro.launch.mesh import make_production_mesh
+from repro.models.gnn.halo_pna import init_pna, pna_forward_halo
+
+# ogb_products at 256 shards; Smax = per-peer halo row budget, set from the
+# partition quality measured by repro.dist.halo on BFS-grow partitions
+# (tests/test_halo.py validates plans; real plans come from build_halo_plan).
+PN, N, E, F, C = 256, 2_449_029, 61_859_140, 100, 64
+SMAX = 16
+
+
+def run(verbose: bool = True) -> dict:
+    mesh = make_production_mesh(multi_pod=False)
+    cfg = ARCHS["pna"].config
+    nl = (N // PN // 8 + 1) * 8
+    emax = (E // PN // 8 + 1) * 8
+    params = jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype),
+        jax.eval_shape(lambda k: init_pna(k, cfg, F, C), jax.random.PRNGKey(0)),
+    )
+    sds = lambda sh, dt: jax.ShapeDtypeStruct(sh, dt)
+    inputs = dict(
+        xs=sds((PN, nl, F), jnp.float32),
+        send_idx=sds((PN, PN, SMAX), jnp.int32),
+        e_src=sds((PN, emax), jnp.int32),
+        e_dst=sds((PN, emax), jnp.int32),
+        e_mask=sds((PN, emax), jnp.bool_),
+    )
+    shardings = {k: NamedSharding(mesh, P(("data", "model"))) for k in inputs}
+
+    def step(batch):
+        return pna_forward_halo(
+            params, cfg, mesh, batch["xs"], batch["send_idx"],
+            batch["e_src"], batch["e_dst"], batch["e_mask"],
+            axis=("data", "model"),
+        )
+
+    with mesh:
+        compiled = jax.jit(step, in_shardings=(shardings,)).lower(inputs).compile()
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    coll = parse_collectives(compiled.as_text())
+    out = dict(
+        temp_gib=mem.temp_size_in_bytes / 2**30,
+        flops_dev=float(cost.get("flops", 0)),
+        bytes_dev=float(cost.get("bytes accessed", 0)),
+        coll_mib=coll["wire_bytes_per_device"] / 2**20,
+        t_compute_s=float(cost.get("flops", 0)) / 197e12,
+        t_memory_s=float(cost.get("bytes accessed", 0)) / 819e9,
+        t_coll_s=coll["wire_bytes_per_device"] / 50e9,
+    )
+    if verbose:
+        print(
+            f"pna-halo ogb_products single: temp={out['temp_gib']:.2f}GiB "
+            f"flops/dev={out['flops_dev']:.3g} bytes/dev={out['bytes_dev']:.3g} "
+            f"coll/dev={out['coll_mib']:.2f}MiB terms: compute {out['t_compute_s']:.5f}s "
+            f"memory {out['t_memory_s']:.5f}s collective {out['t_coll_s']:.6f}s"
+        )
+    return out
+
+
+if __name__ == "__main__":
+    run()

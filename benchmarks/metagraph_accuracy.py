@@ -1,0 +1,110 @@
+"""Metagraph a-priori prediction accuracy vs the executed trace (paper s3.2
+claims; their ref [6]).  Reports per workload:
+
+  * first-visit superstep exactness (fraction of subgraphs predicted exactly)
+  * activation recall (fraction of actual activations covered by prediction)
+  * activation precision (fraction of predicted activations that occurred)
+  * cost (core-min) when planning from the *predicted* TimeFunction but
+    billing against the *actual* trace -- the end-to-end planning question.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (
+    BillingModel,
+    TimeFunction,
+    evaluate,
+    ffd_placement,
+    lap_placement,
+)
+from repro.core.billing import CostReport
+from repro.core.metagraph import build_metagraph, predict_schedule, predict_time_function
+from repro.core.placement import Placement
+from repro.data import paper_workloads
+
+
+def _replay_cost(plan: Placement, actual: TimeFunction) -> CostReport:
+    """Bill a plan made from predicted taus against the actual taus.
+
+    Supersteps beyond the planned horizon fall back to the last mapping row
+    (pinned partitions keep their VM; unplanned actives go to VM 0).
+    """
+    m_actual = actual.n_supersteps
+    vm_of = np.full((m_actual, actual.n_parts), -1, dtype=np.int64)
+    horizon = min(plan.vm_of.shape[0], m_actual)
+    vm_of[:horizon] = plan.vm_of[:horizon]
+    # resolve unplanned activity: keep last known mapping, else VM 0
+    last = np.full(actual.n_parts, 0, dtype=np.int64)
+    for s in range(m_actual):
+        for i in range(actual.n_parts):
+            if vm_of[s, i] >= 0:
+                last[i] = vm_of[s, i]
+            elif actual.tau[s, i] > 0:
+                vm_of[s, i] = last[i]
+    executed = Placement(plan.strategy + "+replay", actual.tau, vm_of)
+    return evaluate(executed, BillingModel())
+
+
+def run(verbose: bool = True) -> list[dict]:
+    rows = []
+    for wl in paper_workloads():
+        mg = build_metagraph(wl.pg)
+        src_meta = int(wl.pg.subgraph_of_vertex[wl.source])
+        sched = predict_schedule(mg, src_meta, revisit_horizon=2.0)
+        pred_tf, _ = predict_time_function(wl.pg, wl.source, mg=mg, revisit_horizon=2.0)
+        pred_tf = pred_tf.scaled_to_tmin(wl.tf.t_min())
+
+        # first-visit exactness
+        first_actual: dict[int, int] = {}
+        for s, sgs in enumerate(wl.trace.active_subgraphs):
+            for sg in sgs:
+                first_actual.setdefault(int(sg), s + 1)
+        exact = sum(
+            1 for sg, s in first_actual.items() if sched.first_visit[sg] == s
+        )
+
+        # activation recall / precision over the common horizon
+        m = min(sched.n_supersteps, wl.trace.n_supersteps)
+        tp = fp = fn = 0
+        for s in range(m):
+            act = set(wl.trace.active_subgraphs[s].tolist())
+            pred = set(np.flatnonzero(sched.active[s]).tolist())
+            tp += len(act & pred)
+            fp += len(pred - act)
+            fn += len(act - pred)
+        recall = tp / max(1, tp + fn)
+        precision = tp / max(1, tp + fp)
+
+        # end-to-end: plan on prediction, bill on actual
+        plan_cost = {}
+        for name, strat in (("ffd", ffd_placement), ("lap", lap_placement)):
+            plan = strat(pred_tf)
+            r = _replay_cost(plan, wl.tf)
+            oracle = evaluate(strat(wl.tf), BillingModel())
+            plan_cost[name] = (r.cost_quanta, oracle.cost_quanta, r.makespan_over_tmin)
+
+        row = dict(
+            name=wl.name,
+            first_visit_exact=f"{exact}/{len(first_actual)}",
+            recall=recall,
+            precision=precision,
+            plan_cost=plan_cost,
+        )
+        rows.append(row)
+        if verbose:
+            print(
+                f"{wl.name}: first-visit exact {row['first_visit_exact']}, "
+                f"recall {recall:.2f}, precision {precision:.2f}"
+            )
+            for k, (c, oc, ms) in plan_cost.items():
+                print(
+                    f"  plan-from-prediction {k}: cost {c} core-min "
+                    f"(oracle-trace plan: {oc}), makespan {ms:.2f}x T_Min"
+                )
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,133 @@
+"""Fig. 3 analogue: makespan / cost / under-utilization / core-secs for every
+placement strategy on the three paper workloads, plus the paper's qualitative
+claim checks.  Prints CSV rows ``graph,strategy,makespan_s,t_over_tmin,
+cost_core_min,core_secs,under_util_core_min,peak_vms``.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (
+    BillingModel,
+    TimeFunction,
+    default_placement,
+    evaluate,
+    ffd_placement,
+    lap_placement,
+    mfp_placement,
+    opt_placement,
+)
+from repro.data import paper_workloads
+
+# Effective VM <-> shared-store staging bandwidth for OPT-DM (naive copy; the
+# paper's GbE + blob-store regime).
+MOVE_BW = 25e6
+
+
+def run(verbose: bool = True) -> dict:
+    model = BillingModel(delta=60.0, gamma=1.0)
+    results: dict = {}
+    rows = []
+    for wl in paper_workloads():
+        tf = wl.tf
+        placements = {
+            "default": default_placement(tf),
+            "opt": opt_placement(tf),
+            "ffd": ffd_placement(tf),
+            "mfp": mfp_placement(tf),
+            "lap": lap_placement(tf),
+        }
+        reports = {k: evaluate(p, model) for k, p in placements.items()}
+        reports["opt-dm"] = evaluate(
+            placements["opt"],
+            BillingModel(delta=60.0, move_bandwidth=MOVE_BW),
+            data_movement=True,
+            partition_bytes=wl.partition_bytes,
+        )
+        results[wl.name] = reports
+        for k, r in reports.items():
+            rows.append(
+                f"{wl.name},{k},{r.makespan:.2f},{r.makespan_over_tmin:.3f},"
+                f"{r.cost_quanta},{r.core_secs:.1f},"
+                f"{r.under_util_secs / 60.0:.2f},{r.peak_vms}"
+            )
+
+    if verbose:
+        print("graph,strategy,makespan_s,t_over_tmin,cost_core_min,core_secs,"
+              "under_util_core_min,peak_vms")
+        for row in rows:
+            print(row)
+        print()
+        _print_claims(results)
+    return results
+
+
+def _print_claims(results: dict) -> None:
+    """The paper's s6.3 qualitative claims, checked against our run."""
+    checks = []
+
+    def check(name, ok, detail=""):
+        checks.append((name, ok, detail))
+
+    for g, r in results.items():
+        check(
+            f"{g}: OPT cost == FFD cost",
+            r["opt"].cost_quanta == r["ffd"].cost_quanta,
+            f"{r['opt'].cost_quanta} vs {r['ffd'].cost_quanta}",
+        )
+        check(
+            f"{g}: OPT/FFD makespan == T_Min",
+            abs(r["opt"].makespan - r["opt"].t_min) < 1e-6
+            and abs(r["ffd"].makespan - r["ffd"].t_min) < 1e-6,
+        )
+        check(
+            f"{g}: OPT cost <= default cost",
+            r["opt"].cost_quanta <= r["default"].cost_quanta,
+            f"{r['opt'].cost_quanta} vs {r['default'].cost_quanta}",
+        )
+        for s in ("mfp", "lap"):
+            save = 1 - r[s].cost_quanta / r["default"].cost_quanta
+            slow = r[s].makespan / r[s].t_min - 1
+            check(
+                f"{g}: {s} cheaper than default (paper: 12-42%)",
+                r[s].cost_quanta <= r["default"].cost_quanta,
+                f"saves {save:.0%}, slower by {slow:.0%}",
+            )
+        check(
+            f"{g}: OPT/FFD core-secs <= pinned core-secs",
+            r["opt"].core_secs <= min(r["mfp"].core_secs, r["lap"].core_secs) + 1e-6,
+            f"{r['opt'].core_secs:.0f} vs mfp {r['mfp'].core_secs:.0f} / "
+            f"lap {r['lap'].core_secs:.0f}",
+        )
+        check(
+            f"{g}: OPT-DM makespan worse than default",
+            r["opt-dm"].makespan > r["default"].makespan,
+            f"{r['opt-dm'].makespan:.0f}s vs {r['default'].makespan:.0f}s "
+            f"({r['opt-dm'].makespan / r['default'].makespan:.1f}x)",
+        )
+
+    # the paper's headline numbers
+    ork = results.get("ORKT/40P")
+    if ork:
+        save_opt = 1 - ork["opt"].cost_quanta / ork["default"].cost_quanta
+        save_lap = 1 - ork["lap"].cost_quanta / ork["default"].cost_quanta
+        check(
+            "ORKT: OPT/FFD ~40% cheaper than default (paper)",
+            save_opt >= 0.25,
+            f"saves {save_opt:.0%}",
+        )
+        check(
+            "ORKT: LA/P up to ~42% cheaper (paper headline)",
+            save_lap >= 0.25,
+            f"saves {save_lap:.0%}",
+        )
+
+    n_ok = sum(1 for _, ok, _ in checks if ok)
+    print(f"claims: {n_ok}/{len(checks)} hold")
+    for name, ok, detail in checks:
+        print(f"  [{'PASS' if ok else 'FAIL'}] {name}" + (f" ({detail})" if detail else ""))
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,227 @@
+"""Roofline analysis over the dry-run artifacts (EXPERIMENTS.md s.Roofline).
+
+Per (arch x shape x mesh) cell:
+
+  compute term    = FLOPs / (chips x 197 TF/s bf16)
+  memory term     = HBM bytes / (chips x 819 GB/s)
+  collective term = wire bytes / (chips x 50 GB/s ICI)
+
+``compiled.cost_analysis()`` on a scanned (lax.while) program counts the loop
+body ONCE, so LM cells apply a loop correction: analytic step FLOPs (standard
+6ND-style accounting incl. attention, MoE capacity, logits, MTP) divided by
+the HLO count gives a multiplicative factor also applied to bytes and
+collectives (layers dominate all three).  GNN/recsys models unroll in Python,
+so their HLO numbers are used directly.  MODEL_FLOPS = 6 N_active T is
+reported as the useful-compute ratio.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+import numpy as np
+
+from repro.configs import ARCHS
+from repro.configs.base import LM_SHAPES, LMConfig
+
+PEAK = 197e12  # bf16 FLOP/s per chip
+HBM = 819e9  # bytes/s per chip
+ICI = 50e9  # bytes/s per link
+
+ART = "artifacts/dryrun"
+
+
+# ---------------------------------------------------------------------------
+# analytic LM step FLOPs (global, fwd[+bwd])
+# ---------------------------------------------------------------------------
+
+
+def _lm_layer_flops(cfg: LMConfig, t: int, s_ctx: float) -> float:
+    """fwd FLOPs of one layer over t tokens with mean context s_ctx."""
+    d = cfg.d_model
+    if cfg.mla:
+        m = cfg.mla
+        qk = m.qk_nope_dim + m.qk_rope_dim
+        proj = (
+            d * m.q_lora_rank
+            + m.q_lora_rank * cfg.n_heads * qk
+            + d * m.kv_lora_rank
+            + m.kv_lora_rank * cfg.n_heads * (m.qk_nope_dim + m.v_head_dim)
+            + d * m.qk_rope_dim
+            + cfg.n_heads * m.v_head_dim * d
+        )
+        attn = cfg.n_heads * s_ctx * (qk + m.v_head_dim)
+    else:
+        proj = (
+            d * cfg.n_heads * cfg.d_head
+            + 2 * d * cfg.n_kv_heads * cfg.d_head
+            + cfg.n_heads * cfg.d_head * d
+        )
+        attn = cfg.n_heads * s_ctx * 2 * cfg.d_head
+    return 2 * t * (proj + attn)
+
+
+def _lm_ffn_flops(cfg: LMConfig, t: int, moe_layer: bool) -> float:
+    d = cfg.d_model
+    if moe_layer and cfg.moe:
+        mo = cfg.moe
+        eff_tokens = t * mo.top_k * mo.capacity_factor  # capacity-padded
+        routed = 2 * eff_tokens * 3 * d * mo.d_ff_expert
+        shared = 2 * t * 3 * d * mo.d_ff_expert * mo.n_shared
+        router = 2 * t * d * mo.n_experts
+        return routed + shared + router
+    return 2 * t * 3 * d * cfg.d_ff
+
+
+def analytic_lm_flops(cfg: LMConfig, shape_name: str) -> tuple[float, float]:
+    """(total step FLOPs, MODEL_FLOPS = 6 N_active T) -- global, all chips."""
+    shape = LM_SHAPES[shape_name]
+    if shape.kind == "decode":
+        t = shape.global_batch  # one token per sequence
+        s_ctx = min(shape.seq_len, cfg.sliding_window or shape.seq_len)
+    else:
+        t = shape.global_batch * shape.seq_len
+        s_ctx = (
+            min(shape.seq_len, cfg.sliding_window or shape.seq_len) / 2
+            if cfg.sliding_window
+            else shape.seq_len / 2
+        )
+    n_dense = cfg.first_k_dense if cfg.moe else cfg.n_layers
+    n_moe = cfg.n_moe_layers
+    fwd = 0.0
+    fwd += n_dense * (_lm_layer_flops(cfg, t, s_ctx) + _lm_ffn_flops(cfg, t, False))
+    fwd += n_moe * (_lm_layer_flops(cfg, t, s_ctx) + _lm_ffn_flops(cfg, t, True))
+    fwd += 2 * t * cfg.d_model * cfg.vocab  # logits
+    if shape.kind == "train" and cfg.mtp_depth:
+        fwd += _lm_layer_flops(cfg, t, s_ctx) + _lm_ffn_flops(cfg, t, False)
+        fwd += 2 * t * cfg.d_model * cfg.vocab + 2 * t * 2 * cfg.d_model * cfg.d_model
+    total = 3.0 * fwd if shape.kind == "train" else fwd
+    model = 6.0 * cfg.active_param_count() * t if shape.kind == "train" else (
+        2.0 * cfg.active_param_count() * t
+    )
+    return total, model
+
+
+# ---------------------------------------------------------------------------
+
+
+def load_cells() -> list[dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(ART, "*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def analyze(cell: dict) -> dict | None:
+    if cell.get("skipped"):
+        return {"arch": cell["arch"], "shape": cell["shape"], "skipped": cell["skipped"]}
+    if not cell.get("ok"):
+        return {"arch": cell["arch"], "shape": cell["shape"], "error": cell.get("error")}
+    arch, shape, mesh = cell["arch"], cell["shape"], cell["mesh"]
+    n_dev = cell["n_devices"]
+    spec = ARCHS[arch]
+    flops_dev = cell["cost"]["flops"]
+    bytes_dev = cell["cost"]["bytes_accessed"]
+    coll_dev = cell["collectives"]["wire_bytes_per_device"]
+
+    corr = 1.0
+    model_flops = None
+    if spec.family == "lm":
+        total, model = analytic_lm_flops(spec.config, shape)
+        model_flops = model
+        hlo_total = flops_dev * n_dev
+        if hlo_total > 0:
+            corr = max(1.0, total / hlo_total)
+        flops_dev = total / n_dev
+        bytes_dev *= corr
+        coll_dev *= corr
+
+    t_compute = flops_dev / PEAK
+    t_mem = bytes_dev / HBM
+    t_coll = coll_dev / ICI
+    terms = {"compute": t_compute, "memory": t_mem, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    bound_time = terms[dominant]
+    useful_ratio = (
+        (model_flops / (flops_dev * n_dev)) if model_flops else None
+    )
+    # roofline fraction: useful compute time / dominant bound time
+    model_t = (model_flops / n_dev / PEAK) if model_flops else t_compute
+    frac = model_t / bound_time if bound_time > 0 else 0.0
+    lever = {
+        "compute": "cut non-useful FLOPs (capacity factor, remat recompute, logits fraction)",
+        "memory": "fuse/shrink the largest live buffers or raise arithmetic intensity per HBM pass",
+        "collective": "reshard to cut cross-device traffic or overlap collectives with compute",
+    }[dominant]
+    return dict(
+        arch=arch,
+        shape=shape,
+        mesh=mesh,
+        n_devices=n_dev,
+        t_compute_s=t_compute,
+        t_memory_s=t_mem,
+        t_collective_s=t_coll,
+        dominant=dominant,
+        roofline_fraction=frac,
+        useful_flops_ratio=useful_ratio,
+        loop_corr=corr,
+        temp_gib=cell["memory"].get("temp_size_in_bytes", 0) / 2**30,
+        args_gib=cell["memory"].get("argument_size_in_bytes", 0) / 2**30,
+        lever=lever,
+    )
+
+
+def run(verbose: bool = True) -> list[dict]:
+    rows = [analyze(c) for c in load_cells()]
+    rows = [r for r in rows if r]
+    if verbose:
+        hdr = (
+            "arch,shape,mesh,chips,compute_s,memory_s,collective_s,dominant,"
+            "roofline_frac,useful_ratio,temp_GiB,args_GiB"
+        )
+        print(hdr)
+        for r in rows:
+            if "skipped" in r:
+                print(f"{r['arch']},{r['shape']},-,-,-,-,-,SKIP({r['skipped'][:40]})")
+                continue
+            if "error" in r:
+                print(f"{r['arch']},{r['shape']},-,-,-,-,-,ERROR")
+                continue
+            ur = f"{r['useful_flops_ratio']:.2f}" if r["useful_flops_ratio"] else "-"
+            print(
+                f"{r['arch']},{r['shape']},{r['mesh']},{r['n_devices']},"
+                f"{r['t_compute_s']:.4f},{r['t_memory_s']:.4f},"
+                f"{r['t_collective_s']:.4f},{r['dominant']},"
+                f"{r['roofline_fraction']:.3f},{ur},"
+                f"{r['temp_gib']:.1f},{r['args_gib']:.1f}"
+            )
+        # hillclimb candidates: worst fraction / most collective-bound among
+        # throughput cells (decode/long cells are latency-bound by nature and
+        # would degenerate both picks)
+        real = [
+            r
+            for r in rows
+            if "dominant" in r
+            and r["mesh"] == "single"
+            and not r["shape"].startswith(("decode", "long", "serve", "retrieval"))
+        ]
+        if real:
+            worst = min(real, key=lambda r: r["roofline_fraction"])
+            coll = max(real, key=lambda r: r["t_collective_s"] / max(1e-12, r["t_compute_s"]))
+            print(
+                f"\nhillclimb candidates: worst-fraction={worst['arch']}:{worst['shape']} "
+                f"({worst['roofline_fraction']:.3f}), most-collective-bound="
+                f"{coll['arch']}:{coll['shape']} "
+                f"(paper-representative: pna:ogb_products -- see benchmarks/halo_probe.py)"
+            )
+    os.makedirs("artifacts", exist_ok=True)
+    with open("artifacts/roofline.json", "w") as f:
+        json.dump(rows, f, indent=1)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,56 @@
+"""Placement-strategy runtime scaling (paper s5 complexity claims + the s6.3
+observation that FFD takes ~1 s where OPT takes ~13 s on ORKT/40P).
+
+Times each strategy on synthetic tau matrices of growing size and reports
+seconds per plan; checks FFD stays way under OPT while matching its cost.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import TimeFunction, evaluate, STRATEGIES
+from repro.core.placement import opt_placement
+
+
+def _synthetic_tf(m: int, n: int, seed: int) -> TimeFunction:
+    rng = np.random.default_rng(seed)
+    # lognormal partition times with growing/decaying activation (BFS-like)
+    tau = rng.lognormal(0.0, 1.0, (m, n))
+    for s in range(m):
+        frac = min(1.0, 0.15 + s / m)  # frontier grows
+        mask = rng.random(n) < frac
+        tau[s] *= mask
+    return TimeFunction(tau)
+
+
+def run(verbose: bool = True) -> list[dict]:
+    rows = []
+    for m, n in [(8, 8), (8, 40), (16, 64), (16, 128)]:
+        tf = _synthetic_tf(m, n, seed=m * n)
+        row: dict = {"m": m, "n": n}
+        ffd_cost = opt_cost = None
+        for name, strat in STRATEGIES.items():
+            t0 = time.perf_counter()
+            p = strat(tf)
+            dt = time.perf_counter() - t0
+            r = evaluate(p)
+            row[name] = dt
+            if name == "ffd":
+                ffd_cost = r.cost_quanta
+            if name == "opt":
+                opt_cost = r.cost_quanta
+        row["ffd_matches_opt_cost"] = ffd_cost == opt_cost
+        rows.append(row)
+        if verbose:
+            times = " ".join(
+                f"{k}={row[k] * 1e3:7.1f}ms" for k in STRATEGIES
+            )
+            print(f"m={m:3d} n={n:4d} {times} ffd==opt_cost: {row['ffd_matches_opt_cost']}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,11 @@
+"""Pytest root config: make `pytest tests/` work without PYTHONPATH=src.
+
+Deliberately does NOT touch XLA device flags -- tests and benches must see
+the single real CPU device; only launch/dryrun.py forces 512 host devices
+(in its own process).
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "src"))

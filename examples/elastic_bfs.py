@@ -1,0 +1,72 @@
+"""End-to-end elastic graph processing driver (the paper's system, running).
+
+For each paper workload: plan placement from the metagraph *prediction*
+(launch-time planning, no profiling run), execute the BFS under that plan on
+the elastic executor (partition state device-placed per schedule, migrations
+tracked), bill the actual execution, and compare against the default
+placement and the trace-oracle plan.  Also demonstrates dynamic re-planning
+(paper s7 future work) when the prediction diverges.
+
+  PYTHONPATH=src python examples/elastic_bfs.py [--workloads LIVJ/8P ...]
+"""
+
+import argparse
+
+from repro.core import BillingModel, evaluate, default_placement, lap_placement, ffd_placement
+from repro.core.elastic import ElasticBSPExecutor
+from repro.core.metagraph import predict_time_function
+from repro.data import paper_workloads
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workloads", nargs="*", default=["LIVJ/8P", "USRN/8P"])
+    ap.add_argument("--strategy", default="lap", choices=["ffd", "lap"])
+    args = ap.parse_args()
+
+    strat = {"ffd": ffd_placement, "lap": lap_placement}[args.strategy]
+    model = BillingModel(delta=60.0)
+
+    for wl in paper_workloads(tuple(args.workloads)):
+        print(f"\n=== {wl.name} " + "=" * 50)
+        # 1. a-priori plan from the metagraph (scaled to the same calibration)
+        pred_tf, sched = predict_time_function(wl.pg, wl.source)
+        pred_tf = pred_tf.scaled_to_tmin(wl.tf.t_min())
+        plan = strat(pred_tf)
+        print(
+            f"planned {plan.n_vms} VMs over {pred_tf.n_supersteps} predicted "
+            f"supersteps from {wl.pg.n_subgraphs} metagraph vertices"
+        )
+
+        # 2. execute under the plan with dynamic re-planning enabled
+        from repro.core.timing import TimeFunction
+
+        tau_scale = wl.tf.t_min() / max(
+            1e-12, TimeFunction.from_trace(wl.trace).t_min()
+        )
+        ex = ElasticBSPExecutor(wl.pg, tau_scale=tau_scale, billing=model)
+        rep = ex.run(wl.source, plan, strategy_fn=strat, replan=True)
+        print(
+            f"executed {rep.n_supersteps} supersteps "
+            f"({rep.replans} replans, {rep.n_migrations} migrations, "
+            f"wall {rep.wall_seconds:.1f}s on this host)"
+        )
+        print(
+            f"actual billing: {rep.cost.cost_quanta} core-min, makespan "
+            f"{rep.cost.makespan:.1f}s = {rep.cost.makespan_over_tmin:.2f}x T_Min"
+        )
+
+        # 3. compare against default and the trace-oracle plan
+        r_def = evaluate(default_placement(wl.tf), model)
+        r_oracle = evaluate(strat(wl.tf), model)
+        save = 1 - rep.cost.cost_quanta / r_def.cost_quanta
+        print(
+            f"default: {r_def.cost_quanta} core-min | trace-oracle "
+            f"{args.strategy}: {r_oracle.cost_quanta} core-min | "
+            f"metagraph-planned: {rep.cost.cost_quanta} core-min "
+            f"({save:.0%} saved vs default)"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Elastic LM serving via the paper's placement layer (arch-applicability
+demo, DESIGN s4): the same TimeFunction -> placement -> billing machinery
+schedules model *replicas* against a non-stationary request load.
+
+"Partitions" are serving shards (KV-cache groups), "supersteps" are
+scheduling windows, and tau_i^s is the predicted busy-time of shard i in
+window s from a diurnal load model.  Strategies then trade makespan (p99
+latency headroom) against core-minutes exactly as for graph partitions.
+
+  PYTHONPATH=src python examples/elastic_serving.py
+"""
+
+import numpy as np
+
+from repro.core import BillingModel, TimeFunction, evaluate, STRATEGIES
+
+
+def diurnal_load(n_windows: int = 48, n_shards: int = 16, seed: int = 0):
+    """Predicted busy seconds per (window, shard): sinusoidal diurnal traffic
+    with bursty noise, consistent-hashed across shards."""
+    rng = np.random.default_rng(seed)
+    t = np.arange(n_windows)
+    base = 30.0 * (1.0 + 0.9 * np.sin(2 * np.pi * t / n_windows - np.pi / 2))
+    shard_weight = rng.dirichlet(np.full(n_shards, 8.0))
+    tau = base[:, None] * shard_weight[None, :] * n_shards
+    tau *= rng.lognormal(0.0, 0.25, tau.shape)
+    tau[tau < 1.0] = 0.0  # idle shards in low-traffic windows
+    return TimeFunction(tau)
+
+
+def main():
+    tf = diurnal_load()
+    model = BillingModel(delta=60.0)
+    print(
+        f"serving load: {tf.n_supersteps} windows x {tf.n_parts} shards, "
+        f"{(tf.tau > 0).mean():.0%} shard-windows active"
+    )
+    print(f"{'strategy':10s} {'windows-over-SLO':>17s} {'cost':>5s} {'peak replicas':>14s}")
+    base = None
+    for name, strat in STRATEGIES.items():
+        r = evaluate(strat(tf), model)
+        over = r.makespan / r.t_min - 1
+        base = base or r.cost_quanta
+        print(
+            f"{name:10s} {over:16.1%} {r.cost_quanta:5d} {r.peak_vms:14d}"
+        )
+    print(
+        "\nelastic replica scheduling rides the diurnal curve; pinned"
+        " strategies avoid KV-cache migration (the serving analogue of the"
+        " paper's data-movement cost)."
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+from repro.ckpt.checkpoint import (
+    Checkpointer,
+    ckpt_path,
+    latest_step,
+    restore_pytree,
+    save_pytree,
+)
+
+__all__ = ["Checkpointer", "ckpt_path", "latest_step", "restore_pytree", "save_pytree"]

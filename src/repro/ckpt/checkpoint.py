@@ -1,0 +1,142 @@
+"""Checkpointing: zstd-compressed msgpack of a flattened pytree.
+
+Fault-tolerance properties:
+  * atomic: write to ``.tmp`` then rename -- a crash mid-save never corrupts
+    the latest checkpoint
+  * self-describing: stores dtype/shape per leaf + the flattened key paths,
+    so restore validates structure against the target pytree
+  * async: ``Checkpointer.save_async`` snapshots to host memory synchronously
+    (cheap) and writes the file on a background thread, overlapping I/O with
+    the next training step
+  * resharding restore: arrays are ``device_put`` against the *target*
+    sharding, so a checkpoint taken on one mesh restores onto another
+    (elastic rescale / failover onto fewer or more hosts)
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import threading
+
+import jax
+import msgpack
+import numpy as np
+import zstandard
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat: dict[str, np.ndarray] = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(p.key) if hasattr(p, "key") else str(getattr(p, "idx", p))
+            for p in path
+        )
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_pytree(path: str, tree, *, step: int | None = None) -> None:
+    flat = _flatten(tree)
+    payload = {
+        "__meta__": {"step": step, "n_leaves": len(flat)},
+    }
+    for k, v in flat.items():
+        payload[k] = {
+            "dtype": str(v.dtype),
+            "shape": list(v.shape),
+            "data": v.tobytes(),
+        }
+    raw = msgpack.packb(payload, use_bin_type=True)
+    blob = zstandard.ZstdCompressor(level=3).compress(raw)
+    tmp = path + ".tmp"
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(tmp, "wb") as f:
+        f.write(blob)
+    os.replace(tmp, path)  # atomic
+
+
+def restore_pytree(path: str, target_tree, *, shardings=None):
+    """Restore into the structure of ``target_tree`` (arrays or SDS).  When
+    ``shardings`` (matching pytree) is given, leaves are device_put onto it."""
+    with open(path, "rb") as f:
+        raw = zstandard.ZstdDecompressor().decompress(f.read())
+    payload = msgpack.unpackb(raw, raw=False)
+    payload.pop("__meta__", None)
+
+    leaves_with_path = jax.tree_util.tree_flatten_with_path(target_tree)[0]
+    flat_shard = None
+    if shardings is not None:
+        flat_shard = [s for _, s in jax.tree_util.tree_flatten_with_path(shardings)[0]]
+    out = []
+    for i, (path_keys, leaf) in enumerate(leaves_with_path):
+        key = "/".join(
+            str(p.key) if hasattr(p, "key") else str(getattr(p, "idx", p))
+            for p in path_keys
+        )
+        if key not in payload:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        rec = payload[key]
+        arr = np.frombuffer(rec["data"], dtype=rec["dtype"]).reshape(rec["shape"])
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch for {key}: {arr.shape} vs {leaf.shape}")
+        if flat_shard is not None:
+            out.append(jax.device_put(arr, flat_shard[i]))
+        else:
+            out.append(jax.device_put(arr))
+    treedef = jax.tree_util.tree_structure(target_tree)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def ckpt_path(directory: str, step: int) -> str:
+    return os.path.join(directory, f"step_{step:08d}.ckpt")
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    steps = [
+        int(m.group(1))
+        for f in os.listdir(directory)
+        if (m := re.match(r"step_(\d+)\.ckpt$", f))
+    ]
+    return max(steps) if steps else None
+
+
+class Checkpointer:
+    """Async checkpointer with retention."""
+
+    def __init__(self, directory: str, *, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+
+    def save_async(self, tree, step: int) -> None:
+        self.wait()
+        host_tree = jax.tree.map(np.asarray, tree)  # snapshot now
+
+        def work():
+            save_pytree(ckpt_path(self.directory, step), host_tree, step=step)
+            self._gc()
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self) -> None:
+        if not os.path.isdir(self.directory):
+            return
+        steps = sorted(
+            int(m.group(1))
+            for f in os.listdir(self.directory)
+            if (m := re.match(r"step_(\d+)\.ckpt$", f))
+        )
+        for s in steps[: -self.keep]:
+            try:
+                os.remove(ckpt_path(self.directory, s))
+            except OSError:
+                pass

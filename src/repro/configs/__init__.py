@@ -1,0 +1,29 @@
+"""Architecture configs: one module per assigned architecture + the paper's
+own graph workloads.  ``registry.ARCHS`` maps arch id -> ArchSpec."""
+
+from repro.configs.base import (
+    ArchSpec,
+    GNNConfig,
+    GraphShape,
+    LMConfig,
+    LMShape,
+    MLAConfig,
+    MoEConfig,
+    RecsysConfig,
+    RecsysShape,
+)
+from repro.configs.registry import ARCHS, get_arch
+
+__all__ = [
+    "ArchSpec",
+    "GNNConfig",
+    "GraphShape",
+    "LMConfig",
+    "LMShape",
+    "MLAConfig",
+    "MoEConfig",
+    "RecsysConfig",
+    "RecsysShape",
+    "ARCHS",
+    "get_arch",
+]

@@ -1,0 +1,39 @@
+"""The paper's contribution: elastic partition placement for BSP graph jobs.
+
+  timing      -- the time function A : P_i x s -> tau_i^s (trace- or model-derived)
+  metagraph   -- coarse sketch + a-priori activation/time prediction
+  placement   -- Default / OPT / FFD / MF-P / LA-P placement strategies
+  activation  -- VM keep-vs-terminate policy across idle gaps
+  billing     -- makespan / core-min cost / core-secs / under-utilization
+  elastic     -- executor mapping placement schedules onto jax devices
+"""
+
+from repro.core.timing import TimeFunction
+from repro.core.metagraph import Metagraph, build_metagraph, predict_time_function
+from repro.core.placement import (
+    Placement,
+    default_placement,
+    ffd_placement,
+    opt_placement,
+    mfp_placement,
+    lap_placement,
+    STRATEGIES,
+)
+from repro.core.billing import BillingModel, CostReport, evaluate
+
+__all__ = [
+    "TimeFunction",
+    "Metagraph",
+    "build_metagraph",
+    "predict_time_function",
+    "Placement",
+    "default_placement",
+    "ffd_placement",
+    "opt_placement",
+    "mfp_placement",
+    "lap_placement",
+    "STRATEGIES",
+    "BillingModel",
+    "CostReport",
+    "evaluate",
+]

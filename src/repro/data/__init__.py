@@ -1,0 +1,5 @@
+"""Deterministic synthetic data pipelines (graphs, tokens, recsys batches)."""
+
+from repro.data.workloads import paper_workloads, PaperWorkload
+
+__all__ = ["paper_workloads", "PaperWorkload"]

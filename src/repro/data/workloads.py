@@ -1,0 +1,120 @@
+"""The paper's three evaluation workloads as synthetic analogues (Table 1).
+
+Offline we cannot download SNAP/DIMACS, so each dataset is replaced by a
+generator matched on the structural properties that drive the elasticity
+results, and the measured trace is rescaled to the paper's absolute time and
+byte scale (the placement/billing math is scale-free, the delta = 60 s quantum
+is not):
+
+  LIVJ/8P  -- LiveJournal:  power-law, diameter 16      -> R-MAT
+  USRN/8P  -- USA roads:    degree <= 4, diameter 6262  -> perturbed lattice
+  ORKT/40P -- Orkut:        denser power-law, diam 9    -> denser R-MAT
+
+``target_tmin`` pins T_Min to the paper's reported default makespan
+(21 s / 33 s for LIVJ / ORKT; USRN unreported, we use 90 s which matches its
+relative size).  ``byte_scale`` rescales partition bytes to the original
+|V|/|E| so OPT-DM's data-movement cost is on the paper's scale
+(~100 MB per ORKT partition).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+
+import numpy as np
+
+from repro.core.timing import TimeFunction
+from repro.graph.bsp import BSPTrace, run_sssp
+from repro.graph.generators import rmat_graph, road_grid_graph, weighted
+from repro.graph.partition import bfs_grow_partition
+from repro.graph.structs import PartitionedGraph
+
+_BYTES_PER_VERTEX = 16
+_BYTES_PER_EDGE = 8
+
+
+@dataclasses.dataclass
+class PaperWorkload:
+    name: str
+    pg: PartitionedGraph
+    source: int
+    trace: BSPTrace
+    tf: TimeFunction  # scaled to the paper's time scale
+    partition_bytes: np.ndarray  # scaled to the paper's graph size
+
+    @property
+    def n_parts(self) -> int:
+        return self.pg.n_parts
+
+
+_CACHE_VERSION = 2  # bump when _SPECS change to invalidate cached traces
+
+_SPECS = {
+    # name: (generator, n_parts, source, target_tmin_s, paper_V, paper_E)
+    "LIVJ/8P": (lambda: rmat_graph(16, 12, seed=42), 8, 0, 21.0, 4.847e6, 68.993e6),
+    "USRN/8P": (lambda: road_grid_graph(160, 160, seed=7), 8, 0, 90.0, 23.947e6, 58.333e6),
+    # ORKT runs the weighted-SSSP variant: the real Orkut's hop-9 diameter
+    # spreads activation over more supersteps than a same-density synthetic
+    # R-MAT can at this scale; edge weights restore that spread.
+    "ORKT/40P": (lambda: weighted(rmat_graph(15, 40, seed=13)), 40, 0, 33.0, 3.072e6, 234.370e6),
+}
+
+
+def paper_workloads(
+    names: tuple[str, ...] = ("LIVJ/8P", "USRN/8P", "ORKT/40P"),
+    *,
+    cache_dir: str | None = "artifacts/paper_cache",
+) -> list[PaperWorkload]:
+    out = []
+    for name in names:
+        gen, k, src, tmin, pv, pe = _SPECS[name]
+        cache = None
+        if cache_dir:
+            os.makedirs(cache_dir, exist_ok=True)
+            cache = os.path.join(
+                cache_dir, f"{name.replace('/', '_')}_v{_CACHE_VERSION}.npz"
+            )
+        if cache and os.path.exists(cache):
+            z = np.load(cache, allow_pickle=True)
+            g = gen()
+            pg = PartitionedGraph(g, k, z["part"])
+            trace = BSPTrace(
+                active=z["active"],
+                edges_examined=z["edges"],
+                verts_processed=z["verts"],
+                msgs_sent=z["msgs"],
+                inner_iters=z["iters"],
+                active_subgraphs=list(z["sg"]) if "sg" in z else [],
+            )
+        else:
+            g = gen()
+            pg = bfs_grow_partition(g, k, seed=1)
+            _, trace = run_sssp(pg, src)
+            if cache:
+                np.savez_compressed(
+                    cache,
+                    part=pg.part_of_vertex,
+                    active=trace.active,
+                    edges=trace.edges_examined,
+                    verts=trace.verts_processed,
+                    msgs=trace.msgs_sent,
+                    iters=trace.inner_iters,
+                    sg=np.asarray(trace.active_subgraphs, dtype=object),
+                )
+        tf = TimeFunction.from_trace(trace).scaled_to_tmin(tmin)
+        scale = (pv * _BYTES_PER_VERTEX + pe * _BYTES_PER_EDGE) / (
+            g.n_vertices * _BYTES_PER_VERTEX + g.n_edges * _BYTES_PER_EDGE
+        )
+        pbytes = pg.partition_bytes(_BYTES_PER_VERTEX, _BYTES_PER_EDGE) * scale
+        out.append(
+            PaperWorkload(
+                name=name,
+                pg=pg,
+                source=src,
+                trace=trace,
+                tf=tf,
+                partition_bytes=pbytes,
+            )
+        )
+    return out

@@ -1,0 +1,24 @@
+"""Graph substrate: the GoFFish-analogue subgraph-centric engine.
+
+Layers:
+  structs     -- PartitionedGraph container, WCC subgraph labeling, CSR views
+  generators  -- synthetic graphs matched to the paper's dataset families
+  partition   -- hash + BFS-grow (METIS-like) partitioners
+  traversal   -- pure-JAX frontier BFS/SSSP relaxation
+  bsp         -- subgraph-centric BSP superstep driver with work tracing
+  sampler     -- fanout neighbor sampler for minibatch GNN training
+"""
+
+from repro.graph.structs import Graph, PartitionedGraph
+from repro.graph.generators import rmat_graph, road_grid_graph, erdos_renyi_graph
+from repro.graph.partition import hash_partition, bfs_grow_partition
+
+__all__ = [
+    "Graph",
+    "PartitionedGraph",
+    "rmat_graph",
+    "road_grid_graph",
+    "erdos_renyi_graph",
+    "hash_partition",
+    "bfs_grow_partition",
+]

@@ -1,0 +1,121 @@
+"""BSP driver: runs the subgraph-centric traversal to global convergence and
+collects the execution trace that instantiates the paper's time function A.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graph.structs import PartitionedGraph
+from repro.graph.traversal import make_superstep_fn
+
+
+@dataclasses.dataclass
+class BSPTrace:
+    """Per-(superstep, partition) work counters from a BSP execution.
+
+    ``active[s, p]`` is True when partition p had frontier vertices at the
+    start of superstep s (its subgraphs' compute() ran).  ``edges``/``verts``
+    are the work counters used to derive tau via the calibrated cost model.
+    """
+
+    active: np.ndarray  # [m, P] bool
+    edges_examined: np.ndarray  # [m, P] int64
+    verts_processed: np.ndarray  # [m, P] int64
+    msgs_sent: np.ndarray  # [m, P] int64
+    inner_iters: np.ndarray  # [m] int64
+    active_subgraphs: list[np.ndarray]  # per superstep: global subgraph ids
+
+    @property
+    def n_supersteps(self) -> int:
+        return self.active.shape[0]
+
+    @property
+    def n_parts(self) -> int:
+        return self.active.shape[1]
+
+    def mean_active_fraction(self) -> float:
+        """The paper's Fig 2 utilization proxy: mean fraction of partitions
+        active per superstep."""
+        return float(self.active.mean())
+
+
+def run_sssp(
+    pg: PartitionedGraph,
+    source: int,
+    *,
+    max_supersteps: int = 4096,
+    collect_subgraphs: bool = True,
+) -> tuple[np.ndarray, BSPTrace]:
+    """Run subgraph-centric BFS/SSSP from ``source``; return distances + trace.
+
+    BFS is the ``weights=None`` special case (unit weights).
+    """
+    superstep = make_superstep_fn(pg)
+    n = pg.graph.n_vertices
+    dist = jnp.full((n,), jnp.inf, dtype=jnp.float32)
+    dist = dist.at[source].set(0.0)
+    frontier = jnp.zeros((n,), dtype=bool).at[source].set(True)
+
+    sg_of_v = pg.subgraph_of_vertex
+    rows_active, rows_e, rows_v, rows_m, iters, sg_sets = [], [], [], [], [], []
+
+    for _ in range(max_supersteps):
+        fr_np = np.asarray(frontier)
+        if not fr_np.any():
+            break
+        active_parts = np.zeros(pg.n_parts, dtype=bool)
+        active_parts[np.unique(pg.part_of_vertex[fr_np])] = True
+        if collect_subgraphs:
+            sg_sets.append(np.unique(sg_of_v[fr_np]))
+        res = superstep(dist, frontier)
+        dist, frontier = res.dist, res.next_frontier
+        rows_active.append(active_parts)
+        rows_e.append(np.asarray(res.edges_examined, dtype=np.int64))
+        rows_v.append(np.asarray(res.verts_processed, dtype=np.int64))
+        rows_m.append(np.asarray(res.msgs_sent, dtype=np.int64))
+        iters.append(int(res.inner_iters))
+    else:
+        raise RuntimeError(f"BSP did not converge within {max_supersteps} supersteps")
+
+    trace = BSPTrace(
+        active=np.stack(rows_active),
+        edges_examined=np.stack(rows_e),
+        verts_processed=np.stack(rows_v),
+        msgs_sent=np.stack(rows_m),
+        inner_iters=np.asarray(iters, dtype=np.int64),
+        active_subgraphs=sg_sets,
+    )
+    return np.asarray(dist), trace
+
+
+def concat_traces(traces: list[BSPTrace]) -> BSPTrace:
+    """Concatenate supersteps of consecutive traversals into one job trace."""
+    return BSPTrace(
+        active=np.concatenate([t.active for t in traces]),
+        edges_examined=np.concatenate([t.edges_examined for t in traces]),
+        verts_processed=np.concatenate([t.verts_processed for t in traces]),
+        msgs_sent=np.concatenate([t.msgs_sent for t in traces]),
+        inner_iters=np.concatenate([t.inner_iters for t in traces]),
+        active_subgraphs=[s for t in traces for s in t.active_subgraphs],
+    )
+
+
+def run_bc_forward(
+    pg: PartitionedGraph,
+    sources: list[int],
+    *,
+    max_supersteps: int = 4096,
+) -> BSPTrace:
+    """Betweenness-centrality forward phase (paper s7 future work): one BFS
+    sweep per source, executed as consecutive waves.  The per-wave rise and
+    fall of the active set is the 'sinusoidal' activation of the paper's
+    ref [15] that elastic placement exploits between waves."""
+    traces = []
+    for s in sources:
+        _, t = run_sssp(pg, s, max_supersteps=max_supersteps, collect_subgraphs=False)
+        traces.append(t)
+    return concat_traces(traces)

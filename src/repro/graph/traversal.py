@@ -1,0 +1,102 @@
+"""Pure-JAX subgraph-centric BFS/SSSP superstep engine.
+
+Semantics follow GoFFish (paper s3.1): within a BSP superstep, every *active*
+subgraph runs its local traversal to closure over **local** edges (a
+``jax.lax.while_loop`` of frontier-masked edge relaxations); at the superstep
+boundary, remote edges deliver distance messages, and vertices improved by a
+remote message form the next superstep's frontier (their subgraphs become
+active).  The engine also accumulates the per-partition *work counters*
+(vertices processed, edges examined) that instantiate the paper's time
+function A.
+
+Everything that executes per superstep is a single jitted function; shapes are
+static per graph so it compiles once.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graph.structs import PartitionedGraph
+
+
+class SuperstepResult(NamedTuple):
+    dist: jax.Array  # [n] float32, updated distances
+    next_frontier: jax.Array  # [n] bool, vertices improved by remote messages
+    edges_examined: jax.Array  # [P] int32, local edges scanned this superstep
+    verts_processed: jax.Array  # [P] int32, frontier vertices processed
+    msgs_sent: jax.Array  # [P] int32, remote messages emitted per src partition
+    inner_iters: jax.Array  # [] int32, local-closure iterations
+
+
+def make_superstep_fn(pg: PartitionedGraph) -> Callable[[jax.Array, jax.Array], SuperstepResult]:
+    """Build the jitted one-superstep function for a fixed partitioned graph."""
+    g = pg.graph
+    src = jnp.asarray(g.src)
+    dst = jnp.asarray(g.dst)
+    w = jnp.asarray(g.edge_weights)
+    is_local = jnp.asarray(pg.is_local_edge)
+    e_part = jnp.asarray(pg.edge_src_part.astype(np.int32))
+    v_part = jnp.asarray(pg.part_of_vertex.astype(np.int32))
+    n = g.n_vertices
+    n_parts = pg.n_parts
+
+    @jax.jit
+    def superstep(dist: jax.Array, frontier: jax.Array) -> SuperstepResult:
+        we0 = jnp.zeros(n_parts, jnp.int32)
+        wv0 = jnp.zeros(n_parts, jnp.int32)
+
+        def cond(carry):
+            _, fr, _, _, _, _ = carry
+            return fr.any()
+
+        def body(carry):
+            d, fr, we, wv, touched, it = carry
+            active_e = fr[src] & is_local
+            cand = jnp.where(active_e, d[src] + w, jnp.inf)
+            relaxed = jax.ops.segment_min(cand, dst, num_segments=n)
+            new_d = jnp.minimum(d, relaxed)
+            improved = new_d < d
+            we = we + jax.ops.segment_sum(
+                active_e.astype(jnp.int32), e_part, num_segments=n_parts
+            )
+            wv = wv + jax.ops.segment_sum(
+                fr.astype(jnp.int32), v_part, num_segments=n_parts
+            )
+            return new_d, improved, we, wv, touched | improved, it + 1
+
+        init = (dist, frontier, we0, wv0, frontier, jnp.int32(0))
+        dist2, _, we, wv, touched, iters = jax.lax.while_loop(cond, body, init)
+
+        # -- remote exchange at the superstep boundary ------------------------
+        active_e = touched[src] & ~is_local
+        cand = jnp.where(active_e, dist2[src] + w, jnp.inf)
+        relaxed = jax.ops.segment_min(cand, dst, num_segments=n)
+        new_dist = jnp.minimum(dist2, relaxed)
+        next_frontier = new_dist < dist2
+        msgs = jax.ops.segment_sum(
+            active_e.astype(jnp.int32), e_part, num_segments=n_parts
+        )
+        return SuperstepResult(new_dist, next_frontier, we, wv, msgs, iters)
+
+    return superstep
+
+
+def reference_sssp(pg: PartitionedGraph, source: int) -> np.ndarray:
+    """Host-side Bellman-Ford oracle for tests (O(V*E) worst case, vectorized)."""
+    g = pg.graph
+    dist = np.full(g.n_vertices, np.inf, dtype=np.float64)
+    dist[source] = 0.0
+    w = g.edge_weights.astype(np.float64)
+    for _ in range(g.n_vertices):
+        cand = dist[g.src] + w
+        new = dist.copy()
+        np.minimum.at(new, g.dst, cand)
+        if np.array_equal(new, dist):
+            break
+        dist = new
+    return dist

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the compute hot spots.
+
+  flash_attention -- fused streaming-softmax causal/GQA attention (LM prefill)
+  segment_sum     -- sorted-edge blocked one-hot SpMM aggregation (GNN/recsys)
+  bfs_relax       -- min-plus frontier relaxation (the paper's local BFS)
+
+Each package ships kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+wrapper with padding/block selection) and ref.py (pure-jnp oracle).  On this
+CPU container kernels are validated with interpret=True; BlockSpecs target
+TPU VMEM tiling (MXU-aligned 128-lane blocks).
+"""

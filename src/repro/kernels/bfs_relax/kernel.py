@@ -1,0 +1,77 @@
+"""Min-plus frontier relaxation Pallas TPU kernel -- the paper's per-superstep
+local-BFS hot spot (GoFFish compute() = repeated edge relaxations).
+
+Same TPU adaptation as segment_sum: candidate distances (dist[src] + w,
+masked by the frontier -- the gather runs outside the kernel where XLA
+schedules it) arrive sorted by destination; each (row-block x edge-block)
+cell selects matching candidates into a dense [bE, bN] matrix and takes a
+columnwise min, skipping off-band cells.  The output tile initializes from
+the current distances, so the kernel computes
+``new_dist = min(dist, segment_min(cand, dst))`` in one pass.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INF = float("inf")  # python scalar: jnp constants would be captured tracers
+
+
+def _kernel(
+    dst_ref,  # (1, bE) int32 sorted, padded with n
+    cand_ref,  # (1, bE) f32 candidate dist (inf where inactive)
+    dist_ref,  # (1, bN) f32 current distances for this row block
+    o_ref,  # (1, bN) f32, persists across edge blocks
+    *,
+    block_n: int,
+    block_e: int,
+):
+    oi = pl.program_id(0)
+    ki = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        o_ref[...] = dist_ref[...]
+
+    dst = dst_ref[0, :]
+    row_start = oi * block_n
+    intersects = (dst[block_e - 1] >= row_start) & (dst[0] < row_start + block_n)
+
+    @pl.when(intersects)
+    def _relax():
+        rows = row_start + jax.lax.broadcasted_iota(jnp.int32, (block_e, block_n), 1)
+        hit = dst[:, None] == rows
+        m = jnp.where(hit, cand_ref[0, :][:, None], INF)
+        o_ref[0, :] = jnp.minimum(o_ref[0, :], m.min(axis=0))
+
+
+def bfs_relax_kernel(
+    dst_sorted: jax.Array,  # [E] int32 sorted by destination
+    cand: jax.Array,  # [E] f32 candidates aligned with dst_sorted
+    dist: jax.Array,  # [N] f32
+    *,
+    block_n: int = 512,
+    block_e: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    (e,) = cand.shape
+    (n,) = dist.shape
+    assert e % block_e == 0 and n % block_n == 0
+    grid = (n // block_n, e // block_e)
+    kern = functools.partial(_kernel, block_n=block_n, block_e=block_e)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_e), lambda oi, ki: (0, ki)),
+            pl.BlockSpec((1, block_e), lambda oi, ki: (0, ki)),
+            pl.BlockSpec((1, block_n), lambda oi, ki: (0, oi)),
+        ],
+        out_specs=pl.BlockSpec((1, block_n), lambda oi, ki: (0, oi)),
+        out_shape=jax.ShapeDtypeStruct((1, n), jnp.float32),
+        interpret=interpret,
+    )(dst_sorted.reshape(1, e), cand.reshape(1, e), dist.reshape(1, n))[0]

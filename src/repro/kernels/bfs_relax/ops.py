@@ -1,0 +1,45 @@
+"""jit'd wrapper: computes candidates (XLA gather), sorts by destination,
+pads to block multiples, runs the relaxation kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.bfs_relax.kernel import bfs_relax_kernel
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_n", "block_e", "interpret", "presorted")
+)
+def bfs_relax(
+    dist: jax.Array,  # [N] f32
+    frontier: jax.Array,  # [N] bool
+    src: jax.Array,  # [E] int32
+    dst: jax.Array,  # [E] int32
+    w: jax.Array,  # [E] f32
+    *,
+    block_n: int = 512,
+    block_e: int = 512,
+    interpret: bool = False,
+    presorted: bool = False,  # dst already ascending (static edge order)
+) -> jax.Array:
+    (n,) = dist.shape
+    (e,) = src.shape
+    cand = jnp.where(frontier[src], dist[src] + w, jnp.inf)
+    if not presorted:
+        order = jnp.argsort(dst)
+        dst, cand = dst[order], cand[order]
+    block_e = min(block_e, max(8, e))
+    block_n = min(block_n, max(8, n))
+    e_pad = (e + block_e - 1) // block_e * block_e
+    n_pad = (n + block_n - 1) // block_n * block_n
+    dst = jnp.pad(dst, (0, e_pad - e), constant_values=n_pad)
+    cand = jnp.pad(cand, (0, e_pad - e), constant_values=jnp.inf)
+    dist_p = jnp.pad(dist, (0, n_pad - n), constant_values=jnp.inf)
+    out = bfs_relax_kernel(
+        dst, cand, dist_p, block_n=block_n, block_e=block_e, interpret=interpret
+    )
+    return out[:n]

@@ -1,0 +1,10 @@
+"""Pure-jnp oracle: one masked min-plus relaxation."""
+
+import jax
+import jax.numpy as jnp
+
+
+def reference_bfs_relax(dist, frontier, src, dst, w):
+    cand = jnp.where(frontier[src], dist[src] + w, jnp.inf)
+    relaxed = jax.ops.segment_min(cand, dst, num_segments=dist.shape[0])
+    return jnp.minimum(dist, relaxed)

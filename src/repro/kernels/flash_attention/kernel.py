@@ -1,0 +1,137 @@
+"""Flash attention Pallas TPU kernel (causal / sliding-window / GQA).
+
+Grid (B, H, n_q, n_k), innermost k-block axis iterated sequentially per core;
+the running (m, l, acc) streaming-softmax state lives in VMEM scratch and
+persists across k steps (the canonical TPU flash dataflow).  Blocks are
+(block_q x d_head) / (block_k x d_head) VMEM tiles; d_head pads to the
+128-wide lane dimension and scores hit the MXU as [bq, d] x [d, bk].
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _kernel(
+    q_ref, k_ref, v_ref,  # blocks: (1, bq, 1, d), (1, bk, 1, d), (1, bk, 1, d)
+    o_ref,  # (1, bq, 1, d)
+    m_scr, l_scr, acc_scr,  # VMEM scratch: [bq, 128], [bq, 128], [bq, d]
+    *,
+    scale: float,
+    block_q: int,
+    block_k: int,
+    n_k: int,
+    causal: bool,
+    window: int | None,
+):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+
+    # causal: skip k blocks entirely above the diagonal; sliding window: skip
+    # blocks entirely below it
+    run = jnp.bool_(True)
+    if causal:
+        run = run & (k_start <= q_start + block_q - 1)
+    if window is not None:
+        run = run & (k_start + block_k - 1 > q_start - window)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # [bq, bk]
+
+        rows = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        cols = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        mask = jnp.ones_like(s, dtype=jnp.bool_)
+        if causal:
+            mask &= cols <= rows
+        if window is not None:
+            mask &= cols > rows - window
+        s = jnp.where(mask, s, NEG)
+
+        m_prev = m_scr[:, 0]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None]) * mask  # masked-row-safe
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[:, 0] = l_scr[:, 0] * corr + p.sum(axis=1)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_scr[:, 0] = m_new
+
+    @pl.when(ki == n_k - 1)
+    def _flush():
+        l = l_scr[:, 0]
+        o_ref[0, :, 0, :] = (
+            acc_scr[...] / jnp.maximum(l, 1e-30)[:, None]
+        ).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(
+    q: jax.Array,  # [B, S, H, d]
+    k: jax.Array,  # [B, S, Hk, d]
+    v: jax.Array,  # [B, S, Hk, d]
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+    scale: float | None = None,
+) -> jax.Array:
+    b, s, h, d = q.shape
+    hk = k.shape[2]
+    g = h // hk
+    assert s % block_q == 0 and s % block_k == 0, (s, block_q, block_k)
+    n_q, n_k = s // block_q, s // block_k
+    if scale is None:  # caller passes the unpadded head dim's scale
+        scale = 1.0 / (d**0.5)
+
+    grid = (b, h, n_q, n_k)
+    kern = functools.partial(
+        _kernel,
+        scale=scale,
+        block_q=block_q,
+        block_k=block_k,
+        n_k=n_k,
+        causal=causal,
+        window=window,
+    )
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, d), lambda b_, h_, qi, ki: (b_, qi, h_, 0)),
+            pl.BlockSpec((1, block_k, 1, d), lambda b_, h_, qi, ki: (b_, ki, h_ // g, 0)),
+            pl.BlockSpec((1, block_k, 1, d), lambda b_, h_, qi, ki: (b_, ki, h_ // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, 1, d), lambda b_, h_, qi, ki: (b_, qi, h_, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, s, h, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 128), jnp.float32),
+            pltpu.VMEM((block_q, 128), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

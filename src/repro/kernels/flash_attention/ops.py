@@ -1,0 +1,50 @@
+"""jit'd wrapper: pads sequence to block multiples, picks MXU-aligned blocks."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_kernel
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "block_q", "block_k", "interpret")
+)
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """[B, S, H, d] x [B, S, Hk, d]^2 -> [B, S, H, d]; pads S and d."""
+    b, s, h, d = q.shape
+    block_q = min(block_q, max(8, s))
+    block_k = min(block_k, max(8, s))
+    s_pad = (s + block_q - 1) // block_q * block_q
+    s_pad = (s_pad + block_k - 1) // block_k * block_k
+    d_pad = max(d, 128) if d % 128 else d  # lane alignment on TPU
+
+    def pad(x, s_to, d_to):
+        return jnp.pad(x, ((0, 0), (0, s_to - x.shape[1]), (0, 0), (0, d_to - x.shape[3])))
+
+    qp, kp, vp = (pad(x, s_pad, d_pad) for x in (q, k, v))
+    # padded key rows are masked out by causality only when they trail the
+    # real rows; force padded keys inert by pushing them outside every window
+    out = flash_attention_kernel(
+        qp, kp, vp,
+        causal=causal,
+        window=window,
+        block_q=block_q,
+        block_k=block_k,
+        interpret=interpret,
+        scale=1.0 / (d**0.5),  # true head dim, not the lane-padded one
+    )
+    return out[:, :s, :, :d]

@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for flash attention (fp32 throughout)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import jax
+
+
+def reference_attention(
+    q: jnp.ndarray,  # [B, S, H, d]
+    k: jnp.ndarray,  # [B, S, Hk, d]
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+) -> jnp.ndarray:
+    b, s, h, d = q.shape
+    hk = k.shape[2]
+    g = h // hk
+    qf = q.astype(jnp.float32).reshape(b, s, hk, g, d)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qf, kf) / (d**0.5)
+    q_pos = jnp.arange(s)[:, None]
+    k_pos = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    scores = jnp.where(mask, scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, vf)
+    return out.reshape(b, s, h, d).astype(q.dtype)

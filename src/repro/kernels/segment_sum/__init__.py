@@ -1,0 +1,4 @@
+from repro.kernels.segment_sum.ops import sorted_segment_sum
+from repro.kernels.segment_sum.ref import reference_segment_sum
+
+__all__ = ["sorted_segment_sum", "reference_segment_sum"]

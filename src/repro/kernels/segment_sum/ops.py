@@ -1,0 +1,41 @@
+"""jit'd wrapper: sorts (optional), pads E/N/D to block multiples."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.segment_sum.kernel import sorted_segment_sum_kernel
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_segments", "assume_sorted", "block_n", "block_e", "interpret"),
+)
+def sorted_segment_sum(
+    ids: jax.Array,  # [E] int32
+    vals: jax.Array,  # [E, D]
+    n_segments: int,
+    *,
+    assume_sorted: bool = False,
+    block_n: int = 256,
+    block_e: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    e, d = vals.shape
+    if not assume_sorted:
+        order = jnp.argsort(ids)
+        ids, vals = ids[order], vals[order]
+    block_e = min(block_e, max(8, e))
+    block_n = min(block_n, max(8, n_segments))
+    e_pad = (e + block_e - 1) // block_e * block_e
+    n_pad = (n_segments + block_n - 1) // block_n * block_n
+    d_pad = (d + 127) // 128 * 128 if d % 128 else d
+    ids = jnp.pad(ids, (0, e_pad - e), constant_values=n_pad)  # pad -> no row
+    vals = jnp.pad(vals, ((0, e_pad - e), (0, d_pad - d)))
+    out = sorted_segment_sum_kernel(
+        ids, vals, n_pad, block_n=block_n, block_e=block_e, interpret=interpret
+    )
+    return out[:n_segments, :d]

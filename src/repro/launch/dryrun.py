@@ -1,0 +1,253 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+).strip()
+
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture x input shape) cell and both production meshes
+(single-pod 16x16 and multi-pod 2x16x16), lower + compile the step function
+on ShapeDtypeStructs (no allocation), then record:
+
+  * memory_analysis()     -- bytes/device: proves the sharding fits
+  * cost_analysis()       -- HLO FLOPs / bytes for the roofline
+  * collective bytes      -- parsed from the optimized (post-SPMD) HLO text,
+                             per-op wire-byte estimates for the roofline's
+                             collective term
+
+Results are written incrementally to artifacts/dryrun/<cell>.json so reruns
+resume.  Usage:
+
+  PYTHONPATH=src python -m repro.launch.dryrun                # everything
+  PYTHONPATH=src python -m repro.launch.dryrun --arch pna --shape molecule
+  PYTHONPATH=src python -m repro.launch.dryrun --mesh single  # one mesh only
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_bundle
+
+ART_DIR = "artifacts/dryrun"
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def parse_collectives(hlo: str) -> dict:
+    """Per-op wire-byte estimates (ring algorithms) from optimized HLO."""
+    per_op: dict[str, float] = {c: 0.0 for c in _COLLECTIVES}
+    counts: dict[str, int] = {c: 0 for c in _COLLECTIVES}
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(.+)", stripped)
+        if not m:
+            continue
+        body = m.group(1)
+        op = None
+        op_pos = None
+        for c in _COLLECTIVES:
+            mo = re.search(rf"\b{c}(-start)?\(", body)
+            if mo:
+                op = c
+                op_pos = mo.start()
+                break
+        if op is None:
+            continue
+        # result type segment (handles tuple-form collectives too)
+        shapes = _SHAPE_RE.findall(body[:op_pos])
+        size = 0.0
+        for dt, dims in shapes:
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            size += n * _DTYPE_BYTES[dt]
+        g = 1
+        mg = _GROUPS_RE.search(body)
+        if mg:
+            g = len(mg.group(1).split(","))
+        else:
+            mi = _GROUPS_IOTA_RE.search(body)
+            if mi:
+                g = int(mi.group(2))
+        if op == "collective-permute":
+            if "source_target_pairs={}" in body or "source_target_pairs" not in body:
+                continue
+            g = 2  # point-to-point: wire bytes = payload size
+        if g <= 1:
+            continue
+        ring = (g - 1) / g
+        wire = {
+            "all-reduce": 2 * size * ring,
+            "all-gather": size * ring,
+            "reduce-scatter": size * (g - 1),  # size = scattered result
+            "all-to-all": size * ring,
+            "collective-permute": size,
+        }[op]
+        per_op[op] += wire
+        counts[op] += 1
+    total = sum(per_op.values())
+    return {"wire_bytes_per_device": total, "by_op": per_op, "counts": counts}
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str) -> dict:
+    multi = mesh_kind == "multi"
+    mesh = make_production_mesh(multi_pod=multi)
+    bundle = build_bundle(arch, shape, mesh)
+    state_sh = jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        bundle.state_specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+    in_sh = jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        bundle.input_spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+    # outputs: new state keeps its sharding; metrics/outputs replicated
+    sample_out = jax.eval_shape(
+        bundle.step_fn, bundle.abstract_state, bundle.abstract_inputs
+    )
+    if isinstance(sample_out, tuple):
+        out_sh = (state_sh, jax.tree.map(lambda _: NamedSharding(mesh, P()), sample_out[1]))
+    else:
+        out_sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), sample_out)
+
+    t0 = time.perf_counter()
+    with mesh:
+        lowered = jax.jit(
+            bundle.step_fn,
+            in_shardings=(state_sh, in_sh),
+            out_shardings=out_sh,
+            donate_argnums=(0,) if bundle.donate_state else (),
+        ).lower(bundle.abstract_state, bundle.abstract_inputs)
+        t_lower = time.perf_counter() - t0
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    mem_info = {}
+    for attr in (
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "temp_size_in_bytes",
+        "generated_code_size_in_bytes",
+        "alias_size_in_bytes",
+    ):
+        if mem is not None and hasattr(mem, attr):
+            mem_info[attr] = int(getattr(mem, attr))
+    cost = compiled.cost_analysis() or {}
+    cost_info = {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes_accessed": float(cost.get("bytes accessed", cost.get("bytes_accessed", 0.0))),
+    }
+    hlo = compiled.as_text()
+    coll = parse_collectives(hlo)
+
+    n_dev = int(np.prod(mesh.devices.shape))
+    result = {
+        "arch": arch,
+        "shape": shape,
+        "mesh": mesh_kind,
+        "n_devices": n_dev,
+        "ok": True,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": mem_info,
+        "cost": cost_info,
+        "collectives": coll,
+        "hlo_bytes": len(hlo),
+    }
+    print(
+        f"[dryrun] {arch}:{shape} mesh={mesh_kind} OK "
+        f"compile={t_compile:.0f}s flops/dev={cost_info['flops']:.3g} "
+        f"temp/dev={mem_info.get('temp_size_in_bytes', 0)/2**30:.2f}GiB "
+        f"coll/dev={coll['wire_bytes_per_device']/2**30:.3f}GiB",
+        flush=True,
+    )
+    return result
+
+
+def cells(args):
+    for arch, spec in ARCHS.items():
+        if args.arch and arch != args.arch:
+            continue
+        for shape in tuple(spec.shape_names) + tuple(spec.skip_shapes):
+            if args.shape and shape != args.shape:
+                continue
+            if shape in spec.skip_shapes:
+                yield arch, shape, None, spec.skip_shapes[shape]
+                continue
+            for mesh_kind in ("single", "multi"):
+                if args.mesh and mesh_kind != args.mesh:
+                    continue
+                yield arch, shape, mesh_kind, None
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=["single", "multi"])
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(ART_DIR, exist_ok=True)
+    failures = []
+    for arch, shape, mesh_kind, skip_reason in cells(args):
+        if mesh_kind is None:
+            path = os.path.join(ART_DIR, f"{arch}__{shape}__skip.json")
+            with open(path, "w") as f:
+                json.dump(
+                    {"arch": arch, "shape": shape, "skipped": skip_reason}, f
+                )
+            print(f"[dryrun] {arch}:{shape} SKIP ({skip_reason})", flush=True)
+            continue
+        path = os.path.join(ART_DIR, f"{arch}__{shape}__{mesh_kind}.json")
+        if os.path.exists(path) and not args.force:
+            continue
+        try:
+            result = run_cell(arch, shape, mesh_kind)
+        except Exception as e:
+            traceback.print_exc()
+            result = {
+                "arch": arch, "shape": shape, "mesh": mesh_kind,
+                "ok": False, "error": str(e)[:2000],
+            }
+            failures.append((arch, shape, mesh_kind))
+        with open(path, "w") as f:
+            json.dump(result, f, indent=1)
+    if failures:
+        print(f"[dryrun] FAILURES: {failures}", flush=True)
+        raise SystemExit(1)
+    print("[dryrun] all requested cells done", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,527 @@
+"""Step bundles: per (architecture x input-shape), the jit-able step function
+plus abstract state/inputs and their PartitionSpecs.
+
+This is the single source of truth consumed by the multi-pod dry-run
+(lower + compile on ShapeDtypeStructs), the trainer, and the server.
+``train_*`` shapes lower a full train_step (fwd + bwd + AdamW update);
+``decode_*`` shapes lower serve_step (one token against a full KV cache);
+``prefill``/``serve`` shapes lower the forward pass.
+
+Dry-run shape padding: node/edge/candidate counts are padded up to multiples
+of 512 so every sharded axis divides the mesh (runtime pads identically).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs import ARCHS, ArchSpec
+from repro.configs.base import GraphShape, LMShape, RecsysShape
+from repro.configs.registry import reduced_config
+from repro.dist import sharding as shd
+from repro.models.gnn.dimenet import dimenet_forward, init_dimenet
+from repro.models.gnn.mace import init_mace, mace_forward
+from repro.models.gnn.meshgraphnet import init_mgn, mgn_forward
+from repro.models.gnn.pna import init_pna, pna_forward
+from repro.models.recsys.deepfm import deepfm_logits, deepfm_loss, init_deepfm, retrieval_scores
+from repro.models.transformer import (
+    init_lm_cache,
+    init_lm_params,
+    lm_decode_step,
+    lm_forward,
+    lm_loss,
+)
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+N_CLASSES = 64  # synthetic node-classification width
+
+
+@dataclasses.dataclass
+class StepBundle:
+    name: str
+    step_fn: Callable  # (state, batch) -> (state', metrics) or outputs
+    abstract_state: Any
+    state_specs: Any
+    abstract_inputs: dict
+    input_spec_tree: dict
+    init_state_fn: Callable[[jax.Array], Any]  # key -> concrete state
+    donate_state: bool = True
+    input_bounds: dict = dataclasses.field(default_factory=dict)  # int draws
+
+
+def _pad(n: int, m: int = 512) -> int:
+    return (n + m - 1) // m * m
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _fit_specs(specs, abstract, mesh: Mesh):
+    """Null out sharded axes that do not divide the mesh axis size."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def fix(spec, leaf):
+        if not isinstance(spec, P):
+            return spec
+        out = []
+        for dim, ax in enumerate(tuple(spec) + (None,) * (leaf.ndim - len(spec))):
+            if ax is None:
+                out.append(None)
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            total = int(np.prod([sizes[a] for a in axes]))
+            out.append(ax if leaf.shape[dim] % total == 0 else None)
+        return P(*out)
+
+    return jax.tree.map(
+        fix, specs, abstract, is_leaf=lambda x: isinstance(x, P)
+    )
+
+
+def _dp(mesh: Mesh):
+    return shd.dp_axes(mesh)
+
+
+# ---------------------------------------------------------------------------
+# LM bundles
+# ---------------------------------------------------------------------------
+
+
+def _lm_bundle(spec: ArchSpec, shape: LMShape, mesh: Mesh, *, reduced: bool):
+    cfg = reduced_config(spec) if reduced else spec.config
+    if reduced:
+        shape = LMShape(shape.name, seq_len=32, global_batch=4, kind=shape.kind)
+    # distributed-memory trick (s.Perf): bf16 Adam moments halve optimizer
+    # bytes/device -- the difference between fitting and not fitting the
+    # 671B config on 512 v5e chips
+    import os as _os
+
+    moment_dtype = (
+        jnp.bfloat16 if _os.environ.get("REPRO_BF16_MOMENTS") else jnp.float32
+    )
+    opt_cfg = AdamWConfig(moment_dtype=moment_dtype)
+    dp = _dp(mesh)
+
+    def init_params(key):
+        return init_lm_params(key, cfg)
+
+    a_params = jax.eval_shape(init_params, jax.random.PRNGKey(0))
+    p_specs = _fit_specs(shd.lm_param_specs(a_params, mesh), a_params, mesh)
+
+    if shape.kind != "train":
+        # serving has no optimizer state: when model-axis-only sharding fits
+        # a per-device budget, drop the FSDP axis so decode steps stop
+        # re-all-gathering row-sharded weights every token (s.Perf)
+        tp_size = _mesh_size(mesh, "model")
+        per_dev = cfg.param_count() * 2 / tp_size
+        if per_dev <= 4 * 2**30:
+            p_specs = jax.tree.map(
+                lambda s: P(*[None if ax == shd.FSDP else ax for ax in tuple(s)]),
+                p_specs,
+                is_leaf=lambda x: isinstance(x, P),
+            )
+
+    if shape.kind == "train":
+        tokens_sds = _sds((shape.global_batch, shape.seq_len + 1), jnp.int32)
+
+        def init_state(key):
+            params = init_params(key)
+            return {"params": params, "opt": adamw_init(params, opt_cfg)}
+
+        a_state = jax.eval_shape(init_state, jax.random.PRNGKey(0))
+        s_specs = {
+            "params": p_specs,
+            "opt": {"mu": p_specs, "nu": p_specs, "count": P()},
+        }
+
+        def step(state, batch):
+            from repro.models.moe import update_router_bias
+            from repro.models.transformer import lm_loss_and_stats
+
+            (loss, stats), grads = jax.value_and_grad(
+                lambda p: lm_loss_and_stats(p, cfg, batch["tokens"]), has_aux=True
+            )(state["params"])
+            params, opt, gnorm = adamw_update(
+                state["params"], grads, state["opt"], opt_cfg
+            )
+            if cfg.moe and cfg.moe.aux_free_bias and stats["moe_loads"] is not None:
+                # DeepSeek-V3 aux-free balancing: per-layer bias buffers move
+                # against the observed expert load, outside the gradient path
+                params["moe_layers"]["moe"]["router_bias"] = update_router_bias(
+                    params["moe_layers"]["moe"]["router_bias"],
+                    stats["moe_loads"],
+                )
+            return {"params": params, "opt": opt}, {"loss": loss, "gnorm": gnorm}
+
+        return StepBundle(
+            name=f"{spec.arch_id}:{shape.name}",
+            step_fn=step,
+            abstract_state=a_state,
+            state_specs=s_specs,
+            abstract_inputs={"tokens": tokens_sds},
+            input_spec_tree={"tokens": P(dp, None)},
+            init_state_fn=init_state,
+            input_bounds={"tokens": cfg.vocab},
+        )
+
+    if shape.kind == "prefill":
+        tokens_sds = _sds((shape.global_batch, shape.seq_len), jnp.int32)
+
+        def init_state(key):
+            return {"params": init_params(key)}
+
+        def step(state, batch):
+            from repro.models.transformer import _logits, lm_hidden
+
+            h, _, _ = lm_hidden(state["params"], cfg, batch["tokens"])
+            # serving prefill emits one next token: project only the last
+            # position (full-sequence logits would be a [B,S,V] fp32 tensor
+            # and its vocab-sharded all-reduce -- see EXPERIMENTS s.Perf)
+            logits = _logits(state["params"], cfg, h[:, -1:])
+            return {"next_token": jnp.argmax(logits[:, -1], axis=-1)}
+
+        return StepBundle(
+            name=f"{spec.arch_id}:{shape.name}",
+            step_fn=step,
+            abstract_state=jax.eval_shape(init_state, jax.random.PRNGKey(0)),
+            state_specs={"params": p_specs},
+            abstract_inputs={"tokens": tokens_sds},
+            input_spec_tree={"tokens": P(dp, None)},
+            init_state_fn=init_state,
+            donate_state=False,
+            input_bounds={"tokens": cfg.vocab},
+        )
+
+    # decode: one token against a seq_len KV cache
+    b = shape.global_batch
+    cache_len = shape.seq_len if reduced is False else 64
+    if reduced:
+        b = 2
+
+    def init_state(key):
+        return {
+            "params": init_params(key),
+            "cache": init_lm_cache(cfg, b, cache_len),
+        }
+
+    a_state = jax.eval_shape(init_state, jax.random.PRNGKey(0))
+
+    def cache_spec(leaf):
+        # [L, B, T, ...]: batch over dp when divisible, cache T over model
+        # (split-KV decode).  REPRO_NO_SPLITKV=1 leaves the model axis idle
+        # for A/B probing (s.Perf).
+        t_axis = None if _os.environ.get("REPRO_NO_SPLITKV") else "model"
+        spec = [None, dp if b % _mesh_size(mesh, dp) == 0 else None, t_axis]
+        spec += [None] * (leaf.ndim - 3)
+        return P(*spec)
+
+    c_specs = jax.tree.map(cache_spec, a_state["cache"])
+    s_specs = {"params": p_specs, "cache": _fit_specs(c_specs, a_state["cache"], mesh)}
+
+    def step(state, batch):
+        logits, cache = lm_decode_step(
+            state["params"], cfg, state["cache"], batch["tokens"], batch["pos"]
+        )
+        state = {"params": state["params"], "cache": cache}
+        return state, {"next_token": jnp.argmax(logits[:, -1], axis=-1)}
+
+    return StepBundle(
+        name=f"{spec.arch_id}:{shape.name}",
+        step_fn=step,
+        abstract_state=a_state,
+        state_specs=s_specs,
+        abstract_inputs={
+            "tokens": _sds((b, 1), jnp.int32),
+            "pos": _sds((), jnp.int32),
+        },
+        input_spec_tree={
+            "tokens": P(dp, None) if b % _mesh_size(mesh, dp) == 0 else P(None, None),
+            "pos": P(),
+        },
+        init_state_fn=init_state,
+        input_bounds={"tokens": cfg.vocab},
+    )
+
+
+def _mesh_size(mesh: Mesh, axes) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    axes = axes if isinstance(axes, tuple) else (axes,)
+    return int(np.prod([sizes[a] for a in axes]))
+
+
+# ---------------------------------------------------------------------------
+# GNN bundles
+# ---------------------------------------------------------------------------
+
+
+def _gnn_sizes(shape: GraphShape, *, reduced: bool):
+    if reduced:
+        return dict(n=512, e=2048, d_feat=16, n_graphs=4, n_trip=1024, seeds=32)
+    if shape.kind == "minibatch":
+        seeds = shape.batch_nodes
+        f1, f2 = shape.fanout
+        n = _pad(seeds + seeds * f1 + seeds * f1 * f2)
+        e = _pad(seeds * f1 + seeds * f1 * f2)
+        return dict(n=n, e=e, d_feat=shape.d_feat, n_graphs=1, n_trip=_pad(e * 8), seeds=seeds)
+    if shape.kind == "batched_small":
+        g = shape.batch_graphs
+        n = _pad(g * shape.n_nodes)
+        e = _pad(g * shape.n_edges)
+        return dict(n=n, e=e, d_feat=max(shape.d_feat, 16), n_graphs=g, n_trip=_pad(g * 256))
+    n = _pad(shape.n_nodes)
+    e = _pad(shape.n_edges)
+    n_trip = min(_pad(2 * e), 1 << 27)
+    return dict(n=n, e=e, d_feat=shape.d_feat, n_graphs=1, n_trip=n_trip)
+
+
+def _gnn_bundle(spec: ArchSpec, shape: GraphShape, mesh: Mesh, *, reduced: bool):
+    cfg = reduced_config(spec) if reduced else spec.config
+    sz = _gnn_sizes(shape, reduced=reduced)
+    # graph tensors have no tensor-parallel dimension -- flatten the whole
+    # mesh into one data axis so edge/node arrays shard 256/512-way instead
+    # of leaving the model axis idle (16x per-device bytes; see s.Perf)
+    dp = tuple(_dp(mesh)) + ("model",)
+    kind = cfg.kind
+    opt_cfg = AdamWConfig(weight_decay=0.0)
+    geometric = kind in ("mace", "dimenet")
+    regression = shape.kind == "batched_small" or geometric
+
+    inputs: dict[str, jax.ShapeDtypeStruct] = {
+        "edge_src": _sds((sz["e"],), jnp.int32),
+        "edge_dst": _sds((sz["e"],), jnp.int32),
+        "edge_mask": _sds((sz["e"],), jnp.bool_),
+    }
+    in_specs: dict[str, P] = {
+        "edge_src": P(dp),
+        "edge_dst": P(dp),
+        "edge_mask": P(dp),
+    }
+    if geometric:
+        inputs["species"] = _sds((sz["n"],), jnp.int32)
+        inputs["positions"] = _sds((sz["n"], 3), jnp.float32)
+        in_specs["species"] = P(dp)
+        in_specs["positions"] = P(dp, None)
+    else:
+        inputs["x"] = _sds((sz["n"], sz["d_feat"]), jnp.float32)
+        in_specs["x"] = P(dp, None)
+    if kind == "meshgraphnet":
+        inputs["edge_feat"] = _sds((sz["e"], 4), jnp.float32)
+        in_specs["edge_feat"] = P(dp, None)
+    if kind == "dimenet":
+        inputs["trip_kj"] = _sds((sz["n_trip"],), jnp.int32)
+        inputs["trip_ji"] = _sds((sz["n_trip"],), jnp.int32)
+        inputs["trip_mask"] = _sds((sz["n_trip"],), jnp.bool_)
+        in_specs["trip_kj"] = P(dp)
+        in_specs["trip_ji"] = P(dp)
+        in_specs["trip_mask"] = P(dp)
+    if regression:
+        inputs["graph_id"] = _sds((sz["n"],), jnp.int32)
+        inputs["labels"] = _sds((sz["n_graphs"],), jnp.float32)
+        in_specs["graph_id"] = P(dp)
+        in_specs["labels"] = P(None)
+    else:
+        inputs["labels"] = _sds((sz["n"],), jnp.int32)
+        inputs["label_mask"] = _sds((sz["n"],), jnp.bool_)
+        in_specs["labels"] = P(dp)
+        in_specs["label_mask"] = P(dp)
+
+    def init_params(key):
+        if kind == "pna":
+            return init_pna(key, cfg, sz["d_feat"], 1 if regression else N_CLASSES)
+        if kind == "meshgraphnet":
+            return init_mgn(key, cfg, sz["d_feat"], 4, 1 if regression else N_CLASSES)
+        if kind == "mace":
+            return init_mace(key, cfg)
+        return init_dimenet(key, cfg, 1)
+
+    def forward(params, batch):
+        if kind == "pna":
+            out = pna_forward(
+                params, cfg, batch["x"], batch["edge_src"], batch["edge_dst"],
+                edge_mask=batch["edge_mask"],
+            )
+        elif kind == "meshgraphnet":
+            out = mgn_forward(
+                params, cfg, batch["x"], batch["edge_feat"],
+                batch["edge_src"], batch["edge_dst"], edge_mask=batch["edge_mask"],
+            )
+        elif kind == "mace":
+            return mace_forward(
+                params, cfg, batch["species"], batch["positions"],
+                batch["edge_src"], batch["edge_dst"], edge_mask=batch["edge_mask"],
+                graph_id=batch["graph_id"], n_graphs=sz["n_graphs"],
+            )
+        else:
+            return dimenet_forward(
+                params, cfg, batch["species"], batch["positions"],
+                batch["edge_src"], batch["edge_dst"],
+                batch["trip_kj"], batch["trip_ji"],
+                edge_mask=batch["edge_mask"], trip_mask=batch["trip_mask"],
+                graph_id=batch["graph_id"], n_graphs=sz["n_graphs"],
+            )[:, 0]
+        return out
+
+    def loss_fn(params, batch):
+        out = forward(params, batch)
+        if regression:
+            if kind in ("pna", "meshgraphnet"):
+                # node outputs -> per-graph mean readout
+                per_graph = jax.ops.segment_sum(
+                    out[:, 0], batch["graph_id"], num_segments=sz["n_graphs"]
+                )
+                return jnp.mean((per_graph - batch["labels"]) ** 2)
+            return jnp.mean((out - batch["labels"]) ** 2)
+        logp = jax.nn.log_softmax(out.astype(jnp.float32))
+        ll = jnp.take_along_axis(logp, batch["labels"][:, None], axis=1)[:, 0]
+        w = batch["label_mask"].astype(jnp.float32)
+        return -(ll * w).sum() / jnp.maximum(w.sum(), 1.0)
+
+    def init_state(key):
+        params = init_params(key)
+        return {"params": params, "opt": adamw_init(params, opt_cfg)}
+
+    a_state = jax.eval_shape(init_state, jax.random.PRNGKey(0))
+    p_specs = _fit_specs(
+        shd.gnn_param_specs(a_state["params"]), a_state["params"], mesh
+    )
+    s_specs = {"params": p_specs, "opt": {"mu": p_specs, "nu": p_specs, "count": P()}}
+
+    def step(state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(state["params"], batch)
+        params, opt, gnorm = adamw_update(state["params"], grads, state["opt"], opt_cfg)
+        return {"params": params, "opt": opt}, {"loss": loss, "gnorm": gnorm}
+
+    return StepBundle(
+        name=f"{spec.arch_id}:{shape.name}",
+        step_fn=step,
+        abstract_state=a_state,
+        state_specs=s_specs,
+        abstract_inputs=inputs,
+        input_spec_tree=_fit_specs(in_specs, inputs, mesh),
+        init_state_fn=init_state,
+        input_bounds={
+            "labels": 1 if regression else N_CLASSES,
+            "species": 10,
+            "graph_id": sz["n_graphs"],
+            "edge_src": sz["n"],
+            "edge_dst": sz["n"],
+            "trip_kj": sz["e"],
+            "trip_ji": sz["e"],
+        },
+    )
+
+
+# ---------------------------------------------------------------------------
+# RecSys bundles
+# ---------------------------------------------------------------------------
+
+
+def _recsys_bundle(spec: ArchSpec, shape: RecsysShape, mesh: Mesh, *, reduced: bool):
+    cfg = reduced_config(spec) if reduced else spec.config
+    dp = _dp(mesh)
+    b = 8 if reduced else shape.batch
+    opt_cfg = AdamWConfig(weight_decay=0.0)
+
+    ids_sds = _sds((b, cfg.n_sparse, cfg.multi_hot), jnp.int32)
+    ids_spec = P(dp, None, None) if b % _mesh_size(mesh, dp) == 0 else P(None, None, None)
+
+    def init_params(key):
+        return init_deepfm(key, cfg)
+
+    a_params = jax.eval_shape(init_params, jax.random.PRNGKey(0))
+    p_specs = _fit_specs(shd.recsys_param_specs(a_params), a_params, mesh)
+
+    if shape.kind == "train":
+        def init_state(key):
+            params = init_params(key)
+            return {"params": params, "opt": adamw_init(params, opt_cfg)}
+
+        a_state = jax.eval_shape(init_state, jax.random.PRNGKey(0))
+        s_specs = {"params": p_specs, "opt": {"mu": p_specs, "nu": p_specs, "count": P()}}
+
+        def step(state, batch):
+            loss, grads = jax.value_and_grad(
+                lambda p: deepfm_loss(p, cfg, batch["ids"], batch["labels"])
+            )(state["params"])
+            params, opt, gnorm = adamw_update(state["params"], grads, state["opt"], opt_cfg)
+            return {"params": params, "opt": opt}, {"loss": loss, "gnorm": gnorm}
+
+        return StepBundle(
+            name=f"{spec.arch_id}:{shape.name}",
+            step_fn=step,
+            abstract_state=a_state,
+            state_specs=s_specs,
+            abstract_inputs={"ids": ids_sds, "labels": _sds((b,), jnp.float32)},
+            input_spec_tree={"ids": ids_spec, "labels": P(dp) if b % _mesh_size(mesh, dp) == 0 else P(None)},
+            init_state_fn=init_state,
+            input_bounds={"ids": cfg.vocab_per_field},
+        )
+
+    def init_state(key):
+        return {"params": init_params(key)}
+
+    a_state = jax.eval_shape(init_state, jax.random.PRNGKey(0))
+
+    if shape.kind == "retrieval":
+        n_cand = 4096 if reduced else shape.n_candidates
+
+        def step(state, batch):
+            scores = retrieval_scores(state["params"], cfg, batch["ids"], batch["candidates"])
+            top = jax.lax.top_k(scores, 100 if not reduced else 8)
+            return {"top_scores": top[0], "top_ids": top[1]}
+
+        cand_spec = P(dp, None) if n_cand % _mesh_size(mesh, dp) == 0 else P(None, None)
+        return StepBundle(
+            name=f"{spec.arch_id}:{shape.name}",
+            step_fn=step,
+            abstract_state=a_state,
+            state_specs={"params": p_specs},
+            abstract_inputs={
+                "ids": _sds((b, cfg.n_sparse, cfg.multi_hot), jnp.int32),
+                "candidates": _sds((n_cand, cfg.embed_dim), jnp.float32),
+            },
+            input_spec_tree={"ids": P(None, None, None), "candidates": cand_spec},
+            init_state_fn=init_state,
+            donate_state=False,
+            input_bounds={"ids": cfg.vocab_per_field},
+        )
+
+    def step(state, batch):
+        return {"scores": jax.nn.sigmoid(deepfm_logits(state["params"], cfg, batch["ids"]))}
+
+    return StepBundle(
+        name=f"{spec.arch_id}:{shape.name}",
+        step_fn=step,
+        abstract_state=a_state,
+        state_specs={"params": p_specs},
+        abstract_inputs={"ids": ids_sds},
+        input_spec_tree={"ids": ids_spec},
+        init_state_fn=init_state,
+        donate_state=False,
+        input_bounds={"ids": cfg.vocab_per_field},
+    )
+
+
+# ---------------------------------------------------------------------------
+# entry point
+# ---------------------------------------------------------------------------
+
+
+def build_bundle(
+    arch_id: str, shape_name: str, mesh: Mesh, *, reduced: bool = False
+) -> StepBundle:
+    spec = ARCHS[arch_id]
+    shape = spec.shapes()[shape_name]
+    if spec.family == "lm":
+        return _lm_bundle(spec, shape, mesh, reduced=reduced)
+    if spec.family == "gnn":
+        return _gnn_bundle(spec, shape, mesh, reduced=reduced)
+    return _recsys_bundle(spec, shape, mesh, reduced=reduced)

@@ -1,0 +1,1 @@
+"""Assigned architecture pool: LM transformers (dense + MoE), GNNs, recsys."""

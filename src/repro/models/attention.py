@@ -1,0 +1,338 @@
+"""Attention variants: GQA (with optional sliding window) and DeepSeek MLA.
+
+All functions are pure; params are dicts of jnp arrays.  Two call modes:
+
+  * full-sequence (train / prefill): causal masking, positions 0..S-1
+  * decode: one new token against a fixed-size KV cache updated in place via
+    ``lax.dynamic_update_slice`` at position ``pos``
+
+MLA caches only the compressed latent (c_kv, k_rope) and uses the absorbed-
+weight decode path (scores against the latent directly), which is the memory
+saving the architecture exists for.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LMConfig
+from repro.models.common import apply_rope, init_dense, rms_norm, rope_angles
+
+_NEG = -1e30
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+
+def init_gqa_params(key, cfg: LMConfig, dtype=jnp.bfloat16) -> dict:
+    d, h, hk, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": init_dense(ks[0], d, h * dh, dtype),
+        "wk": init_dense(ks[1], d, hk * dh, dtype),
+        "wv": init_dense(ks[2], d, hk * dh, dtype),
+        "wo": init_dense(ks[3], h * dh, d, dtype),
+    }
+
+
+def _sdpa(q, k, v, mask, scale):
+    """q [B,S,H,dh], k/v [B,T,Hk,dh] with H = G*Hk; mask [B,S,T] or [S,T]."""
+    b, s, h, dh = q.shape
+    hk = k.shape[2]
+    g = h // hk
+    q = q.reshape(b, s, hk, g, dh)
+    scores = jnp.einsum("bskgd,btkd->bkgst", q, k).astype(jnp.float32) * scale
+    scores = scores + jnp.where(mask, 0.0, _NEG)  # mask broadcast [.., s, t]
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return out.reshape(b, s, h, dh)
+
+
+def causal_mask(s: int, window: int | None = None):
+    q_pos = jnp.arange(s)[:, None]
+    k_pos = jnp.arange(s)[None, :]
+    m = k_pos <= q_pos
+    if window is not None:
+        m &= k_pos > q_pos - window
+    return m
+
+
+# Sequences at or above this length use the chunked (streaming-softmax)
+# attention so the HLO never materializes an S x S score tensor -- the same
+# dataflow the Pallas flash kernel implements on TPU.  (Perf log: 8192 -> 4096
+# cut deepseek train_4k temp bytes/device by ~3x; see EXPERIMENTS.md s.Perf.)
+CHUNKED_ATTN_THRESHOLD = 4096
+_ATTN_CHUNK = 1024
+
+
+def _chunked_sdpa(q, k, v, scale, window: int | None):
+    """Flash-style causal attention via lax.scan over KV chunks.
+
+    q [B,S,H,dh], k/v [B,S,Hk,dh] -> [B,S,H,dh].  Running (max, sum, acc)
+    streaming softmax; memory is O(S * chunk), not O(S^2).
+    """
+    b, s, h, dh = q.shape
+    hk = k.shape[2]
+    g = h // hk
+    c = min(_ATTN_CHUNK, s)
+    n_chunks = s // c
+    qr = q.reshape(b, s, hk, g, dh)
+    kc = k.reshape(b, n_chunks, c, hk, dh).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n_chunks, c, hk, dh).transpose(1, 0, 2, 3, 4)
+    q_pos = jnp.arange(s)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kj, vj, j = inp
+        k_pos = j * c + jnp.arange(c)
+        scores = jnp.einsum("bskgd,btkd->bkgst", qr, kj).astype(jnp.float32) * scale
+        mask = k_pos[None, :] <= q_pos[:, None]
+        if window is not None:
+            mask &= k_pos[None, :] > q_pos[:, None] - window
+        scores = jnp.where(mask[None, None, None], scores, _NEG)
+        m_new = jnp.maximum(m, scores.max(axis=-1))
+        # mask p explicitly: a fully-masked chunk has m_new == _NEG and
+        # exp(scores - m_new) would be 1, not 0
+        p = jnp.exp(scores - m_new[..., None]) * mask[None, None, None]
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bkgst,btkd->bkgsd", p, vj.astype(jnp.float32)
+        )
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, hk, g, s), _NEG, jnp.float32)
+    l0 = jnp.zeros((b, hk, g, s), jnp.float32)
+    a0 = jnp.zeros((b, hk, g, s, dh), jnp.float32)
+    # checkpoint the chunk body: backward recomputes per-chunk scores instead
+    # of stacking [n_chunks, ..., S, chunk] fp32 score tensors (flash bwd)
+    (m, l, acc), _ = jax.lax.scan(
+        jax.checkpoint(body), (m0, l0, a0), (kc, vc, jnp.arange(n_chunks))
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, s, h, dh).astype(q.dtype)
+
+
+def gqa_forward(params, cfg: LMConfig, x, *, positions=None):
+    """Full-sequence causal attention. x [B,S,D] -> [B,S,D]."""
+    b, s, d = x.shape
+    h, hk, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    q = jnp.einsum("bsd,de->bse", x, params["wq"]).reshape(b, s, h, dh)
+    k = jnp.einsum("bsd,de->bse", x, params["wk"]).reshape(b, s, hk, dh)
+    v = jnp.einsum("bsd,de->bse", x, params["wv"]).reshape(b, s, hk, dh)
+    cos, sin = rope_angles(positions, dh, cfg.rope_theta)
+    cos, sin = cos[:, :, None, :], sin[:, :, None, :]
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    scale = 1.0 / jnp.sqrt(dh).astype(jnp.float32)
+    if s >= CHUNKED_ATTN_THRESHOLD and s % _ATTN_CHUNK == 0:
+        out = _chunked_sdpa(q, k, v, scale, cfg.sliding_window)
+    else:
+        mask = causal_mask(s, cfg.sliding_window)
+        out = _sdpa(q, k, v, mask, scale)
+    return jnp.einsum("bse,ed->bsd", out.reshape(b, s, h * dh), params["wo"])
+
+
+def init_gqa_cache(cfg: LMConfig, batch: int, cache_len: int, dtype=jnp.bfloat16):
+    hk, dh = cfg.n_kv_heads, cfg.d_head
+    shape = (batch, cache_len, hk, dh)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def gqa_decode(params, cfg: LMConfig, x, cache, pos):
+    """x [B,1,D], cache {k,v [B,T,Hk,dh]}, pos scalar int32 -> (out, cache).
+
+    With a sliding window the cache is a ring buffer of size window; writes
+    and reads wrap modulo the cache length.
+    """
+    b, s, d = x.shape
+    h, hk, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    t = cache["k"].shape[1]
+    q = jnp.einsum("bsd,de->bse", x, params["wq"]).reshape(b, s, h, dh)
+    k = jnp.einsum("bsd,de->bse", x, params["wk"]).reshape(b, s, hk, dh)
+    v = jnp.einsum("bsd,de->bse", x, params["wv"]).reshape(b, s, hk, dh)
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    cos, sin = rope_angles(positions, dh, cfg.rope_theta)
+    cos, sin = cos[:, :, None, :], sin[:, :, None, :]
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    slot = jnp.mod(pos, t)  # ring write (no-op mod for full-length caches)
+    ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+    # valid cache entries: logical positions (pos - t, pos]
+    idx = jnp.arange(t)
+    logical = jnp.where(idx <= slot, pos - slot + idx, pos - slot - t + idx)
+    valid = (logical >= 0) & (logical <= pos)
+    if cfg.sliding_window is not None:
+        valid &= logical > pos - cfg.sliding_window
+    mask = valid[None, None, :]  # [B?,1,T] broadcast
+    out = _sdpa(q, ck, cv, mask, 1.0 / jnp.sqrt(dh).astype(jnp.float32))
+    out = jnp.einsum("bse,ed->bsd", out.reshape(b, s, h * dh), params["wo"])
+    return out, {"k": ck, "v": cv}
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek V2/V3)
+# ---------------------------------------------------------------------------
+
+
+def init_mla_params(key, cfg: LMConfig, dtype=jnp.bfloat16) -> dict:
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    qk = m.qk_nope_dim + m.qk_rope_dim
+    ks = jax.random.split(key, 8)
+    return {
+        "w_dq": init_dense(ks[0], d, m.q_lora_rank, dtype),
+        "q_norm": jnp.ones((m.q_lora_rank,), dtype),
+        "w_uq": init_dense(ks[1], m.q_lora_rank, h * qk, dtype),
+        "w_dkv": init_dense(ks[2], d, m.kv_lora_rank, dtype),
+        "kv_norm": jnp.ones((m.kv_lora_rank,), dtype),
+        "w_uk": init_dense(ks[3], m.kv_lora_rank, h * m.qk_nope_dim, dtype),
+        "w_uv": init_dense(ks[4], m.kv_lora_rank, h * m.v_head_dim, dtype),
+        "w_kr": init_dense(ks[5], d, m.qk_rope_dim, dtype),
+        "wo": init_dense(ks[6], h * m.v_head_dim, d, dtype),
+    }
+
+
+def _mla_q(params, cfg: LMConfig, x, positions):
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    qk = m.qk_nope_dim + m.qk_rope_dim
+    q_lat = rms_norm(jnp.einsum("bsd,dr->bsr", x, params["w_dq"]), params["q_norm"])
+    q = jnp.einsum("bsr,re->bse", q_lat, params["w_uq"]).reshape(b, s, h, qk)
+    q_nope, q_rope = q[..., : m.qk_nope_dim], q[..., m.qk_nope_dim :]
+    cos, sin = rope_angles(positions, m.qk_rope_dim, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos[:, :, None, :], sin[:, :, None, :])
+    return q_nope, q_rope
+
+
+def mla_forward(params, cfg: LMConfig, x, *, positions=None):
+    """Full-sequence MLA. x [B,S,D] -> [B,S,D]."""
+    m = cfg.mla
+    b, s, d = x.shape
+    h = cfg.n_heads
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    q_nope, q_rope = _mla_q(params, cfg, x, positions)
+    c = rms_norm(jnp.einsum("bsd,dr->bsr", x, params["w_dkv"]), params["kv_norm"])
+    k_rope = jnp.einsum("bsd,dr->bsr", x, params["w_kr"])  # [B,S,rope] shared
+    cos, sin = rope_angles(positions, m.qk_rope_dim, cfg.rope_theta)
+    k_rope = apply_rope(k_rope[:, :, None, :], cos[:, :, None, :], sin[:, :, None, :])[
+        :, :, 0
+    ]
+    scale = 1.0 / jnp.sqrt(m.qk_nope_dim + m.qk_rope_dim).astype(jnp.float32)
+    if s >= CHUNKED_ATTN_THRESHOLD and s % _ATTN_CHUNK == 0:
+        out = _mla_chunked(params, cfg, q_nope, q_rope, c, k_rope, scale)
+    else:
+        k_nope = jnp.einsum("bsr,re->bse", c, params["w_uk"]).reshape(
+            b, s, h, m.qk_nope_dim
+        )
+        v = jnp.einsum("bsr,re->bse", c, params["w_uv"]).reshape(
+            b, s, h, m.v_head_dim
+        )
+        scores = (
+            jnp.einsum("bshe,bthe->bhst", q_nope, k_nope)
+            + jnp.einsum("bshe,bte->bhst", q_rope, k_rope)
+        ).astype(jnp.float32) * scale
+        mask = causal_mask(s)
+        scores = scores + jnp.where(mask, 0.0, _NEG)
+        probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+        out = jnp.einsum("bhst,bthe->bshe", probs, v)
+    out = out.reshape(b, s, h * m.v_head_dim)
+    return jnp.einsum("bse,ed->bsd", out, params["wo"])
+
+
+def _mla_chunked(params, cfg: LMConfig, q_nope, q_rope, c, k_rope, scale):
+    """Streaming-softmax MLA prefill: the per-head K/V are expanded from the
+    latent one chunk at a time, so neither S x S scores nor the fully
+    expanded K ever materialize."""
+    m = cfg.mla
+    b, s, h, _ = q_nope.shape
+    ch = min(_ATTN_CHUNK, s)
+    n_chunks = s // ch
+    w_uk = params["w_uk"].reshape(m.kv_lora_rank, h, m.qk_nope_dim)
+    w_uv = params["w_uv"].reshape(m.kv_lora_rank, h, m.v_head_dim)
+    cc = c.reshape(b, n_chunks, ch, -1).transpose(1, 0, 2, 3)
+    kr = k_rope.reshape(b, n_chunks, ch, -1).transpose(1, 0, 2, 3)
+    q_pos = jnp.arange(s)
+
+    def body(carry, inp):
+        mx, l, acc = carry
+        c_j, kr_j, j = inp
+        k_nope_j = jnp.einsum("btr,rhe->bthe", c_j, w_uk)
+        v_j = jnp.einsum("btr,rhe->bthe", c_j, w_uv)
+        scores = (
+            jnp.einsum("bshe,bthe->bhst", q_nope, k_nope_j)
+            + jnp.einsum("bshe,bte->bhst", q_rope, kr_j)
+        ).astype(jnp.float32) * scale
+        k_pos = j * ch + jnp.arange(ch)
+        mask = k_pos[None, :] <= q_pos[:, None]
+        scores = jnp.where(mask[None, None], scores, _NEG)
+        m_new = jnp.maximum(mx, scores.max(axis=-1))
+        p = jnp.exp(scores - m_new[..., None]) * mask[None, None]
+        corr = jnp.exp(mx - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhst,bthe->bhse", p, v_j.astype(jnp.float32)
+        )
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, h, s), _NEG, jnp.float32)
+    l0 = jnp.zeros((b, h, s), jnp.float32)
+    a0 = jnp.zeros((b, h, s, m.v_head_dim), jnp.float32)
+    (mx, l, acc), _ = jax.lax.scan(
+        jax.checkpoint(body), (m0, l0, a0), (cc, kr, jnp.arange(n_chunks))
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(q_nope.dtype)
+
+
+def init_mla_cache(cfg: LMConfig, batch: int, cache_len: int, dtype=jnp.bfloat16):
+    m = cfg.mla
+    return {
+        "c": jnp.zeros((batch, cache_len, m.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, cache_len, m.qk_rope_dim), dtype),
+    }
+
+
+def mla_decode(params, cfg: LMConfig, x, cache, pos):
+    """Absorbed-weight decode: score against the cached latent directly."""
+    m = cfg.mla
+    b, s, d = x.shape
+    h = cfg.n_heads
+    t = cache["c"].shape[1]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q_nope, q_rope = _mla_q(params, cfg, x, positions)
+
+    c_new = rms_norm(jnp.einsum("bsd,dr->bsr", x, params["w_dkv"]), params["kv_norm"])
+    k_rope_new = jnp.einsum("bsd,dr->bsr", x, params["w_kr"])
+    cos, sin = rope_angles(positions, m.qk_rope_dim, cfg.rope_theta)
+    k_rope_new = apply_rope(
+        k_rope_new[:, :, None, :], cos[:, :, None, :], sin[:, :, None, :]
+    )[:, :, 0]
+    c = jax.lax.dynamic_update_slice(cache["c"], c_new, (0, pos, 0))
+    k_rope = jax.lax.dynamic_update_slice(cache["k_rope"], k_rope_new, (0, pos, 0))
+
+    # absorb W_uk into the query: q_abs [B,1,H,R]
+    w_uk = params["w_uk"].reshape(m.kv_lora_rank, h, m.qk_nope_dim)
+    q_abs = jnp.einsum("bshe,rhe->bshr", q_nope, w_uk)
+    scale = 1.0 / jnp.sqrt(m.qk_nope_dim + m.qk_rope_dim).astype(jnp.float32)
+    scores = (
+        jnp.einsum("bshr,btr->bhst", q_abs, c)
+        + jnp.einsum("bshe,bte->bhst", q_rope, k_rope)
+    ).astype(jnp.float32) * scale
+    mask = (jnp.arange(t) <= pos)[None, None, None, :]
+    scores = scores + jnp.where(mask, 0.0, _NEG)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    # attend over the latent, then absorb W_uv on the way out
+    o_lat = jnp.einsum("bhst,btr->bshr", probs, c)
+    w_uv = params["w_uv"].reshape(m.kv_lora_rank, h, m.v_head_dim)
+    out = jnp.einsum("bshr,rhe->bshe", o_lat, w_uv).reshape(b, s, h * m.v_head_dim)
+    out = jnp.einsum("bse,ed->bsd", out, params["wo"])
+    return out, {"c": c, "k_rope": k_rope}

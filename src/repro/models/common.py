@@ -1,0 +1,56 @@
+"""Shared model components: norms, RoPE, initializers, MLP blocks."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, *, eps: float = 1e-6) -> jax.Array:
+    # fp32 accumulation for the variance WITHOUT materializing an fp32 copy
+    # of x (a [B,S,D] f32 convert per norm dominated big-model temp bytes;
+    # see EXPERIMENTS.md s.Perf)
+    ss = jnp.einsum("...d,...d->...", x, x, preferred_element_type=jnp.float32)
+    var = ss[..., None] / x.shape[-1]
+    inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return x * inv * scale
+
+
+def init_dense(key, d_in: int, d_out: int, dtype=jnp.bfloat16) -> jax.Array:
+    scale = 1.0 / np.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def rope_angles(positions: jax.Array, d_head: int, theta: float = 10000.0):
+    """positions [*, S] -> (cos, sin) each [*, S, d_head/2] (fp32)."""
+    half = d_head // 2
+    freq = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freq
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x [..., S, H, D]; cos/sin [..., S, 1, D/2] or broadcastable."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(dt)
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array):
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    return jnp.einsum("...f,fd->...d", jax.nn.silu(g) * u, w_down)
+
+
+def cross_entropy_loss(logits: jax.Array, labels: jax.Array, *, z_loss: float = 0.0):
+    """Mean next-token CE in fp32; logits [..., V], labels [...] int32."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    loss = jnp.mean(lse - ll)
+    if z_loss:
+        loss = loss + z_loss * jnp.mean(lse**2)
+    return loss

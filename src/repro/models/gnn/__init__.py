@@ -1,0 +1,2 @@
+"""GNN architectures over segment_sum message passing (JAX has no sparse
+SpMM beyond BCOO; scatter/segment ops ARE the system's sparse layer)."""

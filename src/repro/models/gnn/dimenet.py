@@ -1,0 +1,147 @@
+"""DimeNet [arXiv:2003.03123]: directional message passing over edge messages
+m_ji updated from triplets (k -> j -> i) with radial Bessel + angular basis
+and a bilinear (DimeNet++-style down/up projected) interaction.
+
+Triplets are precomputed index lists into the edge array: triplet t couples
+edge_kj[t] into edge_ji[t]; padding uses mask.  Angular basis here is the
+cos(n * alpha) Chebyshev family crossed with the radial basis (n_spherical x
+n_radial features) -- same tensor structure as the paper's spherical Bessel
+basis with a cheaper evaluation (documented simplification).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import GNNConfig
+from repro.models.gnn import e3
+from repro.models.gnn.message_passing import init_mlp, mlp_apply
+from repro.models.common import init_dense
+
+
+def init_dimenet(key, cfg: GNNConfig, d_out: int = 1) -> dict:
+    d = cfg.d_hidden
+    x = cfg.extra
+    nb = x["n_bilinear"]
+    n_sbf = x["n_spherical"] * x["n_radial"]
+    ks = jax.random.split(key, 3 + 3 * cfg.n_layers)
+    p: dict = {
+        "embed_species": init_dense(ks[0], 16, d, jnp.float32),
+        "embed_edge": init_mlp(ks[1], (2 * d + x["n_radial"], d, d)),
+        "blocks": [],
+        "out_final": init_mlp(ks[2], (d, d, d_out)),
+    }
+    for i in range(cfg.n_layers):
+        k0, k1, k2 = jax.random.split(ks[3 + i], 3)
+        p["blocks"].append(
+            {
+                "w_msg": init_dense(k0, d, d, jnp.float32),
+                "down": init_dense(k1, d, nb, jnp.float32),
+                "sbf_w": init_dense(k2, n_sbf, nb, jnp.float32),
+                "up": init_dense(jax.random.fold_in(k2, 1), nb, d, jnp.float32),
+                "post": init_mlp(jax.random.fold_in(k2, 2), (d, d, d)),
+                "out": init_mlp(jax.random.fold_in(k2, 3), (d, d)),
+            }
+        )
+    return p
+
+
+def _angular_basis(cos_angle, r, n_spherical, n_radial, r_cut):
+    """cos(n*alpha) Chebyshev x radial Bessel -> [T, n_spherical*n_radial]."""
+    n = jnp.arange(n_spherical, dtype=jnp.float32)
+    alpha = jnp.arccos(jnp.clip(cos_angle, -1.0, 1.0))
+    ang = jnp.cos(n * alpha[:, None])  # [T, S]
+    rad = e3.bessel_rbf(r, n_radial, r_cut)  # [T, R]
+    return (ang[:, :, None] * rad[:, None, :]).reshape(r.shape[0], -1)
+
+
+def dimenet_forward(
+    params,
+    cfg: GNNConfig,
+    species,  # [N] int32 (or zeros for featureless graphs)
+    positions,  # [N, 3]
+    edge_src,
+    edge_dst,  # [E] (messages flow src -> dst)
+    trip_kj,
+    trip_ji,  # [T] indices into edges: edge kj feeds edge ji
+    *,
+    edge_mask=None,
+    trip_mask=None,
+    graph_id=None,
+    n_graphs: int = 1,
+):
+    x = cfg.extra
+    n, e = species.shape[0], edge_src.shape[0]
+    r_vec = positions[edge_dst] - positions[edge_src]
+    r = jnp.linalg.norm(r_vec + 1e-12, axis=-1)
+    rbf = e3.bessel_rbf(r, x["n_radial"], x["r_cut"]) * e3.cutoff_envelope(
+        r, x["r_cut"]
+    )[:, None]
+    if edge_mask is not None:
+        rbf = rbf * edge_mask[:, None]
+
+    h = params["embed_species"][jnp.clip(species, 0, 15)]
+    m = mlp_apply(
+        params["embed_edge"],
+        jnp.concatenate([h[edge_src], h[edge_dst], rbf], axis=-1),
+    )  # [E, d]
+
+    # triplet geometry: angle between edge ji and edge kj at shared vertex j
+    v_ji = r_vec[trip_ji]
+    v_kj = -r_vec[trip_kj]  # pointing j -> k
+    cos_a = jnp.sum(v_ji * v_kj, -1) / jnp.maximum(
+        jnp.linalg.norm(v_ji, axis=-1) * jnp.linalg.norm(v_kj, axis=-1), 1e-9
+    )
+    sbf = _angular_basis(cos_a, r[trip_kj], x["n_spherical"], x["n_radial"], x["r_cut"])
+    if trip_mask is not None:
+        sbf = sbf * trip_mask[:, None]
+
+    out = jnp.zeros((n, cfg.d_hidden))
+    for blk in params["blocks"]:
+        # directional interaction: project m_kj down, modulate by angular
+        # basis through the bilinear weights, aggregate onto edge ji, up-proj
+        mk = (m @ blk["down"])[trip_kj]  # [T, nb]
+        ang = sbf @ blk["sbf_w"]  # [T, nb]
+        agg = jax.ops.segment_sum(mk * ang, trip_ji, num_segments=e)  # [E, nb]
+        m = mlp_apply(blk["post"], m @ blk["w_msg"] + agg @ blk["up"]) + m
+        # per-block output: edge messages -> destination nodes
+        contrib = jax.ops.segment_sum(
+            m if edge_mask is None else m * edge_mask[:, None],
+            edge_dst,
+            num_segments=n,
+        )
+        out = out + mlp_apply(blk["out"], contrib)
+
+    site = mlp_apply(params["out_final"], out)  # [N, d_out]
+    if graph_id is None:
+        graph_id = jnp.zeros((n,), jnp.int32)
+    return jax.ops.segment_sum(site, graph_id, num_segments=n_graphs)
+
+
+def build_triplets(edge_src, edge_dst, max_triplets: int):
+    """Host-side triplet builder: pairs (e_kj, e_ji) with dst(e_kj) == src(e_ji)
+    and k != i, padded/truncated to ``max_triplets``.  numpy arrays in/out."""
+    import numpy as np
+
+    e = len(edge_src)
+    by_dst: dict[int, list[int]] = {}
+    for idx in range(e):
+        by_dst.setdefault(int(edge_dst[idx]), []).append(idx)
+    kj, ji = [], []
+    for e_ji in range(e):
+        j = int(edge_src[e_ji])
+        for e_kj in by_dst.get(j, ()):
+            if int(edge_src[e_kj]) != int(edge_dst[e_ji]):
+                kj.append(e_kj)
+                ji.append(e_ji)
+                if len(kj) >= max_triplets:
+                    break
+        if len(kj) >= max_triplets:
+            break
+    t = len(kj)
+    pad = max_triplets - t
+    mask = np.concatenate([np.ones(t, bool), np.zeros(pad, bool)])
+    kj = np.concatenate([np.asarray(kj, np.int32), np.zeros(pad, np.int32)])
+    ji = np.concatenate([np.asarray(ji, np.int32), np.zeros(pad, np.int32)])
+    return kj, ji, mask

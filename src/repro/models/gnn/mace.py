@@ -1,0 +1,125 @@
+"""MACE [arXiv:2206.07697]: higher-order equivariant (ACE) message passing.
+
+Structure per layer (faithful skeleton; even-parity Gaunt couplings only --
+see e3.py / DESIGN.md):
+
+  A-basis  A^{l3}_c = sum_j R_{l1 l2 l3,c}(r_ij) * (Y^{l1}(r_ij) x h_j^{l2})_{l3}
+  B-basis  products of A up to correlation order 3, recoupled to each L
+  message  m^L = linear(B paths)
+  update   h'^L = W h^L + m^L ; readout sums invariant (l=0) site energies
+
+Features are flat [N, C, 9] arrays indexed by the real-SH slot (l<=2).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import GNNConfig
+from repro.models.gnn import e3
+from repro.models.gnn.message_passing import init_mlp, mlp_apply
+from repro.models.common import init_dense
+
+
+def _coupling_paths(g: np.ndarray):
+    """Nonzero (a, b, c) coupling entries as index/value arrays."""
+    a, b, c = np.nonzero(g)
+    return (
+        jnp.asarray(a, jnp.int32),
+        jnp.asarray(b, jnp.int32),
+        jnp.asarray(c, jnp.int32),
+        jnp.asarray(g[a, b, c], jnp.float32),
+    )
+
+
+def couple(u: jax.Array, v: jax.Array, paths) -> jax.Array:
+    """Equivariant product: u, v [..., 9] -> [..., 9] via Gaunt paths."""
+    ia, ib, ic, w = paths
+    prod = u[..., ia] * v[..., ib] * w
+    out_shape = jnp.broadcast_shapes(u.shape[:-1], v.shape[:-1]) + (9,)
+    return jnp.zeros(out_shape, prod.dtype).at[..., ic].add(prod)
+
+
+def init_mace(key, cfg: GNNConfig) -> dict:
+    c = cfg.d_hidden
+    x = cfg.extra
+    ks = jax.random.split(key, 3 + 4 * cfg.n_layers)
+    params: dict = {
+        "species_embed": init_dense(ks[0], x["n_species"], c, jnp.float32),
+        "layers": [],
+        "readout": init_mlp(ks[1], (c, c, 1)),
+    }
+    for i in range(cfg.n_layers):
+        k0, k1, k2, k3 = jax.random.split(ks[3 + i], 4)
+        params["layers"].append(
+            {
+                # radial MLP: rbf -> per-channel weight per *l* (not per slot:
+                # all m of one l must share a weight or equivariance breaks)
+                "radial": init_mlp(k0, (x["n_rbf"], 32, 3 * c)),
+                "w_self": init_dense(k1, c, c, jnp.float32),
+                # B-basis path weights: order-1, order-2, order-3 combos
+                "w_b1": init_dense(k2, c, c, jnp.float32),
+                "w_b2": init_dense(k3, c, c, jnp.float32),
+                "w_b3": init_dense(jax.random.fold_in(k3, 1), c, c, jnp.float32),
+            }
+        )
+    return params
+
+
+def mace_forward(
+    params,
+    cfg: GNNConfig,
+    species,  # [N] int32
+    positions,  # [N, 3] float32
+    edge_src,
+    edge_dst,  # [E]
+    *,
+    edge_mask=None,
+    graph_id=None,  # [N] for batched molecules
+    n_graphs: int = 1,
+):
+    """Returns per-graph invariant energies [n_graphs]."""
+    x = cfg.extra
+    n = species.shape[0]
+    c = cfg.d_hidden
+    paths = _coupling_paths(e3.gaunt_tensor())
+
+    r_vec = positions[edge_dst] - positions[edge_src]
+    r = jnp.linalg.norm(r_vec + 1e-12, axis=-1)
+    r_hat = r_vec / jnp.maximum(r, 1e-9)[:, None]
+    ylm = e3.real_sh(r_hat)  # [E, 9]
+    rbf = e3.bessel_rbf(r, x["n_rbf"], x["r_cut"]) * e3.cutoff_envelope(
+        r, x["r_cut"]
+    )[:, None]
+    if edge_mask is not None:
+        rbf = rbf * edge_mask[:, None]
+
+    # h [N, C, 9]: scalar slot initialized from species embedding
+    h = jnp.zeros((n, c, 9), jnp.float32)
+    h = h.at[:, :, 0].set(params["species_embed"][species])
+
+    l_of_slot = jnp.asarray([0, 1, 1, 1, 2, 2, 2, 2, 2], jnp.int32)
+    for layer in params["layers"]:
+        radial_l = mlp_apply(layer["radial"], rbf).reshape(-1, c, 3)  # [E, C, L]
+        radial = radial_l[:, :, l_of_slot]  # broadcast per-l weight to slots
+        # A-basis: couple edge harmonics with neighbor features, radially
+        # weighted, summed over neighbors
+        msg = couple(ylm[:, None, :], h[edge_src], paths) * radial  # [E, C, 9]
+        a = jax.ops.segment_sum(msg, edge_dst, num_segments=n)  # [N, C, 9]
+        # B-basis: correlation orders 1..3
+        b1 = a
+        b2 = couple(a, a, paths)
+        b3 = couple(b2, a, paths)
+        m = (
+            jnp.einsum("ncs,ck->nks", b1, layer["w_b1"])
+            + jnp.einsum("ncs,ck->nks", b2, layer["w_b2"])
+            + jnp.einsum("ncs,ck->nks", b3, layer["w_b3"])
+        )
+        h = jnp.einsum("ncs,ck->nks", h, layer["w_self"]) + m
+
+    site = mlp_apply(params["readout"], h[:, :, 0])[:, 0]  # invariant slot only
+    if graph_id is None:
+        graph_id = jnp.zeros((n,), jnp.int32)
+    return jax.ops.segment_sum(site, graph_id, num_segments=n_graphs)

@@ -1,0 +1,40 @@
+"""MeshGraphNet [arXiv:2010.03409]: encode-process-decode with edge + node
+MLPs, sum aggregation, residual updates, 15 processor layers."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import GNNConfig
+from repro.models.gnn.message_passing import init_mlp, layer_norm, mlp_apply, segment_reduce
+
+
+def init_mgn(key, cfg: GNNConfig, d_node_in: int, d_edge_in: int, d_out: int) -> dict:
+    d = cfg.d_hidden
+    ks = jax.random.split(key, 2 * cfg.n_layers + 3)
+    return {
+        "node_enc": init_mlp(ks[0], (d_node_in, d, d)),
+        "edge_enc": init_mlp(ks[1], (d_edge_in, d, d)),
+        "layers": [
+            {
+                "edge": init_mlp(ks[2 + 2 * i], (3 * d, d, d)),
+                "node": init_mlp(ks[3 + 2 * i], (2 * d, d, d)),
+            }
+            for i in range(cfg.n_layers)
+        ],
+        "decode": init_mlp(ks[-1], (d, d, d_out)),
+    }
+
+
+def mgn_forward(params, cfg: GNNConfig, x, e_feat, edge_src, edge_dst, *, edge_mask=None):
+    n = x.shape[0]
+    h = layer_norm(mlp_apply(params["node_enc"], x))
+    e = layer_norm(mlp_apply(params["edge_enc"], e_feat))
+    for layer in params["layers"]:
+        e = e + mlp_apply(
+            layer["edge"], jnp.concatenate([e, h[edge_src], h[edge_dst]], axis=-1)
+        )
+        agg = segment_reduce(e, edge_dst, n, "sum", mask=edge_mask)
+        h = h + mlp_apply(layer["node"], jnp.concatenate([h, agg], axis=-1))
+    return mlp_apply(params["decode"], h)

@@ -1,0 +1,77 @@
+"""Message-passing primitives: edge-indexed gather -> segment reduce -> update.
+
+These wrap ``jax.ops.segment_*`` with the masking/degree conventions shared by
+all four GNN archs.  Edge lists may carry a validity mask (padded samplers,
+padded molecule batches) -- masked edges contribute nothing and degree counts
+exclude them.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import init_dense
+
+
+def segment_mean(x, seg, n, mask=None):
+    w = jnp.ones(x.shape[0], x.dtype) if mask is None else mask.astype(x.dtype)
+    s = jax.ops.segment_sum(x * w[:, None], seg, num_segments=n)
+    c = jax.ops.segment_sum(w, seg, num_segments=n)
+    return s / jnp.maximum(c, 1.0)[:, None]
+
+
+def segment_reduce(x, seg, n, kind: str, mask=None):
+    if mask is not None:
+        if kind in ("max",):
+            x = jnp.where(mask[:, None], x, -jnp.inf)
+        elif kind in ("min",):
+            x = jnp.where(mask[:, None], x, jnp.inf)
+        else:
+            x = x * mask.astype(x.dtype)[:, None]
+    if kind == "sum":
+        return jax.ops.segment_sum(x, seg, num_segments=n)
+    if kind == "mean":
+        return segment_mean(x, seg, n, mask)
+    if kind == "max":
+        out = jax.ops.segment_max(x, seg, num_segments=n)
+        return jnp.where(jnp.isfinite(out), out, 0.0)
+    if kind == "min":
+        out = jax.ops.segment_min(x, seg, num_segments=n)
+        return jnp.where(jnp.isfinite(out), out, 0.0)
+    if kind == "std":
+        m = segment_mean(x, seg, n, mask)
+        m2 = segment_mean(x * x, seg, n, mask)
+        return jnp.sqrt(jnp.maximum(m2 - m * m, 0.0) + 1e-6)
+    raise ValueError(kind)
+
+
+def degrees(seg, n, n_edges=None, mask=None):
+    w = jnp.ones(seg.shape[0], jnp.float32) if mask is None else mask.astype(jnp.float32)
+    return jax.ops.segment_sum(w, seg, num_segments=n)
+
+
+# -- tiny MLP ----------------------------------------------------------------
+
+
+def init_mlp(key, dims: tuple[int, ...], dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, len(dims) - 1)
+    return {
+        "w": [init_dense(k, a, b, dtype) for k, a, b in zip(ks, dims[:-1], dims[1:])],
+        "b": [jnp.zeros((b,), dtype) for b in dims[1:]],
+    }
+
+
+def mlp_apply(p: dict, x, act=jax.nn.silu, final_act=False):
+    n = len(p["w"])
+    for i, (w, b) in enumerate(zip(p["w"], p["b"])):
+        x = x @ w + b
+        if i < n - 1 or final_act:
+            x = act(x)
+    return x
+
+
+def layer_norm(x, eps=1e-5):
+    m = x.mean(-1, keepdims=True)
+    v = x.var(-1, keepdims=True)
+    return (x - m) * jax.lax.rsqrt(v + eps)

@@ -1,0 +1,169 @@
+"""Mixture-of-Experts FFN with blockwise sort-based dispatch.
+
+Dispatch is the dropping formulation used by production EP systems, made
+SPMD-friendly by blocking: tokens are reshaped to [G, T/G, D] groups (G
+chosen to divide the data-parallel shard count), each group independently
+top-k routes, sorts its (token, k) pairs by expert and packs per-expert
+buffers of static capacity C = ceil(T_loc * top_k / E * capacity_factor).
+Every op is then *batched* over the group axis -- group-sharded sorts and
+gathers partition cleanly over the data axis (a single global sort/gather
+would be replicated by the SPMD partitioner), and the [G, E, C, D] expert
+buffers shard over groups x experts, which is exactly the all-to-all
+dataflow of expert parallelism.
+
+Capacity is per-group (the per-device capacity semantics of real EP
+implementations).  Router options: softmax-over-top-k renormalization
+(Mixtral) and the DeepSeek-V3 aux-loss-free selection bias.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.dist.sharding import BATCH, constrain
+from repro.models.common import init_dense
+
+
+def init_moe_params(key, d_model: int, cfg: MoEConfig, dtype=jnp.bfloat16) -> dict:
+    ks = jax.random.split(key, 5)
+    e, f = cfg.n_experts, cfg.d_ff_expert
+    p = {
+        "router": init_dense(ks[0], d_model, e, jnp.float32),
+        "we_gate": init_dense(ks[1], d_model, e * f, dtype).reshape(e, d_model, f),
+        "we_up": init_dense(ks[2], d_model, e * f, dtype).reshape(e, d_model, f),
+        "we_down": init_dense(ks[3], f, e * d_model, dtype).reshape(e, f, d_model),
+    }
+    if cfg.aux_free_bias:
+        p["router_bias"] = jnp.zeros((e,), jnp.float32)
+    if cfg.n_shared:
+        fs = f * cfg.n_shared
+        kss = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "w_gate": init_dense(kss[0], d_model, fs, dtype),
+            "w_up": init_dense(kss[1], d_model, fs, dtype),
+            "w_down": init_dense(kss[2], fs, d_model, dtype),
+        }
+    return p
+
+
+DISPATCH_GROUPS = 32  # target group count; actual = largest divisor of T
+
+
+def _n_groups(t: int) -> int:
+    g = min(DISPATCH_GROUPS, t)
+    while t % g:
+        g -= 1
+    return g
+
+
+def _capacity(t_loc: int, cfg: MoEConfig) -> int:
+    c = int(t_loc * cfg.top_k / cfg.n_experts * cfg.capacity_factor)
+    return max(4, (c + 3) // 4 * 4)
+
+
+def moe_ffn(
+    params, cfg: MoEConfig, x: jax.Array
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """x [T, D] -> (y [T, D], aux_loss scalar, expert load fraction [E])."""
+    t, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    g = _n_groups(t)
+    t_loc = t // g
+    cap = _capacity(t_loc, cfg)
+
+    xg = constrain(x.reshape(g, t_loc, d), BATCH, None, None)
+
+    # f32 router logits via dot accumulation -- casting xg would materialize
+    # a full f32 copy of the hidden states per MoE layer
+    logits = jnp.einsum(
+        "gtd,de->gte",
+        xg,
+        params["router"].astype(xg.dtype),
+        preferred_element_type=jnp.float32,
+    )
+    # aux-free bias steers *selection only* and is updated by the balancing
+    # pass (update_router_bias), never by gradients
+    sel_logits = logits + jax.lax.stop_gradient(params.get("router_bias", 0.0))
+    _, top_idx = jax.lax.top_k(sel_logits, k)  # [G, T_loc, K]
+    top_gate_logits = jnp.take_along_axis(logits, top_idx, axis=2)
+    probs = jax.nn.softmax(top_gate_logits, axis=-1)  # renormalized over top-k
+
+    # Switch-style load-balance aux (zero-weighted under aux-free bias)
+    full_probs = jax.nn.softmax(logits, axis=-1)
+    density = (
+        jnp.zeros((g, e))
+        .at[jnp.arange(g)[:, None], top_idx.reshape(g, -1)]
+        .add(1.0)
+        / (t_loc * k)
+    )
+    importance = full_probs.mean(axis=1)
+    aux = e * jnp.mean(jnp.sum(density * importance, axis=-1))
+
+    # ---- blockwise sort dispatch (vmapped over groups) ----------------------
+    # All D-wide tensors are capacity-buffer sized [G, E*C, D] (sharded over
+    # groups x experts); the only pair-sized arrays are int32/f32 index and
+    # probability vectors.  A [G, T_loc*K, D] pair gather would cost ~8x more
+    # and shard only over groups.
+    pair_expert = top_idx.reshape(g, t_loc * k)
+    pair_token = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(t_loc), k)[None], (g, t_loc * k)
+    )
+    pair_prob = probs.reshape(g, t_loc * k)
+
+    order = jnp.argsort(pair_expert, axis=1)
+    se = jnp.take_along_axis(pair_expert, order, axis=1)
+    st = jnp.take_along_axis(pair_token, order, axis=1)
+    sp = jnp.take_along_axis(pair_prob, order, axis=1)
+    starts = jax.vmap(lambda row: jnp.searchsorted(row, jnp.arange(e)))(se)
+    pos_in_e = jnp.arange(t_loc * k)[None] - jnp.take_along_axis(starts, se, axis=1)
+    keep = pos_in_e < cap
+    slot = jnp.where(keep, se * cap + pos_in_e, e * cap)  # drops -> scratch slot
+
+    # slot -> token indirection (t_loc = "empty, read the zero pad row")
+    token_of_slot = jax.vmap(
+        lambda sl, tok, kp: jnp.full((e * cap + 1,), t_loc, jnp.int32)
+        .at[sl]
+        .set(jnp.where(kp, tok, t_loc).astype(jnp.int32))
+    )(slot, st, keep)[:, :-1]
+    prob_of_slot = jax.vmap(
+        lambda sl, pp, kp: jnp.zeros((e * cap + 1,), jnp.float32)
+        .at[sl]
+        .add(pp * kp)
+    )(slot, sp, keep)[:, :-1]
+
+    xg_pad = jnp.concatenate([xg, jnp.zeros((g, 1, d), x.dtype)], axis=1)
+    xe = jnp.take_along_axis(xg_pad, token_of_slot[..., None], axis=1)
+    xe = constrain(xe.reshape(g, e, cap, d), BATCH, "model", None, None)
+
+    gate = jnp.einsum("gecd,edf->gecf", xe, params["we_gate"])
+    up = jnp.einsum("gecd,edf->gecf", xe, params["we_up"])
+    ye = jnp.einsum("gecf,efd->gecd", jax.nn.silu(gate) * up, params["we_down"])
+    ye = constrain(ye, BATCH, "model", None, None).reshape(g, e * cap, d)
+
+    contrib = ye * prob_of_slot[..., None].astype(x.dtype)
+    yg = jax.vmap(
+        lambda tok, cb: jnp.zeros((t_loc + 1, d), x.dtype).at[tok].add(cb)
+    )(token_of_slot, contrib)[:, :-1]
+    y = constrain(yg, BATCH, None, None).reshape(t, d)
+
+    if cfg.n_shared:
+        s = params["shared"]
+        gs = jnp.einsum("td,df->tf", x, s["w_gate"])
+        us = jnp.einsum("td,df->tf", x, s["w_up"])
+        y = y + jnp.einsum("tf,fd->td", jax.nn.silu(gs) * us, s["w_down"])
+
+    load = jax.lax.stop_gradient(density.mean(axis=0))  # fraction per expert
+    return y, aux, load
+
+
+def update_router_bias(bias: jax.Array, load: jax.Array, lr: float = 1e-3):
+    """DeepSeek-V3 aux-free balancing: nudge the per-expert selection bias
+    against the observed load fraction (buffer update outside the gradient
+    path; ``load`` is the fraction returned by moe_ffn, possibly stacked over
+    layers -- the update broadcasts)."""
+    target = load.mean(axis=-1, keepdims=True)
+    return bias + lr * jnp.sign(target - load)

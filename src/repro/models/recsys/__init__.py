@@ -1,0 +1,1 @@
+"""RecSys: sparse embedding tables + feature interaction + MLP."""

@@ -1,0 +1,55 @@
+"""EmbeddingBag in JAX: ``jnp.take`` + ``jax.ops.segment_sum``.
+
+JAX has no native nn.EmbeddingBag; this IS the system's sparse-lookup layer.
+Tables are stored as one [n_fields, vocab, dim] array so the vocab axis
+shards over the model mesh axis (row-sharded embedding, the standard
+recsys layout).  Multi-hot bags reduce with sum/mean over the bag axis.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import init_dense
+
+
+def init_embedding_tables(key, n_fields: int, vocab: int, dim: int, dtype=jnp.float32):
+    scale = 1.0 / jnp.sqrt(dim)
+    return (
+        jax.random.normal(key, (n_fields, vocab, dim), jnp.float32) * scale
+    ).astype(dtype)
+
+
+def embedding_bag(
+    tables: jax.Array,  # [F, V, D]
+    ids: jax.Array,  # [B, F, H] int32 (H = multi-hot bag size)
+    *,
+    weights: jax.Array | None = None,  # [B, F, H] per-sample weights
+    mode: str = "sum",
+) -> jax.Array:
+    """-> [B, F, D].  Gather rows then reduce the bag axis."""
+    b, f, hh = ids.shape
+    # gather: per-field take. vmap over the field axis keeps the lookup as a
+    # single gather per table shard (sharding-friendly).
+    gathered = jax.vmap(lambda t, i: jnp.take(t, i, axis=0), in_axes=(0, 1), out_axes=1)(
+        tables, ids
+    )  # [B, F, H, D]
+    if weights is not None:
+        gathered = gathered * weights[..., None]
+    if mode == "sum":
+        return gathered.sum(axis=2)
+    if mode == "mean":
+        return gathered.mean(axis=2)
+    raise ValueError(mode)
+
+
+def embedding_bag_segment(
+    table: jax.Array,  # [V, D] one flat table
+    flat_ids: jax.Array,  # [NNZ]
+    bag_ids: jax.Array,  # [NNZ] -> which output row
+    n_bags: int,
+) -> jax.Array:
+    """Ragged EmbeddingBag: explicit take + segment_sum (CSR-offsets style)."""
+    rows = jnp.take(table, flat_ids, axis=0)
+    return jax.ops.segment_sum(rows, bag_ids, num_segments=n_bags)

@@ -1,0 +1,246 @@
+"""Decoder-only LM covering the 5 assigned transformer architectures:
+dense GQA (granite, mistral-nemo, tinyllama), MoE+SWA (mixtral), and
+MLA+MoE+MTP (deepseek-v3).
+
+Layer parameters are stacked on a leading layer axis and consumed via
+``jax.lax.scan`` so the 40-61-layer full configs lower to a compact HLO
+(compile time and code size stay bounded for the 512-device dry-run).
+Mixed layer types (DeepSeek's leading dense layers before the MoE stack) are
+two consecutive scans.  ``remat`` wraps the layer body for training.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LMConfig
+from repro.dist.sharding import BATCH, constrain
+from repro.models import attention as attn
+from repro.models.common import cross_entropy_loss, init_dense, rms_norm, swiglu
+from repro.models.moe import init_moe_params, moe_ffn
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_layer(key, cfg: LMConfig, *, is_moe: bool, dtype=jnp.bfloat16) -> dict:
+    ka, kf = jax.random.split(key)
+    p: dict[str, Any] = {
+        "attn_norm": jnp.ones((cfg.d_model,), dtype),
+        "ffn_norm": jnp.ones((cfg.d_model,), dtype),
+        "attn": (
+            attn.init_mla_params(ka, cfg, dtype)
+            if cfg.mla
+            else attn.init_gqa_params(ka, cfg, dtype)
+        ),
+    }
+    if is_moe:
+        p["moe"] = init_moe_params(kf, cfg.d_model, cfg.moe, dtype)
+    else:
+        ks = jax.random.split(kf, 3)
+        p["mlp"] = {
+            "w_gate": init_dense(ks[0], cfg.d_model, cfg.d_ff, dtype),
+            "w_up": init_dense(ks[1], cfg.d_model, cfg.d_ff, dtype),
+            "w_down": init_dense(ks[2], cfg.d_ff, cfg.d_model, dtype),
+        }
+    return p
+
+
+def init_lm_params(key, cfg: LMConfig, dtype=jnp.bfloat16) -> dict:
+    keys = jax.random.split(key, 6)
+    n_dense = cfg.first_k_dense if cfg.moe else cfg.n_layers
+    n_moe = cfg.n_moe_layers
+    params: dict[str, Any] = {
+        "embed": init_dense(keys[0], cfg.vocab, cfg.d_model, dtype),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = init_dense(keys[1], cfg.d_model, cfg.vocab, dtype)
+    if n_dense:
+        lk = jax.random.split(keys[2], n_dense)
+        params["dense_layers"] = jax.vmap(
+            lambda k: _init_layer(k, cfg, is_moe=False, dtype=dtype)
+        )(lk)
+    if n_moe:
+        lk = jax.random.split(keys[3], n_moe)
+        params["moe_layers"] = jax.vmap(
+            lambda k: _init_layer(k, cfg, is_moe=True, dtype=dtype)
+        )(lk)
+    if cfg.mtp_depth:
+        params["mtp"] = {
+            "proj": init_dense(keys[4], 2 * cfg.d_model, cfg.d_model, dtype),
+            "layer": _init_layer(keys[5], cfg, is_moe=False, dtype=dtype),
+            "norm": jnp.ones((cfg.d_model,), dtype),
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _layer_fwd(cfg: LMConfig, layer, x, *, is_moe: bool):
+    # only pin the residual stream when SP is requested: an unconditional
+    # (batch, None, None) constraint forces model-axis replication of the
+    # activations and costs ~3x temp on the big configs (s.Perf, refuted)
+    if cfg.sp_residual:
+        x = constrain(x, BATCH, None, "model")
+    h = x + (
+        attn.mla_forward(layer["attn"], cfg, rms_norm(x, layer["attn_norm"]))
+        if cfg.mla
+        else attn.gqa_forward(layer["attn"], cfg, rms_norm(x, layer["attn_norm"]))
+    )
+    hn = rms_norm(h, layer["ffn_norm"])
+    if is_moe:
+        b, s, d = hn.shape
+        y, aux, load = moe_ffn(layer["moe"], cfg.moe, hn.reshape(b * s, d))
+        out = h + y.reshape(b, s, d)
+    else:
+        m = layer["mlp"]
+        out = h + swiglu(hn, m["w_gate"], m["w_up"], m["w_down"])
+        aux = jnp.float32(0.0)
+        load = jnp.zeros((cfg.moe.n_experts,)) if cfg.moe else jnp.zeros((1,))
+    if cfg.sp_residual:
+        out = constrain(out, BATCH, None, "model")
+    return out, (aux, load)
+
+
+def _scan_layers(cfg: LMConfig, stacked, x, *, is_moe: bool):
+    body = functools.partial(_layer_fwd, cfg, is_moe=is_moe)
+
+    def step(carry, layer):
+        y, (aux, load) = body(layer, carry)
+        return y, (aux, load)
+
+    if cfg.remat:
+        step = jax.checkpoint(step)
+    x, (auxs, loads) = jax.lax.scan(step, x, stacked)
+    return x, auxs.sum(), loads
+
+
+def lm_hidden(params, cfg: LMConfig, tokens: jax.Array):
+    """tokens [B,S] -> (hidden [B,S,D], aux scalar, moe loads [L_moe, E])."""
+    x = constrain(params["embed"][tokens], BATCH, None, None)
+    aux = jnp.float32(0.0)
+    loads = None
+    if "dense_layers" in params:
+        x, a, _ = _scan_layers(cfg, params["dense_layers"], x, is_moe=False)
+        aux += a
+    if "moe_layers" in params:
+        x, a, loads = _scan_layers(cfg, params["moe_layers"], x, is_moe=True)
+        aux += a
+    return x, aux, loads
+
+
+def _logits(params, cfg: LMConfig, h: jax.Array):
+    h = rms_norm(h, params["final_norm"])
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    # logits sharded batch x vocab: the fp32 CE path stays distributed (a
+    # replicated [B,S,V] fp32 tensor would be ~100 GiB/device at train_4k)
+    return constrain(jnp.einsum("bsd,dv->bsv", h, head), BATCH, None, "model")
+
+
+def lm_forward(params, cfg: LMConfig, tokens: jax.Array):
+    h, aux, _ = lm_hidden(params, cfg, tokens)
+    return _logits(params, cfg, h), aux
+
+
+def lm_loss(params, cfg: LMConfig, tokens: jax.Array) -> jax.Array:
+    """Next-token CE (+ MoE aux + MTP loss).  tokens [B, S+1]."""
+    loss, _ = lm_loss_and_stats(params, cfg, tokens)
+    return loss
+
+
+def lm_loss_and_stats(params, cfg: LMConfig, tokens: jax.Array):
+    """(loss, stats) -- stats carries per-layer expert loads for the
+    DeepSeek-V3 aux-free bias balancing pass in the train step."""
+    inp, labels = tokens[:, :-1], tokens[:, 1:]
+    h, aux, loads = lm_hidden(params, cfg, inp)
+    loss = cross_entropy_loss(_logits(params, cfg, h), labels)
+    if cfg.moe and not cfg.moe.aux_free_bias:
+        loss = loss + cfg.moe.router_aux_weight * aux
+    if cfg.mtp_depth:
+        # DeepSeek-V3 MTP (depth 1): predict t+2 from h_t combined with the
+        # embedding of token t+1 through one extra transformer block.  The
+        # shifted stream is one token short; keep S by treating position 0 as
+        # padding (masked out of the MTP loss) so the MTP block runs at the
+        # same chunk-aligned sequence length as the trunk (an S-1 length
+        # would fall back to dense S x S attention -- see EXPERIMENTS s.Perf).
+        mtp = params["mtp"]
+        emb_next = params["embed"][jnp.roll(inp, -1, axis=1)]
+        z = jnp.concatenate([h, emb_next], axis=-1)
+        z = jnp.einsum("bsd,dk->bsk", z, mtp["proj"])
+        z, _ = _layer_fwd(cfg, mtp["layer"], z, is_moe=False)
+        mtp_logits = _logits(params, cfg, rms_norm(z, mtp["norm"]))
+        loss = loss + 0.3 * cross_entropy_loss(
+            mtp_logits[:, :-1], labels[:, 1:]
+        )
+    return loss, {"moe_loads": loads}
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+
+def init_lm_cache(cfg: LMConfig, batch: int, cache_len: int, dtype=jnp.bfloat16):
+    """Stacked per-layer KV caches.  SWA archs get ring buffers of window
+    size (the sub-quadratic memory win for long_500k)."""
+    if cfg.sliding_window is not None:
+        cache_len = min(cache_len, cfg.sliding_window)
+    mk = (
+        functools.partial(attn.init_mla_cache, cfg, batch, cache_len, dtype)
+        if cfg.mla
+        else functools.partial(attn.init_gqa_cache, cfg, batch, cache_len, dtype)
+    )
+    out = {}
+    n_dense = cfg.first_k_dense if cfg.moe else cfg.n_layers
+    if n_dense:
+        out["dense"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n_dense,) + x.shape), mk()
+        )
+    if cfg.n_moe_layers:
+        out["moe"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (cfg.n_moe_layers,) + x.shape), mk()
+        )
+    return out
+
+
+def lm_decode_step(params, cfg: LMConfig, cache, tokens: jax.Array, pos):
+    """One decode step.  tokens [B,1] int32, pos scalar -> (logits, cache)."""
+    x = params["embed"][tokens]
+    dec = attn.mla_decode if cfg.mla else attn.gqa_decode
+
+    def make_step(is_moe):
+        def step(x, scanned):
+            layer, lcache = scanned
+            h_in = rms_norm(x, layer["attn_norm"])
+            a, new_cache = dec(layer["attn"], cfg, h_in, lcache, pos)
+            h = x + a
+            hn = rms_norm(h, layer["ffn_norm"])
+            if is_moe:
+                b, s, d = hn.shape
+                y, _, _ = moe_ffn(layer["moe"], cfg.moe, hn.reshape(b * s, d))
+                return h + y.reshape(b, s, d), new_cache
+            m = layer["mlp"]
+            return h + swiglu(hn, m["w_gate"], m["w_up"], m["w_down"]), new_cache
+
+        return step
+
+    new_cache = {}
+    if "dense_layers" in params:
+        x, new_cache["dense"] = jax.lax.scan(
+            make_step(False), x, (params["dense_layers"], cache["dense"])
+        )
+    if "moe_layers" in params:
+        x, new_cache["moe"] = jax.lax.scan(
+            make_step(True), x, (params["moe_layers"], cache["moe"])
+        )
+    return _logits(params, cfg, x), new_cache

@@ -1,0 +1,73 @@
+"""Functional AdamW with global-norm clipping (no optax dependency).
+
+Moment dtype is configurable: fp32 (default) or bf16 moments -- the latter
+halves optimizer bytes/device, the distributed-memory trick recorded in
+EXPERIMENTS.md for the 671B config.  Optimizer state shards exactly like the
+parameters (same pytree structure), so pjit lays it out with the params.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    moment_dtype: Any = jnp.float32
+
+
+def adamw_init(params, cfg: AdamWConfig):
+    zeros = lambda p: jnp.zeros(p.shape, cfg.moment_dtype)
+    return {
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(params, grads, state, cfg: AdamWConfig):
+    count = state["count"] + 1
+    gnorm = jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))
+    )
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+
+    bc1 = 1 - cfg.b1 ** count.astype(jnp.float32)
+    bc2 = 1 - cfg.b2 ** count.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * scale
+        mu32 = cfg.b1 * mu.astype(jnp.float32) + (1 - cfg.b1) * g
+        nu32 = cfg.b2 * nu.astype(jnp.float32) + (1 - cfg.b2) * g * g
+        step = (mu32 / bc1) / (jnp.sqrt(nu32 / bc2) + cfg.eps)
+        if p.ndim >= 2:  # standard: no decay on norms/biases/router buffers
+            step = step + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = p.astype(jnp.float32) - cfg.lr * step
+        return (
+            new_p.astype(p.dtype),
+            mu32.astype(cfg.moment_dtype),
+            nu32.astype(cfg.moment_dtype),
+        )
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_mu = treedef.flatten_up_to(state["mu"])
+    flat_nu = treedef.flatten_up_to(state["nu"])
+    out = [upd(p, g, m, n) for p, g, m, n in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_params = treedef.unflatten([o[0] for o in out])
+    new_state = {
+        "mu": treedef.unflatten([o[1] for o in out]),
+        "nu": treedef.unflatten([o[2] for o in out]),
+        "count": count,
+    }
+    return new_params, new_state, gnorm

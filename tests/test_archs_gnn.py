@@ -1,0 +1,121 @@
+"""Per-GNN-arch smoke tests: reduced configs, one forward + train step,
+shapes + finiteness + equivariance where the arch claims it."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.configs.registry import reduced_config
+from repro.graph.generators import erdos_renyi_graph
+from repro.models.gnn.dimenet import build_triplets, dimenet_forward, init_dimenet
+from repro.models.gnn.e3 import gaunt_tensor, rotation_matrix
+from repro.models.gnn.mace import init_mace, mace_forward
+from repro.models.gnn.meshgraphnet import init_mgn, mgn_forward
+from repro.models.gnn.pna import init_pna, pna_forward
+
+
+@pytest.fixture(scope="module")
+def graph():
+    g = erdos_renyi_graph(80, 6.0, seed=3)
+    key = jax.random.PRNGKey(1)
+    return dict(
+        g=g,
+        src=jnp.asarray(g.src),
+        dst=jnp.asarray(g.dst),
+        pos=jax.random.normal(key, (80, 3)),
+        species=jax.random.randint(key, (80,), 0, 10),
+        feats=jax.random.normal(key, (80, 12)),
+        key=key,
+    )
+
+
+def test_pna_forward_and_grad(graph):
+    cfg = reduced_config(ARCHS["pna"])
+    p = init_pna(graph["key"], cfg, 12, 5)
+    out = pna_forward(p, cfg, graph["feats"], graph["src"], graph["dst"])
+    assert out.shape == (80, 5)
+    assert np.isfinite(np.asarray(out)).all()
+    labels = jax.random.randint(graph["key"], (80,), 0, 5)
+
+    def loss(p):
+        lg = pna_forward(p, cfg, graph["feats"], graph["src"], graph["dst"])
+        return -jnp.mean(jax.nn.log_softmax(lg)[jnp.arange(80), labels])
+
+    g = jax.grad(loss)(p)
+    assert all(np.isfinite(np.asarray(x)).all() for x in jax.tree.leaves(g))
+
+
+def test_pna_all_aggregator_scaler_combos_used(graph):
+    cfg = reduced_config(ARCHS["pna"])
+    assert len(cfg.extra["aggregators"]) * len(cfg.extra["scalers"]) == 12
+
+
+def test_meshgraphnet_forward(graph):
+    cfg = reduced_config(ARCHS["meshgraphnet"])
+    ef = jax.random.normal(graph["key"], (graph["g"].n_edges, 4))
+    p = init_mgn(graph["key"], cfg, 12, 4, 3)
+    out = mgn_forward(p, cfg, graph["feats"], ef, graph["src"], graph["dst"])
+    assert out.shape == (80, 3)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+def test_mace_e3_invariance(graph):
+    cfg = reduced_config(ARCHS["mace"])
+    p = init_mace(graph["key"], cfg)
+    e1 = mace_forward(p, cfg, graph["species"], graph["pos"], graph["src"], graph["dst"])
+    assert np.isfinite(np.asarray(e1)).all()
+    for angle, axis in [(0.7, [1.0, 2.0, 3.0]), (2.1, [0.0, 1.0, 0.0])]:
+        r = jnp.asarray(rotation_matrix(np.array(axis), angle), jnp.float32)
+        e2 = mace_forward(
+            p, cfg, graph["species"], graph["pos"] @ r.T + 5.0, graph["src"], graph["dst"]
+        )
+        np.testing.assert_allclose(np.asarray(e1), np.asarray(e2), rtol=2e-5)
+
+
+def test_gaunt_tensor_known_values():
+    g = gaunt_tensor()
+    # Y_1x * Y_1x = 1/3 Y_00 + ... (x^2 integrates to 4pi/3; norm Y00 = 4pi)
+    np.testing.assert_allclose(g[1, 1, 0], 1 / 3, rtol=1e-12)
+    # x * y couples only to the xy harmonic
+    np.testing.assert_allclose(g[1, 2, 4], 1 / np.sqrt(3), rtol=1e-12)
+    assert g[1, 2, 0] == 0.0
+    # parity: (l=1 x l=1) cannot produce l=1
+    assert np.abs(g[1:4, 1:4, 1:4]).max() == 0.0
+
+
+def test_dimenet_forward_batched(graph):
+    cfg = reduced_config(ARCHS["dimenet"])
+    g = graph["g"]
+    kj, ji, tmask = build_triplets(g.src, g.dst, 1500)
+    p = init_dimenet(graph["key"], cfg)
+    graph_id = (jnp.arange(80) >= 40).astype(jnp.int32)  # two fake graphs
+    out = dimenet_forward(
+        p,
+        cfg,
+        graph["species"],
+        graph["pos"],
+        graph["src"],
+        graph["dst"],
+        jnp.asarray(kj),
+        jnp.asarray(ji),
+        trip_mask=jnp.asarray(tmask),
+        graph_id=graph_id,
+        n_graphs=2,
+    )
+    assert out.shape == (2, 1)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+def test_dimenet_rotation_invariance(graph):
+    """Distances + angles only -> rotation invariant by construction."""
+    cfg = reduced_config(ARCHS["dimenet"])
+    g = graph["g"]
+    kj, ji, tmask = build_triplets(g.src, g.dst, 1500)
+    p = init_dimenet(graph["key"], cfg)
+    args = (graph["species"], graph["src"], graph["dst"], jnp.asarray(kj), jnp.asarray(ji))
+    e1 = dimenet_forward(p, cfg, args[0], graph["pos"], *args[1:], trip_mask=jnp.asarray(tmask))
+    r = jnp.asarray(rotation_matrix(np.array([1.0, 0.5, -1.0]), 1.1), jnp.float32)
+    e2 = dimenet_forward(p, cfg, args[0], graph["pos"] @ r.T, *args[1:], trip_mask=jnp.asarray(tmask))
+    np.testing.assert_allclose(np.asarray(e1), np.asarray(e2), rtol=2e-5)

@@ -1,0 +1,125 @@
+"""Billing + activation tests (paper s4.3 cost model, s5.2 activation)."""
+
+import math
+
+import numpy as np
+
+from repro.core.activation import plan_sessions
+from repro.core.billing import BillingModel, evaluate
+from repro.core.placement import (
+    default_placement,
+    ffd_placement,
+    mfp_placement,
+    opt_placement,
+)
+from repro.core.timing import TimeFunction
+
+
+def _tf(rows):
+    return TimeFunction(np.asarray(rows, dtype=np.float64))
+
+
+def test_default_cost_formula():
+    """Paper s5.1: Gamma = n * ceil(T_Min / delta) * gamma."""
+    tf = _tf([[30.0, 10.0], [20.0, 25.0], [40.0, 5.0]])  # T_Min = 30+25+40 = 95
+    r = evaluate(default_placement(tf), BillingModel(delta=60.0))
+    assert r.makespan == 95.0
+    assert r.cost_quanta == 2 * math.ceil(95 / 60)  # = 4
+    assert r.core_secs == 2 * 95.0
+
+
+def test_opt_makespan_equals_tmin():
+    rng = np.random.default_rng(0)
+    tau = rng.uniform(0, 30, (5, 8)) * (rng.random((5, 8)) > 0.3)
+    tf = TimeFunction(tau)
+    for strat in (opt_placement, ffd_placement):
+        r = evaluate(strat(tf))
+        assert abs(r.makespan - tf.t_min()) < 1e-9
+
+
+def test_gamma_bounds_hold():
+    rng = np.random.default_rng(1)
+    for seed in range(10):
+        rng = np.random.default_rng(seed)
+        tau = rng.uniform(0, 80, (6, 7)) * (rng.random((6, 7)) > 0.4)
+        if tau.sum() == 0:
+            continue
+        tf = TimeFunction(tau)
+        for strat in (opt_placement, ffd_placement, mfp_placement):
+            r = evaluate(strat(tf), BillingModel(activation_rule="exact_greedy"))
+            assert r.gamma_min_quanta <= r.cost_quanta, (strat, seed)
+
+
+def test_activation_keeps_vm_through_short_gap():
+    """Paper's example: busy s0, idle s1 (<= delta), busy s2 -> one session."""
+    busy = np.array([[10.0], [0.0], [10.0]])
+    durations = np.array([10.0, 30.0, 10.0])
+    s = plan_sessions(busy, durations, delta=60.0, rule="gap_le_delta")
+    assert len(s.sessions[0]) == 1
+    assert s.sessions[0][0] == 50.0  # 10 + 30 + 10
+    assert s.n_starts == 1
+
+
+def test_activation_terminates_across_long_gap():
+    busy = np.array([[10.0], [0.0], [10.0]])
+    durations = np.array([10.0, 90.0, 10.0])  # gap 90 > delta 60
+    s = plan_sessions(busy, durations, delta=60.0, rule="gap_le_delta")
+    assert len(s.sessions[0]) == 2
+    assert s.n_starts == 2
+    assert s.billed_quanta(60.0) == 2
+
+
+def test_exact_greedy_never_worse_than_extremes():
+    rng = np.random.default_rng(7)
+    for _ in range(25):
+        m, j = rng.integers(2, 8), rng.integers(1, 5)
+        busy = rng.uniform(0, 50, (m, j)) * (rng.random((m, j)) > 0.5)
+        durations = busy.max(axis=1) + rng.uniform(0, 5, m)
+        q = {
+            rule: plan_sessions(busy, durations, 60.0, rule=rule).billed_quanta(60.0)
+            for rule in ("exact_greedy", "always_stop", "always_keep")
+        }
+        assert q["exact_greedy"] <= max(q["always_stop"], q["always_keep"])
+
+
+def test_opt_dm_adds_movement_cost():
+    rng = np.random.default_rng(2)
+    tau = rng.uniform(10, 40, (4, 6)) * (rng.random((4, 6)) > 0.3)
+    tf = TimeFunction(tau)
+    p = opt_placement(tf)
+    bytes_per_part = np.full(6, 500e6)  # 500 MB partitions
+    model = BillingModel(move_bandwidth=50e6)
+    r_plain = evaluate(p, model)
+    r_dm = evaluate(p, model, data_movement=True, partition_bytes=bytes_per_part)
+    assert r_dm.makespan > r_plain.makespan
+    assert r_dm.data_move_secs > 0
+    assert r_dm.cost_quanta >= r_plain.cost_quanta
+
+
+def test_move_skip_same_vm_reduces_movement():
+    tau = np.array([[10.0, 5.0], [10.0, 5.0]])
+    p = mfp_placement(TimeFunction(tau))  # pinned: same VM both supersteps
+    b = np.full(2, 100e6)
+    naive = evaluate(
+        p, BillingModel(move_bandwidth=50e6), data_movement=True, partition_bytes=b
+    )
+    smart = evaluate(
+        p,
+        BillingModel(move_bandwidth=50e6, move_skip_same_vm=True),
+        data_movement=True,
+        partition_bytes=b,
+    )
+    assert smart.data_move_secs < naive.data_move_secs
+
+
+def test_under_utilization_definition():
+    # one VM, one partition, fully busy => zero under-utilization
+    tf = _tf([[10.0]])
+    r = evaluate(opt_placement(tf))
+    assert r.under_util_secs == 0.0
+    # two partitions on separate VMs, unbalanced => slack on the fast VM
+    tf2 = _tf([[10.0, 4.0]])
+    p2 = opt_placement(tf2)
+    r2 = evaluate(p2)
+    if r2.peak_vms == 2:
+        assert abs(r2.under_util_secs - 6.0) < 1e-9

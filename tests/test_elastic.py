@@ -1,0 +1,60 @@
+"""Elastic executor integration tests."""
+
+import numpy as np
+
+from repro.core import TimeFunction, ffd_placement, mfp_placement, default_placement
+from repro.core.elastic import ElasticBSPExecutor
+from repro.graph import bfs_grow_partition, erdos_renyi_graph, road_grid_graph
+from repro.graph.bsp import run_sssp
+from repro.graph.traversal import reference_sssp
+
+
+def _plan_from_trace(pg, source, strategy):
+    _, trace = run_sssp(pg, source)
+    tf = TimeFunction.from_trace(trace)
+    return strategy(tf), tf
+
+
+def test_executor_distances_correct_under_any_plan():
+    g = erdos_renyi_graph(300, 5.0, seed=21)
+    pg = bfs_grow_partition(g, 4, seed=1)
+    ref = reference_sssp(pg, 0)
+    ex = ElasticBSPExecutor(pg)
+    for strategy in (default_placement, ffd_placement, mfp_placement):
+        plan, _ = _plan_from_trace(pg, 0, strategy)
+        rep = ex.run(0, plan)
+        np.testing.assert_allclose(rep.dist, ref)
+        assert rep.cost.cost_quanta >= 1
+
+
+def test_pinned_plan_causes_no_migrations():
+    g = road_grid_graph(25, 25, seed=2)
+    pg = bfs_grow_partition(g, 6, seed=3)
+    ex = ElasticBSPExecutor(pg)
+    plan, _ = _plan_from_trace(pg, 0, mfp_placement)
+    rep = ex.run(0, plan)
+    assert rep.n_migrations == 0
+
+
+def test_ffd_plan_may_migrate_but_executes():
+    g = road_grid_graph(25, 25, seed=2)
+    pg = bfs_grow_partition(g, 6, seed=3)
+    ex = ElasticBSPExecutor(pg)
+    plan, tf = _plan_from_trace(pg, 0, ffd_placement)
+    rep = ex.run(0, plan)
+    assert rep.n_supersteps == tf.n_supersteps
+
+
+def test_replan_recovers_from_bad_prediction():
+    """Feed the executor a plan for the wrong source; dynamic re-planning
+    (beyond-paper, the paper's s7 future work) must still execute correctly."""
+    g = erdos_renyi_graph(400, 4.0, seed=5)
+    pg = bfs_grow_partition(g, 5, seed=6)
+    wrong_source = 7
+    real_source = 200
+    plan, _ = _plan_from_trace(pg, wrong_source, ffd_placement)
+    ex = ElasticBSPExecutor(pg)
+    rep = ex.run(real_source, plan, strategy_fn=ffd_placement, replan=True)
+    ref = reference_sssp(pg, real_source)
+    np.testing.assert_allclose(rep.dist, ref)
+    assert rep.replans >= 1

@@ -1,0 +1,181 @@
+"""Pallas kernel validation (interpret=True on CPU): shape/dtype sweeps
+against the pure-jnp oracles + hypothesis property tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.bfs_relax import bfs_relax, reference_bfs_relax
+from repro.kernels.flash_attention import flash_attention, reference_attention
+from repro.kernels.segment_sum import reference_segment_sum, sorted_segment_sum
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+FLASH_CASES = [
+    # (b, s, h, hk, d, window, dtype)
+    (2, 256, 4, 2, 64, None, jnp.float32),
+    (1, 128, 2, 2, 128, None, jnp.float32),
+    (2, 256, 4, 4, 64, 64, jnp.float32),
+    (1, 160, 2, 1, 48, None, jnp.float32),  # ragged S, MQA, odd head dim
+    (1, 512, 8, 2, 64, 128, jnp.float32),
+    (2, 256, 4, 2, 64, None, jnp.bfloat16),
+    (1, 384, 6, 3, 96, None, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("case", FLASH_CASES)
+def test_flash_attention_vs_oracle(case):
+    b, s, h, hk, d, win, dtype = case
+    q = jax.random.normal(KEY, (b, s, h, d), dtype)
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (b, s, hk, d), dtype)
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (b, s, hk, d), dtype)
+    out = flash_attention(q, k, v, window=win, interpret=True)
+    ref = reference_attention(q, k, v, window=win)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), atol=tol, rtol=tol
+    )
+
+
+def test_flash_attention_block_size_invariance():
+    q = jax.random.normal(KEY, (1, 256, 2, 64))
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (1, 256, 2, 64))
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (1, 256, 2, 64))
+    outs = [
+        np.asarray(flash_attention(q, k, v, block_q=bq, block_k=bk, interpret=True))
+        for bq, bk in [(64, 64), (128, 64), (64, 128), (256, 256)]
+    ]
+    for o in outs[1:]:
+        np.testing.assert_allclose(outs[0], o, atol=1e-5, rtol=1e-5)
+
+
+def test_flash_attention_noncausal():
+    q = jax.random.normal(KEY, (1, 128, 2, 64))
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (1, 128, 2, 64))
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (1, 128, 2, 64))
+    out = flash_attention(q, k, v, causal=False, interpret=True)
+    ref = reference_attention(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# segment sum
+# ---------------------------------------------------------------------------
+
+SEG_CASES = [
+    # (E, D, N, dtype, skew)
+    (1024, 64, 256, jnp.float32, "uniform"),
+    (2048, 128, 512, jnp.float32, "powerlaw"),
+    (777, 32, 100, jnp.float32, "uniform"),  # ragged everything
+    (1024, 16, 64, jnp.bfloat16, "uniform"),
+    (4096, 75, 512, jnp.float32, "powerlaw"),  # PNA width
+    (512, 10, 1000, jnp.float32, "uniform"),  # recsys embed dim, sparse rows
+]
+
+
+def _ids(e, n, skew, seed=0):
+    rng = np.random.default_rng(seed)
+    if skew == "powerlaw":
+        raw = rng.zipf(1.5, e) % n
+    else:
+        raw = rng.integers(0, n, e)
+    return jnp.asarray(raw, jnp.int32)
+
+
+@pytest.mark.parametrize("case", SEG_CASES)
+def test_segment_sum_vs_oracle(case):
+    e, d, n, dtype, skew = case
+    ids = _ids(e, n, skew)
+    vals = jax.random.normal(KEY, (e, d), dtype)
+    out = sorted_segment_sum(ids, vals, n, interpret=True)
+    ref = reference_segment_sum(ids, vals, n)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=tol, rtol=tol)
+
+
+@given(
+    e=st.integers(8, 600),
+    n=st.integers(4, 300),
+    d=st.sampled_from([4, 16, 33]),
+    seed=st.integers(0, 10_000),
+)
+@settings(max_examples=20, deadline=None)
+def test_segment_sum_property(e, n, d, seed):
+    ids = _ids(e, n, "uniform", seed)
+    vals = jax.random.normal(jax.random.PRNGKey(seed), (e, d))
+    out = sorted_segment_sum(ids, vals, n, interpret=True)
+    ref = reference_segment_sum(ids, vals, n)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# bfs relax
+# ---------------------------------------------------------------------------
+
+RELAX_CASES = [
+    (512, 2048, 0.1),
+    (1000, 5000, 0.5),
+    (100, 300, 1.0),
+    (4096, 16384, 0.05),
+]
+
+
+@pytest.mark.parametrize("case", RELAX_CASES)
+def test_bfs_relax_vs_oracle(case):
+    n, e, frontier_frac = case
+    rng = np.random.default_rng(n + e)
+    src = jnp.asarray(rng.integers(0, n, e), jnp.int32)
+    dst = jnp.asarray(rng.integers(0, n, e), jnp.int32)
+    w = jnp.asarray(rng.uniform(0.5, 2.0, e), jnp.float32)
+    dist = jnp.asarray(
+        np.where(rng.random(n) < 0.5, rng.uniform(0, 10, n), np.inf), jnp.float32
+    )
+    frontier = jnp.asarray(rng.random(n) < frontier_frac)
+    out = bfs_relax(dist, frontier, src, dst, w, interpret=True)
+    ref = reference_bfs_relax(dist, frontier, src, dst, w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-6, rtol=1e-6)
+
+
+def test_bfs_relax_full_traversal_matches_engine():
+    """Iterating the kernel to fixpoint must produce exact SSSP distances."""
+    from repro.graph.generators import erdos_renyi_graph, weighted
+    from repro.graph.traversal import reference_sssp
+    from repro.graph.partition import hash_partition
+
+    g = weighted(erdos_renyi_graph(300, 5.0, seed=3), seed=1)
+    src = jnp.asarray(g.src)
+    dst = jnp.asarray(g.dst)
+    w = jnp.asarray(g.edge_weights)
+    n = g.n_vertices
+    dist = jnp.full((n,), jnp.inf).at[0].set(0.0)
+    frontier = jnp.zeros((n,), bool).at[0].set(True)
+    for _ in range(n):
+        new = bfs_relax(dist, frontier, src, dst, w, interpret=True)
+        frontier = new < dist
+        if not bool(frontier.any()):
+            break
+        dist = new
+    ref = reference_sssp(hash_partition(g, 2), 0)
+    np.testing.assert_allclose(np.asarray(dist), ref, rtol=1e-6)
+
+
+def test_bfs_relax_empty_frontier_is_identity():
+    n, e = 128, 512
+    rng = np.random.default_rng(0)
+    dist = jnp.asarray(rng.uniform(0, 5, n), jnp.float32)
+    out = bfs_relax(
+        dist,
+        jnp.zeros((n,), bool),
+        jnp.asarray(rng.integers(0, n, e), jnp.int32),
+        jnp.asarray(rng.integers(0, n, e), jnp.int32),
+        jnp.ones((e,), jnp.float32),
+        interpret=True,
+    )
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(dist))

@@ -1,0 +1,77 @@
+"""Metagraph construction + a-priori prediction tests (paper s3.2)."""
+
+import numpy as np
+
+from repro.core.metagraph import (
+    build_metagraph,
+    meta_bfs_levels,
+    predict_schedule,
+    predict_time_function,
+)
+from repro.graph import bfs_grow_partition, erdos_renyi_graph, road_grid_graph, rmat_graph
+from repro.graph.bsp import run_sssp
+
+
+def _first_actual(trace):
+    first = {}
+    for s, sgs in enumerate(trace.active_subgraphs):
+        for sg in sgs:
+            first.setdefault(int(sg), s + 1)
+    return first
+
+
+def test_metagraph_counts_match_partitioned_graph():
+    g = erdos_renyi_graph(400, 5.0, seed=1)
+    pg = bfs_grow_partition(g, 4, seed=2)
+    mg = build_metagraph(pg)
+    assert mg.n_meta == pg.n_subgraphs
+    assert mg.n_vertices.sum() == g.n_vertices
+    assert mg.n_local_edges.sum() == pg.n_local_edges
+    assert mg.mweight.sum() == pg.n_remote_edges
+    # paper: metagraph is orders of magnitude smaller than the graph
+    assert mg.n_meta < g.n_vertices / 2
+
+
+def test_first_visit_prediction_is_exact_bfs():
+    """Paper claim (s3.2): given the source subgraph, the metagraph BFS
+    determines exactly the superstep at which a subgraph is first visited."""
+    for g, k, src in [
+        (road_grid_graph(40, 40, seed=3), 8, 0),
+        (erdos_renyi_graph(600, 4.0, seed=4), 6, 10),
+        (rmat_graph(9, 6, seed=5), 8, 1),
+    ]:
+        pg = bfs_grow_partition(g, k, seed=0)
+        _, trace = run_sssp(pg, src)
+        mg = build_metagraph(pg)
+        sched = predict_schedule(mg, int(pg.subgraph_of_vertex[src]))
+        actual = _first_actual(trace)
+        for sg, s_actual in actual.items():
+            assert sched.first_visit[sg] == s_actual, (sg, s_actual)
+
+
+def test_revisits_are_superset_of_actual_activity():
+    """Predicted activity must cover every actual activation (conservative)."""
+    g = road_grid_graph(40, 40, seed=3)
+    pg = bfs_grow_partition(g, 8, seed=0)
+    _, trace = run_sssp(pg, 0)
+    mg = build_metagraph(pg)
+    sched = predict_schedule(
+        mg, int(pg.subgraph_of_vertex[0]), revisit_horizon=4.0
+    )
+    for s, sgs in enumerate(trace.active_subgraphs):
+        if s >= sched.n_supersteps:
+            break
+        assert set(sgs.tolist()) <= set(np.flatnonzero(sched.active[s]).tolist()), s
+
+
+def test_predicted_time_function_shape_and_mass():
+    g = erdos_renyi_graph(500, 5.0, seed=6)
+    pg = bfs_grow_partition(g, 5, seed=1)
+    tf, sched = predict_time_function(pg, 0)
+    assert tf.n_parts == pg.n_parts
+    assert tf.n_supersteps == sched.n_supersteps
+    assert tf.total_work() > 0
+    # superstep 1 activates only the source partition
+    src_part = pg.part_of_vertex[0]
+    assert (tf.tau[0] > 0).sum() == 1
+    assert tf.tau[0, src_part] > 0

@@ -1,0 +1,90 @@
+"""MoE dispatch properties + collective-parser unit tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import MoEConfig
+from repro.launch.dryrun import parse_collectives
+from repro.models.moe import _capacity, _n_groups, init_moe_params, moe_ffn
+
+
+def _ref_moe(params, cfg, x):
+    """Dense oracle: route every token to its top-k experts, no capacity."""
+    logits = x.astype(jnp.float32) @ params["router"].astype(jnp.float32)
+    _, idx = jax.lax.top_k(logits, cfg.top_k)
+    probs = jax.nn.softmax(jnp.take_along_axis(logits, idx, axis=1), axis=-1)
+    y = jnp.zeros_like(x)
+    for e in range(cfg.n_experts):
+        g = jax.nn.silu(x @ params["we_gate"][e]) * (x @ params["we_up"][e])
+        ye = g @ params["we_down"][e]
+        w = jnp.where(idx == e, probs, 0.0).sum(axis=1)
+        y = y + ye * w[:, None].astype(x.dtype)
+    return y
+
+
+def test_moe_matches_dense_oracle_when_capacity_ample():
+    cfg = MoEConfig(n_experts=4, top_k=2, d_ff_expert=32, capacity_factor=8.0)
+    key = jax.random.PRNGKey(0)
+    params = init_moe_params(key, 16, cfg, jnp.float32)
+    x = jax.random.normal(key, (24, 16), jnp.float32)
+    y, aux, load = moe_ffn(params, cfg, x)
+    ref = _ref_moe(params, cfg, x)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref), atol=2e-4, rtol=2e-4)
+    assert float(aux) > 0
+    # load fractions are pair-normalized: they sum to 1 over experts
+    np.testing.assert_allclose(float(load.sum()), 1.0, rtol=1e-5)
+
+
+@given(
+    t=st.sampled_from([8, 24, 64, 96]),
+    e=st.sampled_from([2, 4, 8]),
+    k=st.sampled_from([1, 2]),
+    seed=st.integers(0, 100),
+)
+@settings(max_examples=12, deadline=None)
+def test_moe_dispatch_properties(t, e, k, seed):
+    k = min(k, e)
+    cfg = MoEConfig(n_experts=e, top_k=k, d_ff_expert=16, capacity_factor=8.0)
+    key = jax.random.PRNGKey(seed)
+    params = init_moe_params(key, 8, cfg, jnp.float32)
+    x = jax.random.normal(key, (t, 8), jnp.float32)
+    y, aux, load = moe_ffn(params, cfg, x)
+    assert y.shape == x.shape
+    assert np.isfinite(np.asarray(y)).all()
+    assert abs(float(load.sum()) - 1.0) < 1e-4  # pair-normalized fractions
+    # grouping never changes T
+    g = _n_groups(t)
+    assert t % g == 0
+    assert _capacity(t // g, cfg) >= 4
+
+
+def test_parse_collectives_array_and_tuple_forms():
+    hlo = """
+ENTRY %main {
+  %ar = f32[1024,256]{1,0} all-reduce(%x), replica_groups={{0,1,2,3}}, to_apply=%add
+  %ag = bf16[512]{0} all-gather(%y), replica_groups=[2,8]<=[16], dimensions={0}
+  %a2a = (f32[1,16]{1,0}, f32[1,16]{1,0}) all-to-all(%a, %b), replica_groups={{0,1}}
+  %cp = f32[64]{0} collective-permute(%z), source_target_pairs={{0,1}}
+}
+"""
+    out = parse_collectives(hlo)
+    c = out["counts"]
+    assert c["all-reduce"] == 1 and c["all-gather"] == 1
+    assert c["all-to-all"] == 1 and c["collective-permute"] == 1
+    by = out["by_op"]
+    # all-reduce: 2 * size * (g-1)/g with g=4
+    assert abs(by["all-reduce"] - 2 * 1024 * 256 * 4 * 3 / 4) < 1
+    # all-gather: result * (g-1)/g with g=8 (iota form)
+    assert abs(by["all-gather"] - 512 * 2 * 7 / 8) < 1
+    # tuple all-to-all: sums both tuple entries, g=2
+    assert abs(by["all-to-all"] - 2 * 16 * 4 * 1 / 2) < 1
+    # collective-permute: point-to-point payload
+    assert abs(by["collective-permute"] - 64 * 4) < 1
+
+
+def test_parse_collectives_ignores_single_device_groups():
+    hlo = "%ar = f32[8]{0} all-reduce(%x), replica_groups={{0}}, to_apply=%add"
+    out = parse_collectives(hlo)
+    assert out["wire_bytes_per_device"] == 0

@@ -1,0 +1,142 @@
+"""Hypothesis property tests on the system's invariants."""
+
+import math
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.billing import BillingModel, evaluate
+from repro.core.placement import (
+    _exact_pack,
+    _ffd_pack,
+    ffd_placement,
+    lap_placement,
+    mfp_placement,
+    opt_placement,
+)
+from repro.core.timing import TimeFunction
+
+
+@st.composite
+def tau_matrices(draw, max_m=6, max_n=9):
+    m = draw(st.integers(1, max_m))
+    n = draw(st.integers(1, max_n))
+    vals = draw(
+        st.lists(
+            st.floats(0.0, 100.0, allow_nan=False),
+            min_size=m * n,
+            max_size=m * n,
+        )
+    )
+    tau = np.asarray(vals, dtype=np.float64).reshape(m, n)
+    # sparsify: some partitions inactive
+    mask = draw(
+        st.lists(st.booleans(), min_size=m * n, max_size=m * n)
+    )
+    tau = tau * np.asarray(mask).reshape(m, n)
+    return TimeFunction(tau)
+
+
+@st.composite
+def packing_instances(draw):
+    n = draw(st.integers(1, 10))
+    sizes = np.asarray(
+        draw(
+            st.lists(
+                st.floats(0.015625, 1.0, allow_nan=False, width=32),
+                min_size=n,
+                max_size=n,
+            )
+        ),
+        dtype=np.float64,
+    )
+    cap = float(sizes.max()) * draw(st.floats(1.0, 3.0, allow_nan=False))
+    return sizes, cap
+
+
+@given(packing_instances())
+@settings(max_examples=100, deadline=None)
+def test_ffd_within_theoretical_bound_of_opt(inst):
+    """Dosa's tight bound: FFD <= 11/9 * OPT + 6/9."""
+    sizes, cap = inst
+    _, ffd_bins = _ffd_pack(sizes, cap)
+    _, opt_bins, proven = _exact_pack(sizes, cap, node_budget=500_000)
+    if proven:
+        assert ffd_bins <= math.floor(11 / 9 * opt_bins + 6 / 9) + 1e-9
+        assert opt_bins <= ffd_bins
+
+
+@given(packing_instances())
+@settings(max_examples=100, deadline=None)
+def test_packings_respect_capacity(inst):
+    sizes, cap = inst
+    for packer in (_ffd_pack, lambda s, c: _exact_pack(s, c)[:2]):
+        assign, n_bins = packer(sizes, cap)
+        loads = np.zeros(n_bins)
+        np.add.at(loads, assign, sizes)
+        assert loads.max() <= cap + 1e-6
+        assert (assign >= 0).all()
+
+
+@given(tau_matrices())
+@settings(max_examples=60, deadline=None)
+def test_placement_invariants(tf):
+    for strat in (opt_placement, ffd_placement, mfp_placement, lap_placement):
+        p = strat(tf)
+        p.validate()
+        # every active partition placed exactly when active
+        assert ((p.vm_of >= 0) == (tf.tau > 0)).all()
+
+
+@given(tau_matrices())
+@settings(max_examples=60, deadline=None)
+def test_opt_ffd_preserve_tmin_makespan(tf):
+    for strat in (opt_placement, ffd_placement):
+        r = evaluate(strat(tf))
+        assert r.makespan <= tf.t_min() + 1e-6
+
+
+@given(tau_matrices())
+@settings(max_examples=60, deadline=None)
+def test_pinned_strategies_never_migrate(tf):
+    for strat in (mfp_placement, lap_placement):
+        p = strat(tf)
+        for i in range(p.n_parts):
+            vms = p.vm_of[:, i]
+            seen = vms[vms >= 0]
+            if seen.size:
+                assert (seen == seen[0]).all()
+
+
+@given(tau_matrices())
+@settings(max_examples=60, deadline=None)
+def test_gamma_min_is_lower_bound(tf):
+    if tf.total_work() == 0:
+        return
+    for strat in (opt_placement, ffd_placement, mfp_placement, lap_placement):
+        for rule in ("gap_le_delta", "exact_greedy"):
+            r = evaluate(strat(tf), BillingModel(activation_rule=rule))
+            assert r.cost_quanta >= r.gamma_min_quanta
+
+
+@given(tau_matrices())
+@settings(max_examples=40, deadline=None)
+def test_elastic_never_uses_more_peak_vms_than_default(tf):
+    if tf.total_work() == 0:
+        return
+    n = tf.n_parts
+    for strat in (opt_placement, ffd_placement, mfp_placement, lap_placement):
+        r = evaluate(strat(tf))
+        assert r.peak_vms <= n
+
+
+@given(tau_matrices())
+@settings(max_examples=40, deadline=None)
+def test_core_secs_default_dominates_opt(tf):
+    """OPT consolidates actives; its provisioned core-secs never exceed the
+    default's n * T_Min."""
+    if tf.total_work() == 0:
+        return
+    r_def = evaluate(__import__("repro.core.placement", fromlist=["default_placement"]).default_placement(tf))
+    r_opt = evaluate(opt_placement(tf))
+    assert r_opt.core_secs <= r_def.core_secs + 1e-6

@@ -1,0 +1,157 @@
+"""Placement strategy unit tests (paper s5)."""
+
+import numpy as np
+import pytest
+
+from repro.core.placement import (
+    _exact_pack,
+    _ffd_pack,
+    _l2_lower_bound,
+    default_placement,
+    ffd_placement,
+    lap_placement,
+    mfp_placement,
+    opt_placement,
+)
+from repro.core.timing import TimeFunction
+
+
+def _tf(rows):
+    return TimeFunction(np.asarray(rows, dtype=np.float64))
+
+
+def test_default_one_vm_per_partition():
+    tf = _tf([[3, 0, 1], [0, 2, 1]])
+    p = default_placement(tf)
+    p.validate()
+    assert p.always_on
+    assert (p.vm_of[0] == [0, -1, 2]).all()
+    assert (p.vm_of[1] == [-1, 1, 2]).all()
+
+
+def test_ffd_packs_known_case():
+    # capacity = 6; items 6, 3, 3, 2, 2 -> bins: [6], [3,3], [2,2] = 3 bins
+    tf = _tf([[6, 3, 3, 2, 2]])
+    p = ffd_placement(tf)
+    p.validate()
+    loads = p.loads()
+    assert loads.shape[1] == 3
+    assert loads.max() <= 6 + 1e-9
+
+
+def test_opt_beats_ffd_on_adversarial_case():
+    # classic FFD-suboptimal instance, capacity 10:
+    # items 5,5,4,4,3,3,3,3 -> FFD: [5,5][4,4][3,3,3][3] = 4 bins; OPT: 3 bins
+    sizes = np.array([5.0, 5, 4, 4, 3, 3, 3, 3])
+    cap = 10.0
+    _, ffd_bins = _ffd_pack(sizes, cap)
+    assign, opt_bins, proven = _exact_pack(sizes, cap)
+    assert proven
+    assert opt_bins == 3 and ffd_bins == 4
+    # packing is feasible
+    loads = np.zeros(opt_bins)
+    np.add.at(loads, assign, sizes)
+    assert loads.max() <= cap + 1e-9
+
+
+def test_l2_lower_bound_is_valid():
+    rng = np.random.default_rng(0)
+    for _ in range(50):
+        sizes = rng.uniform(0.05, 1.0, rng.integers(1, 12))
+        cap = float(sizes.max() * rng.uniform(1.0, 2.0))
+        _, n_opt, proven = _exact_pack(sizes, cap)
+        assert proven
+        assert _l2_lower_bound(sizes, cap) <= n_opt
+
+
+def test_opt_and_ffd_keep_capacity_therefore_tmin():
+    rng = np.random.default_rng(1)
+    tau = rng.uniform(0, 1, (6, 10)) * (rng.random((6, 10)) > 0.4)
+    tf = TimeFunction(tau)
+    for strat in (opt_placement, ffd_placement):
+        p = strat(tf)
+        p.validate()
+        loads = p.loads()
+        np.testing.assert_array_less(
+            loads.max(axis=1), tf.tau_max() + 1e-9
+        )  # each superstep finishes in tau_Max^s => makespan == T_Min
+
+
+def test_mfp_pins_partitions():
+    tau = np.array(
+        [
+            [5.0, 0.0, 0.0, 0.0],
+            [2.0, 4.0, 3.0, 0.0],
+            [0.0, 1.0, 2.0, 6.0],
+        ]
+    )
+    p = mfp_placement(TimeFunction(tau))
+    p.validate()
+    assert p.pinned
+    # partition 0 placed at s=0 stays on the same VM at s=1
+    assert p.vm_of[0, 0] == p.vm_of[1, 0]
+    # partitions 1, 2 placed at s=1 keep their VM at s=2
+    assert p.vm_of[1, 1] == p.vm_of[2, 1]
+    assert p.vm_of[1, 2] == p.vm_of[2, 2]
+
+
+def test_mfp_capacity_includes_pinned_load():
+    # s=0: P0 (cap 5) alone on VM0. s=1: P0 load 4 pinned; P1 load 5 arrives.
+    # tau_max = max(5, 4) = 5; VM0 remaining = 1 < 5 -> new VM for P1.
+    tau = np.array([[5.0, 0.0], [4.0, 5.0]])
+    p = mfp_placement(TimeFunction(tau))
+    assert p.vm_of[1, 1] != p.vm_of[1, 0]
+
+
+def test_lap_prefers_vm_idle_next_superstep():
+    # Two VMs exist after s=0 (P0, P1 too big to share: cap 4 each... setup:)
+    # s0: P0=4, P1=4 -> two VMs. s1: P0=4 active, P1 idle; P2=2 arrives.
+    # s2 (lookahead): P0 busy again, P1 idle.
+    # LA/P should put P2 on P1's VM (forward load 0) even though both fit.
+    tau = np.array(
+        [
+            [4.0, 4.0, 0.0],
+            [4.0, 0.0, 2.0],
+            [4.0, 0.0, 0.0],
+        ]
+    )
+    p = lap_placement(TimeFunction(tau))
+    p.validate()
+    assert p.vm_of[1, 2] == p.vm_of[0, 1]  # joined the VM that is idle at s+1
+
+
+def test_mfp_uses_max_fit_not_first_fit():
+    # s0: P0=6 on VM0, P1=3 on VM0? cap=6 -> VM0 rem 0 after P0; P1 new VM1
+    # (rem 3). s1: P2=2 arrives; VM0 rem=6, VM1 rem=6-0... construct simpler:
+    # s0: P0=6, P1=3 -> VM0:[P0], VM1:[P1] (cap 6, P1 fits VM0? rem 0 -> no)
+    # s1: P0 idle, P1=1 (pinned VM1), P2=3. cap=max(3,1)=3; VM0 rem 3, VM1 rem 2.
+    # Max-fit picks VM0.
+    tau = np.array([[6.0, 3.0, 0.0], [0.0, 1.0, 3.0]])
+    p = mfp_placement(TimeFunction(tau))
+    assert p.vm_of[1, 2] == p.vm_of[0, 0]
+
+
+def test_strategies_on_single_superstep_trivial():
+    tf = _tf([[1.0, 1.0, 1.0]])
+    for strat in (opt_placement, ffd_placement, mfp_placement, lap_placement):
+        p = strat(tf)
+        p.validate()
+        assert p.n_vms >= 1
+        assert (p.vm_of[0] >= 0).all()
+
+
+def test_all_inactive_superstep_is_allowed():
+    tf = _tf([[1.0, 0.0], [0.0, 0.0], [0.0, 1.0]])
+    for strat in (opt_placement, ffd_placement, mfp_placement, lap_placement):
+        p = strat(tf)
+        p.validate()
+        assert (p.vm_of[1] == -1).all()
+
+
+def test_opt_node_budget_fallback_still_valid():
+    rng = np.random.default_rng(3)
+    tau = rng.uniform(0.1, 1.0, (2, 30))
+    p = opt_placement(TimeFunction(tau), node_budget=50)
+    p.validate()  # falls back to incumbent; still a legal packing
+    loads = p.loads()
+    np.testing.assert_array_less(loads.max(axis=1), TimeFunction(tau).tau_max() + 1e-9)
