@@ -3,14 +3,23 @@ the roofline-relevant numbers.  Usage:
 
   PYTHONPATH=src python -m benchmarks.perf_probe deepseek-v3-671b prefill_32k \
       single sp_residual=True
+
+Traversal-engine mode: lower+compile the device-resident BSP engine for a
+synthetic partitioned graph and print its HLO size/memory footprint (the
+whole traversal is one executable -- no per-superstep dispatch to probe):
+
+  PYTHONPATH=src python -m benchmarks.perf_probe traversal [scale] [sources]
 """
 
 import os
+import sys
 
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+if sys.argv[1:2] != ["traversal"]:
+    # the LM dry-run wants 512 fake devices; the traversal probe wants the
+    # single real device (flags must be set before the first jax import)
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
 import dataclasses
-import sys
 
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
@@ -91,7 +100,37 @@ def probe(arch: str, shape: str, mesh_kind: str, overrides: dict):
     )
 
 
+def probe_traversal(scale: int = 12, n_sources: int = 16):
+    """Lower + compile the device-resident traversal engine and print its
+    footprint: one executable per (graph, S) covering the entire traversal."""
+    from repro.graph.generators import rmat_graph
+    from repro.graph.partition import bfs_grow_partition
+    from repro.graph.traversal import TraversalEngine
+    import jax.numpy as jnp
+
+    g = rmat_graph(scale, 8, seed=3)
+    pg = bfs_grow_partition(g, 8, seed=1)
+    eng = TraversalEngine(pg, m_max=512)
+    dist = jnp.full((n_sources, g.n_vertices), jnp.inf, jnp.float32)
+    frontier = jnp.zeros((n_sources, g.n_vertices), bool)
+    compiled = eng._traverse.lower(dist, frontier).compile()
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):  # some backends wrap it in a list
+        cost = cost[0] if cost else {}
+    print(
+        f"traversal: RMAT 2^{scale} x {n_sources} sources -> one executable; "
+        f"temp={mem.temp_size_in_bytes/2**20:.1f}MiB "
+        f"args={mem.argument_size_in_bytes/2**20:.1f}MiB "
+        f"out={mem.output_size_in_bytes/2**20:.1f}MiB "
+        f"flops={cost.get('flops', 0):.3g}"
+    )
+
+
 if __name__ == "__main__":
+    if sys.argv[1:2] == ["traversal"]:
+        probe_traversal(*(int(a) for a in sys.argv[2:4]))
+        sys.exit(0)
     arch, shape, mesh_kind = sys.argv[1:4]
     overrides = {}
     for kv in sys.argv[4:]:

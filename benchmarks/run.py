@@ -20,6 +20,7 @@ BENCHES = [
     ("metagraph_accuracy", "benchmarks.metagraph_accuracy"),  # s3.2 claims
     ("delta_sweep", "benchmarks.delta_sweep"),  # beyond-paper granularity
     ("bc_workload", "benchmarks.bc_workload"),  # s7 future work: BC waves
+    ("traversal", "benchmarks.traversal_bench"),  # engine perf -> BENCH_traversal.json
     ("strategy_scaling", "benchmarks.strategy_scaling"),  # s5 complexity claims
     ("kernel_bench", "benchmarks.kernel_bench"),  # Pallas kernels vs refs
     ("roofline", "benchmarks.roofline"),  # dry-run roofline summary

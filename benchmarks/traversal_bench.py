@@ -1,0 +1,118 @@
+"""Traversal-engine benchmark: device-resident batched BC vs the serial
+per-superstep driver the seed shipped with.
+
+Measures, on a synthetic BC workload (>= 16 sources on an R-MAT graph):
+  * serial driver  -- per-source Python superstep loop, one host sync
+    (``np.asarray``) per superstep per source (the seed's ``run_sssp``
+    orchestration, reproduced here as the baseline)
+  * batched engine -- one jitted ``lax.while_loop`` over ``[S, n]`` state,
+    one bulk transfer per traversal
+
+and writes ``BENCH_traversal.json`` (supersteps/sec, edges/sec, speedup,
+host sync counts) so the perf trajectory is tracked from this PR onward.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graph.bsp import run_bc_forward
+from repro.graph.generators import rmat_graph
+from repro.graph.partition import bfs_grow_partition
+from repro.graph.traversal import make_superstep_fn
+
+N_SOURCES = 16
+SCALE, DEGREE = 12, 8  # R-MAT 2^12 vertices, avg degree 8
+N_PARTS = 8
+OUT_PATH = "BENCH_traversal.json"
+
+
+def _serial_bc(pg, sources):
+    """The seed's orchestration: Python superstep loop, host sync per step.
+
+    Returns (n_supersteps_total, n_host_syncs).
+    """
+    superstep = make_superstep_fn(pg)
+    n = pg.graph.n_vertices
+    total_steps = 0
+    syncs = 0
+    for source in sources:
+        dist = jnp.full((n,), jnp.inf, jnp.float32).at[source].set(0.0)
+        frontier = jnp.zeros((n,), bool).at[source].set(True)
+        while True:
+            fr_np = np.asarray(frontier)  # the per-superstep host round-trip
+            syncs += 1
+            if not fr_np.any():
+                break
+            res = superstep(dist, frontier)
+            dist, frontier = res.dist, res.next_frontier
+            # counter pulls, as the seed driver did every superstep
+            _ = np.asarray(res.edges_examined)
+            _ = np.asarray(res.verts_processed)
+            _ = np.asarray(res.msgs_sent)
+            syncs += 3
+            total_steps += 1
+    return total_steps, syncs
+
+
+def run(verbose: bool = True) -> dict:
+    g = rmat_graph(SCALE, DEGREE, seed=3)
+    pg = bfs_grow_partition(g, N_PARTS, seed=1)
+    rng = np.random.default_rng(0)
+    sources = rng.choice(g.n_vertices, size=N_SOURCES, replace=False).tolist()
+
+    # warm both paths so the numbers compare steady-state orchestration,
+    # then report compile (cold - warm) separately
+    t0 = time.perf_counter()
+    trace = run_bc_forward(pg, sources, max_supersteps=512)
+    cold_batched = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    trace = run_bc_forward(pg, sources, max_supersteps=512)
+    warm_batched = time.perf_counter() - t0
+
+    _serial_bc(pg, sources[:1])  # compile the superstep fn
+    t0 = time.perf_counter()
+    serial_steps, serial_syncs = _serial_bc(pg, sources)
+    warm_serial = time.perf_counter() - t0
+
+    total_steps = trace.n_supersteps
+    total_edges = int(trace.edges_examined.sum())
+    out = {
+        "graph": {"n_vertices": g.n_vertices, "n_edges": g.n_edges, "n_parts": N_PARTS},
+        "n_sources": N_SOURCES,
+        "supersteps_total": int(total_steps),
+        "serial_wall_s": warm_serial,
+        "batched_wall_s": warm_batched,
+        "batched_compile_s": max(0.0, cold_batched - warm_batched),
+        "speedup_batched_vs_serial": warm_serial / warm_batched,
+        "supersteps_per_sec": total_steps / warm_batched,
+        "edges_examined_per_sec": total_edges / warm_batched,
+        "host_syncs_serial": int(serial_syncs),
+        "host_syncs_batched": 1,  # one bulk device_get per traversal batch
+    }
+    with open(OUT_PATH, "w") as f:
+        json.dump(out, f, indent=2)
+    if verbose:
+        print(
+            f"BC {N_SOURCES} sources on RMAT 2^{SCALE} (deg {DEGREE}, "
+            f"{N_PARTS} parts): {total_steps} supersteps, "
+            f"{serial_steps} serial-driver supersteps"
+        )
+        print(
+            f"serial {warm_serial*1e3:.0f} ms ({serial_syncs} host syncs) vs "
+            f"batched {warm_batched*1e3:.0f} ms (1 bulk transfer) -> "
+            f"{out['speedup_batched_vs_serial']:.1f}x"
+        )
+        print(
+            f"{out['supersteps_per_sec']:.0f} supersteps/s, "
+            f"{out['edges_examined_per_sec']:.3g} edges/s -> {OUT_PATH}"
+        )
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -9,3 +9,11 @@ import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "src"))
+
+try:  # the property tests prefer real hypothesis when it exists
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    from repro.testing import mini_hypothesis
+
+    sys.modules["hypothesis"] = mini_hypothesis
+    sys.modules["hypothesis.strategies"] = mini_hypothesis.strategies

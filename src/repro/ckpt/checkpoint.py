@@ -1,4 +1,5 @@
-"""Checkpointing: zstd-compressed msgpack of a flattened pytree.
+"""Checkpointing: compressed msgpack of a flattened pytree (zstd when
+available, stdlib zlib otherwise; restore sniffs the zstd magic).
 
 Fault-tolerance properties:
   * atomic: write to ``.tmp`` then rename -- a crash mid-save never corrupts
@@ -22,7 +23,31 @@ import threading
 import jax
 import msgpack
 import numpy as np
-import zstandard
+
+try:  # zstd preferred; fall back to stdlib zlib when the wheel is absent
+    import zstandard
+except ImportError:  # pragma: no cover - environment-dependent
+    zstandard = None
+
+_ZSTD_MAGIC = b"\x28\xb5\x2f\xfd"
+
+
+def _compress(raw: bytes) -> bytes:
+    if zstandard is not None:
+        return zstandard.ZstdCompressor(level=3).compress(raw)
+    import zlib
+
+    return zlib.compress(raw, 3)
+
+
+def _decompress(blob: bytes) -> bytes:
+    if blob[:4] == _ZSTD_MAGIC:
+        if zstandard is None:
+            raise RuntimeError("checkpoint is zstd-compressed but zstandard is unavailable")
+        return zstandard.ZstdDecompressor().decompress(blob)
+    import zlib
+
+    return zlib.decompress(blob)
 
 
 def _flatten(tree) -> dict[str, np.ndarray]:
@@ -48,7 +73,7 @@ def save_pytree(path: str, tree, *, step: int | None = None) -> None:
             "data": v.tobytes(),
         }
     raw = msgpack.packb(payload, use_bin_type=True)
-    blob = zstandard.ZstdCompressor(level=3).compress(raw)
+    blob = _compress(raw)
     tmp = path + ".tmp"
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     with open(tmp, "wb") as f:
@@ -60,7 +85,7 @@ def restore_pytree(path: str, target_tree, *, shardings=None):
     """Restore into the structure of ``target_tree`` (arrays or SDS).  When
     ``shardings`` (matching pytree) is given, leaves are device_put onto it."""
     with open(path, "rb") as f:
-        raw = zstandard.ZstdDecompressor().decompress(f.read())
+        raw = _decompress(f.read())
     payload = msgpack.unpackb(raw, raw=False)
     payload.pop("__meta__", None)
 

@@ -69,6 +69,17 @@ class ElasticBSPExecutor:
         self.devices = jax.devices()
         # vertex ids grouped per partition so partition state is contiguous
         self.v_order = np.argsort(pg.part_of_vertex, kind="stable")
+        # device-side partition activity: pull [P] bools per superstep, not
+        # the full [n] frontier (the executor must interleave placement
+        # decisions between supersteps, so *some* per-step sync is inherent
+        # -- keep it O(P))
+        v_part = jnp.asarray(pg.part_of_vertex.astype(np.int32))
+        self._active_parts = jax.jit(
+            lambda fr: jax.ops.segment_max(
+                fr.astype(jnp.int32), v_part, num_segments=pg.n_parts
+            )
+            > 0
+        )
 
     def _device_of_vm(self, j: int):
         return self.devices[j % len(self.devices)]
@@ -98,10 +109,10 @@ class ElasticBSPExecutor:
 
         s = 0
         while s < max_supersteps:
-            fr_np = np.asarray(frontier)
-            if not fr_np.any():
+            part_mask = np.asarray(self._active_parts(frontier))
+            if not part_mask.any():
                 break
-            active_parts = np.unique(pg.part_of_vertex[fr_np])
+            active_parts = np.flatnonzero(part_mask)
 
             if s >= horizon or (
                 replan and not set(active_parts) <= set(np.flatnonzero(vm_of[s] >= 0))

@@ -23,11 +23,23 @@ module is intentionally plain numpy/python rather than JAX.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
+from typing import Callable, NamedTuple
 
 import numpy as np
 
 from repro.core.timing import TimeFunction
+
+
+class PackResult(NamedTuple):
+    """Uniform bin-packer result: every packer returns exactly this shape.
+
+    ``proven`` is True when ``n_bins`` is provably optimal (exact search
+    completed within budget); heuristics always report False.
+    """
+
+    assign: np.ndarray  # [n_items] int64 bin index per item
+    n_bins: int
+    proven: bool
 
 # Relative tolerance for capacity tests: tau values are float; an item equal
 # to the remaining capacity must fit.
@@ -100,8 +112,8 @@ def default_placement(tf: TimeFunction) -> Placement:
 # ---------------------------------------------------------------------------
 
 
-def _ffd_pack(sizes: np.ndarray, capacity: float) -> tuple[np.ndarray, int]:
-    """First-fit-decreasing; returns (bin assignment per item, n_bins)."""
+def _ffd_pack(sizes: np.ndarray, capacity: float) -> PackResult:
+    """First-fit-decreasing heuristic (``proven`` is always False)."""
     order = np.argsort(-sizes, kind="stable")
     remaining: list[float] = []
     assign = np.full(sizes.shape[0], -1, dtype=np.int64)
@@ -116,7 +128,7 @@ def _ffd_pack(sizes: np.ndarray, capacity: float) -> tuple[np.ndarray, int]:
         else:
             assign[idx] = len(remaining)
             remaining.append(capacity - sz)
-    return assign, len(remaining)
+    return PackResult(assign, len(remaining), False)
 
 
 def _l2_lower_bound(sizes: np.ndarray, capacity: float) -> int:
@@ -140,23 +152,23 @@ def _l2_lower_bound(sizes: np.ndarray, capacity: float) -> int:
 
 def _exact_pack(
     sizes: np.ndarray, capacity: float, node_budget: int = 200_000
-) -> tuple[np.ndarray, int, bool]:
-    """Branch & bound bin packing.  Returns (assign, n_bins, proven_optimal).
+) -> PackResult:
+    """Branch & bound bin packing.
 
     FFD provides the incumbent; nodes branch an item into each distinct-
     remaining-capacity open bin or one new bin.  On budget exhaustion the
-    incumbent is returned (never worse than FFD).
+    incumbent is returned (never worse than FFD) with ``proven=False``.
     """
     n = sizes.shape[0]
     if n == 0:
-        return np.empty(0, dtype=np.int64), 0, True
+        return PackResult(np.empty(0, dtype=np.int64), 0, True)
     tol = _EPS * max(capacity, 1.0)
     order = np.argsort(-sizes, kind="stable")
     sorted_sizes = sizes[order]
-    best_assign, best_bins = _ffd_pack(sizes, capacity)
+    best_assign, best_bins, _ = _ffd_pack(sizes, capacity)
     lb_root = _l2_lower_bound(sizes, capacity)
     if best_bins == lb_root:
-        return best_assign, best_bins, True
+        return PackResult(best_assign, best_bins, True)
 
     suffix_sum = np.concatenate([np.cumsum(sorted_sizes[::-1])[::-1], [0.0]])
     nodes = 0
@@ -206,12 +218,12 @@ def _exact_pack(
         cur_assign[k] = -1
 
     dfs(0, [])
-    return best_assign, best_bins, not exhausted
+    return PackResult(best_assign, best_bins, not exhausted)
 
 
 def _per_superstep_packing(
     tf: TimeFunction,
-    packer: Callable[[np.ndarray, float], tuple[np.ndarray, int]],
+    packer: Callable[[np.ndarray, float], PackResult],
     name: str,
 ) -> tuple[np.ndarray, bool]:
     m, n = tf.tau.shape
@@ -224,12 +236,8 @@ def _per_superstep_packing(
         sizes = tf.tau[s][active]
         cap = float(sizes.max())
         result = packer(sizes, cap)
-        if len(result) == 3:
-            assign, _, proven = result
-            all_optimal &= proven
-        else:
-            assign, _ = result
-        vm_of[s, active] = assign
+        all_optimal &= result.proven
+        vm_of[s, active] = result.assign
     return vm_of, all_optimal
 
 

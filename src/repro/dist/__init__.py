@@ -1,0 +1,17 @@
+"""Distribution utilities: sharding rules, halo-exchange plans, and
+gradient-compression collectives.
+
+Submodules:
+  * ``sharding``    -- PartitionSpec rule tables for the LM/GNN/recsys
+    parameter trees plus the ``constrain`` activation-pinning helper (a no-op
+    outside a mesh context, so single-device tests run the same code path).
+  * ``halo``        -- boundary-exchange plans for partitioned graphs: a
+    static send-index table per shard pair so per-layer communication is one
+    all-to-all of the planned edge cut instead of full-table all-gathers.
+  * ``compression`` -- int8-quantized ``psum`` with error feedback for
+    bandwidth-bound gradient reduction.
+"""
+
+from repro.dist import compression, halo, sharding
+
+__all__ = ["compression", "halo", "sharding"]

@@ -1,0 +1,170 @@
+"""Sharding rule tables and the ``constrain`` activation helper.
+
+Axis semantics follow ``launch.mesh``: ``pod``/``data`` are batch-like axes
+(FSDP lives on ``data``), ``model`` is the tensor/expert-parallel axis.
+``BATCH`` is a sentinel resolved against the ambient mesh at trace time, so
+model code writes ``constrain(x, BATCH, None, "model")`` once and runs
+unchanged on a laptop CPU (no mesh -> no-op), the host test mesh, or the
+production (pod, data, model) mesh.
+
+Parameter-spec functions are *rule tables keyed by leaf name*: a missing rule
+raises ``KeyError`` so a new parameter cannot silently fall back to
+replication (test_attention_paths asserts exhaustiveness).
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+class _BatchSentinel:
+    """Placeholder for "all batch-like mesh axes present" in constrain()."""
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return "BATCH"
+
+
+BATCH = _BatchSentinel()
+
+#: batch-like axes in priority order; FSDP parameter sharding uses ``data``
+_BATCH_AXES = ("pod", "data")
+FSDP = "data"
+MODEL = "model"
+
+
+def _ambient_mesh() -> Mesh | None:
+    """The mesh installed by ``with mesh:`` around the current trace, if any."""
+    from jax._src import mesh as mesh_lib
+
+    m = mesh_lib.thread_resources.env.physical_mesh
+    return None if m.empty else m
+
+
+def dp_axes(mesh: Mesh) -> tuple[str, ...]:
+    """The batch/data-parallel axes present in ``mesh`` (always a tuple)."""
+    return tuple(a for a in _BATCH_AXES if a in mesh.axis_names)
+
+
+def constrain(x: jax.Array, *spec) -> jax.Array:
+    """``with_sharding_constraint`` against the ambient mesh; no-op without one.
+
+    ``spec`` entries: ``BATCH`` (resolves to all batch axes), an axis name,
+    or ``None``.  Axes absent from the mesh, and axes whose size does not
+    divide the corresponding array dimension, are dropped rather than raising
+    -- reduced-shape tests share the production model code.
+    """
+    mesh = _ambient_mesh()
+    if mesh is None:
+        return x
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    out = []
+    for dim, ax in enumerate(spec):
+        if isinstance(ax, _BatchSentinel):
+            ax = dp_axes(mesh) or None
+        elif isinstance(ax, str) and ax not in sizes:
+            ax = None
+        if ax is not None:
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            total = int(np.prod([sizes[a] for a in axes]))
+            if x.shape[dim] % total != 0:
+                ax = None
+        out.append(ax)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*out)))
+
+
+# ---------------------------------------------------------------------------
+# parameter spec rule tables
+# ---------------------------------------------------------------------------
+
+# Rules give the spec of the *trailing* dims; leading stack dims (the lax.scan
+# layer axis, the expert axis for non-moe entries) pad with None.
+_REPLICATED = ()
+_LM_RULES: dict[str, tuple] = {
+    # embeddings / output head: vocab on model so CE logits stay distributed
+    "embed": (MODEL, FSDP),
+    "head": (FSDP, MODEL),
+    # column-parallel projections (out dim on model, in dim FSDP-sharded)
+    "wq": (FSDP, MODEL),
+    "wk": (FSDP, MODEL),
+    "wv": (FSDP, MODEL),
+    "w_uq": (FSDP, MODEL),
+    "w_uk": (FSDP, MODEL),
+    "w_uv": (FSDP, MODEL),
+    "w_dq": (FSDP, MODEL),
+    "w_dkv": (FSDP, MODEL),
+    "w_gate": (FSDP, MODEL),
+    "w_up": (FSDP, MODEL),
+    # row-parallel projections (in dim on model so the matmul reduces there)
+    "wo": (MODEL, FSDP),
+    "w_down": (MODEL, FSDP),
+    # MoE expert stacks [*, E, in, out]: expert-parallel over model (matches
+    # the constrain() dataflow in moe_ffn)
+    "we_gate": (MODEL, FSDP, None),
+    "we_up": (MODEL, FSDP, None),
+    "we_down": (MODEL, None, FSDP),
+    # small / vector leaves
+    "w_kr": (FSDP, None),
+    "router": (FSDP, None),
+    "router_bias": _REPLICATED,
+    "proj": (FSDP, MODEL),
+    "attn_norm": _REPLICATED,
+    "ffn_norm": _REPLICATED,
+    "final_norm": _REPLICATED,
+    "q_norm": _REPLICATED,
+    "kv_norm": _REPLICATED,
+    "norm": _REPLICATED,
+}
+
+
+def _leaf_name(path) -> str:
+    for p in reversed(path):
+        if hasattr(p, "key"):
+            return str(p.key)
+    return ""
+
+
+def _specs_from_rules(params, rules: dict[str, tuple]):
+    flat = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for path, leaf in flat[0]:
+        name = _leaf_name(path)
+        if name not in rules:
+            raise KeyError(f"no sharding rule for parameter leaf {name!r}")
+        base = rules[name]
+        pad = (None,) * max(0, leaf.ndim - len(base))
+        out.append(P(*(pad + base)))
+    return jax.tree_util.tree_unflatten(jax.tree_util.tree_structure(params), out)
+
+
+def lm_param_specs(params, mesh: Mesh | None = None):
+    """PartitionSpec tree for an LM parameter tree (raises on unknown leaves).
+
+    ``mesh`` is accepted for call-site symmetry; divisibility fitting is the
+    caller's job (``launch.steps._fit_specs``), keeping this a pure rule table.
+    """
+    del mesh
+    return _specs_from_rules(params, _LM_RULES)
+
+
+def gnn_param_specs(params, mesh: Mesh | None = None):
+    """GNN parameters are small MLPs: replicate, shard the graph data instead."""
+    del mesh
+    return jax.tree.map(lambda _: P(), params)
+
+
+def recsys_param_specs(params, mesh: Mesh | None = None):
+    """DeepFM: shard embedding-table vocab rows over model; replicate MLPs."""
+    del mesh
+    flat = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for path, leaf in flat[0]:
+        top = str(path[0].key) if path and hasattr(path[0], "key") else ""
+        if top in ("tables", "first_order") and leaf.ndim >= 2:
+            spec = [None] * leaf.ndim
+            spec[-2] = MODEL  # [F, V, D] -> vocab axis
+            out.append(P(*spec))
+        else:
+            out.append(P())
+    return jax.tree_util.tree_unflatten(jax.tree_util.tree_structure(params), out)

@@ -1,11 +1,16 @@
 """Graph substrate: the GoFFish-analogue subgraph-centric engine.
 
 Layers:
-  structs     -- PartitionedGraph container, WCC subgraph labeling, CSR views
+  structs     -- PartitionedGraph container, WCC subgraph labeling, and the
+                 static dst-sorted CsrEdgeLayout (per-tile dst ranges for the
+                 block-skipping relax kernel)
   generators  -- synthetic graphs matched to the paper's dataset families
-  partition   -- hash + BFS-grow (METIS-like) partitioners
-  traversal   -- pure-JAX frontier BFS/SSSP relaxation
-  bsp         -- subgraph-centric BSP superstep driver with work tracing
+  partition   -- hash + BFS-grow (METIS-like) partitioners and the
+                 partition-aware local/remote edge layout
+  traversal   -- device-resident multi-source BSP engine (whole traversal in
+                 one lax.while_loop) + the per-superstep fn for the executor
+  bsp         -- host drivers building BSP work traces (one bulk transfer
+                 per traversal batch)
   sampler     -- fanout neighbor sampler for minibatch GNN training
 """
 

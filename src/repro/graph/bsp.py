@@ -1,16 +1,33 @@
 """BSP driver: runs the subgraph-centric traversal to global convergence and
 collects the execution trace that instantiates the paper's time function A.
+
+The drivers here are thin host-side adapters over
+``traversal.TraversalEngine``: the whole traversal (inner closure loop,
+remote exchange, counter accumulation) runs device-resident to convergence,
+and the trace materializes from **one** bulk device->host transfer per
+traversal batch (``TraversalEngine.run`` is the only sync point -- there is
+deliberately no per-superstep ``np.asarray`` anywhere in this module).
+
+Partition activity is derived from the device-side work counters
+(``verts_processed > 0`` -- a partition is active iff it held frontier
+vertices at superstep start, which is exactly what the first inner-closure
+iteration counts), and active-subgraph sets from a device segment-any over
+``subgraph_of_vertex`` -- not from host-side ``np.unique`` over a pulled
+frontier.
+
+Knobs: ``max_supersteps`` doubles as the device trace-buffer depth
+(``m_max``); ``run_bc_forward`` batches all sources into one ``[S, n]``
+traversal so compilation and per-superstep kernels amortize across sources.
 """
 
 from __future__ import annotations
 
 import dataclasses
 
-import jax.numpy as jnp
 import numpy as np
 
 from repro.graph.structs import PartitionedGraph
-from repro.graph.traversal import make_superstep_fn
+from repro.graph.traversal import TraversalResult, get_engine
 
 
 @dataclasses.dataclass
@@ -43,6 +60,25 @@ class BSPTrace:
         return float(self.active.mean())
 
 
+def _trace_of_source(res: TraversalResult, s: int, collect_subgraphs: bool) -> BSPTrace:
+    """Slice source ``s``'s trimmed trace out of a batched TraversalResult."""
+    m = int(res.n_supersteps[s])
+    verts = res.verts_processed[s, :m].astype(np.int64)
+    sg_sets: list[np.ndarray] = []
+    if collect_subgraphs:
+        sg_sets = [
+            np.flatnonzero(res.sg_active[s, i]).astype(np.int64) for i in range(m)
+        ]
+    return BSPTrace(
+        active=verts > 0,
+        edges_examined=res.edges_examined[s, :m].astype(np.int64),
+        verts_processed=verts,
+        msgs_sent=res.msgs_sent[s, :m].astype(np.int64),
+        inner_iters=res.inner_iters[s, :m].astype(np.int64),
+        active_subgraphs=sg_sets,
+    )
+
+
 def run_sssp(
     pg: PartitionedGraph,
     source: int,
@@ -54,42 +90,11 @@ def run_sssp(
 
     BFS is the ``weights=None`` special case (unit weights).
     """
-    superstep = make_superstep_fn(pg)
-    n = pg.graph.n_vertices
-    dist = jnp.full((n,), jnp.inf, dtype=jnp.float32)
-    dist = dist.at[source].set(0.0)
-    frontier = jnp.zeros((n,), dtype=bool).at[source].set(True)
-
-    sg_of_v = pg.subgraph_of_vertex
-    rows_active, rows_e, rows_v, rows_m, iters, sg_sets = [], [], [], [], [], []
-
-    for _ in range(max_supersteps):
-        fr_np = np.asarray(frontier)
-        if not fr_np.any():
-            break
-        active_parts = np.zeros(pg.n_parts, dtype=bool)
-        active_parts[np.unique(pg.part_of_vertex[fr_np])] = True
-        if collect_subgraphs:
-            sg_sets.append(np.unique(sg_of_v[fr_np]))
-        res = superstep(dist, frontier)
-        dist, frontier = res.dist, res.next_frontier
-        rows_active.append(active_parts)
-        rows_e.append(np.asarray(res.edges_examined, dtype=np.int64))
-        rows_v.append(np.asarray(res.verts_processed, dtype=np.int64))
-        rows_m.append(np.asarray(res.msgs_sent, dtype=np.int64))
-        iters.append(int(res.inner_iters))
-    else:
-        raise RuntimeError(f"BSP did not converge within {max_supersteps} supersteps")
-
-    trace = BSPTrace(
-        active=np.stack(rows_active),
-        edges_examined=np.stack(rows_e),
-        verts_processed=np.stack(rows_v),
-        msgs_sent=np.stack(rows_m),
-        inner_iters=np.asarray(iters, dtype=np.int64),
-        active_subgraphs=sg_sets,
+    engine = get_engine(
+        pg, m_max=max_supersteps, collect_subgraphs=collect_subgraphs
     )
-    return np.asarray(dist), trace
+    res = engine.run([source])
+    return res.dist[0], _trace_of_source(res, 0, collect_subgraphs)
 
 
 def concat_traces(traces: list[BSPTrace]) -> BSPTrace:
@@ -113,9 +118,15 @@ def run_bc_forward(
     """Betweenness-centrality forward phase (paper s7 future work): one BFS
     sweep per source, executed as consecutive waves.  The per-wave rise and
     fall of the active set is the 'sinusoidal' activation of the paper's
-    ref [15] that elastic placement exploits between waves."""
-    traces = []
-    for s in sources:
-        _, t = run_sssp(pg, s, max_supersteps=max_supersteps, collect_subgraphs=False)
-        traces.append(t)
-    return concat_traces(traces)
+    ref [15] that elastic placement exploits between waves.
+
+    All sources run as one batched ``[S, n]`` device-resident traversal (one
+    compile, one kernel sequence, one bulk transfer); the returned trace is
+    the per-source traces concatenated in wave order, identical in shape and
+    semantics to running the waves serially.
+    """
+    engine = get_engine(pg, m_max=max_supersteps, collect_subgraphs=False)
+    res = engine.run(list(sources))
+    return concat_traces(
+        [_trace_of_source(res, s, False) for s in range(len(sources))]
+    )

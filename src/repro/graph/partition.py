@@ -1,4 +1,4 @@
-"""Graph partitioners.
+"""Graph partitioners and the partition-aware static edge layout.
 
 The paper partitions with METIS (vertex-balanced, load factor 1.03, minimal
 edge cut).  METIS is unavailable offline; ``bfs_grow_partition`` is a
@@ -6,13 +6,54 @@ multi-seed region-growing partitioner with a greedy boundary-refinement pass
 that achieves the same *qualitative* regime: balanced vertex counts and
 well-connected partitions (few, large subgraphs per partition).
 ``hash_partition`` reproduces Giraph's default (balanced but high cut).
+
+``partitioned_edge_layout`` turns a ``PartitionedGraph`` into the static
+CSR layout the device-resident traversal engine runs on: local and remote
+edges split into two dst-sorted ``CsrEdgeLayout``s (so the inner closure
+loop scans only local edges and the superstep-boundary exchange only remote
+ones, with no per-edge ``is_local`` masking), each carrying the per-edge src
+partition ids needed for the paper's work counters.  Built once per graph
+and cached on the ``PartitionedGraph`` instance.
 """
 
 from __future__ import annotations
 
+import dataclasses
+
 import numpy as np
 
-from repro.graph.structs import Graph, PartitionedGraph
+from repro.graph.structs import CsrEdgeLayout, Graph, PartitionedGraph, dst_sorted_layout
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionedEdgeLayout:
+    """Static traversal layout: dst-sorted local + remote edge sets."""
+
+    local: CsrEdgeLayout  # within-partition edges, dst ascending
+    remote: CsrEdgeLayout  # cross-partition edges, dst ascending
+    local_part: np.ndarray  # [E_local] int32 partition of each local edge
+    remote_src_part: np.ndarray  # [E_remote] int32 src partition per remote edge
+
+
+def partitioned_edge_layout(pg: PartitionedGraph) -> PartitionedEdgeLayout:
+    """The static edge layout for ``pg`` (cached on the instance)."""
+    cached = pg.__dict__.get("_edge_layout")
+    if cached is not None:
+        return cached
+    g = pg.graph
+    local = pg.is_local_edge
+    w = g.edge_weights
+    part = pg.part_of_vertex.astype(np.int32)
+    loc = dst_sorted_layout(g.n_vertices, g.src[local], g.dst[local], w[local])
+    rem = dst_sorted_layout(g.n_vertices, g.src[~local], g.dst[~local], w[~local])
+    layout = PartitionedEdgeLayout(
+        local=loc,
+        remote=rem,
+        local_part=part[loc.src],
+        remote_src_part=part[rem.src],
+    )
+    pg.__dict__["_edge_layout"] = layout
+    return layout
 
 
 def hash_partition(g: Graph, n_parts: int, *, seed: int = 0) -> PartitionedGraph:

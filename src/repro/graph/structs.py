@@ -20,6 +20,85 @@ INF_DIST = np.float32(np.inf)
 
 
 @dataclasses.dataclass(frozen=True)
+class CsrEdgeLayout:
+    """Static destination-sorted edge layout, built once per (sub)edge-set.
+
+    The traversal engine and the ``bfs_relax`` kernel consume edges in this
+    fixed order for the lifetime of a graph, which (a) lets every segment
+    reduction take the ``indices_are_sorted`` fast path, (b) kills the
+    per-call ``argsort`` the kernel wrapper used to pay, and (c) makes the
+    per-tile destination ranges *static*, so the kernel grid can skip
+    (row_block, edge_block) tiles that provably hold no in-range edge.
+
+    Contract: ``dst`` is ascending; ``src``/``weights`` are permuted to match
+    (the permutation itself is not retained -- no consumer needs to map back
+    to the original edge order).
+    """
+
+    n_vertices: int
+    src: np.ndarray  # [E] int32, reordered by dst
+    dst: np.ndarray  # [E] int32, ascending
+    weights: np.ndarray  # [E] float32, reordered by dst
+
+    @property
+    def n_edges(self) -> int:
+        return int(self.dst.shape[0])
+
+    def block_ranges(self, block_n: int, block_e: int) -> tuple[np.ndarray, np.ndarray, int]:
+        """Per-row-block contiguous edge-block span: (start [NB], count [NB], t_max).
+
+        Because ``dst`` is sorted, the set of edge blocks intersecting a row
+        block ``[ob*block_n, (ob+1)*block_n)`` is a contiguous range of edge
+        blocks -- representable as a start index and a count, which is what
+        the block-skipping kernel scalar-prefetches.  ``t_max = max(count)``
+        bounds the kernel's inner grid dimension (vs ``ceil(E/block_e)`` for
+        the dense grid that tests intersection per tile).
+        """
+        key = ("block_ranges", block_n, block_e)
+        cached = self.__dict__.setdefault("_block_cache", {})
+        if key not in cached:
+            e, n = self.n_edges, self.n_vertices
+            nb = max(1, -(-n // block_n))
+            if e == 0:
+                start = np.zeros(nb, np.int32)
+                count = np.zeros(nb, np.int32)
+                cached[key] = (start, count, 1)
+            else:
+                neb = -(-e // block_e)
+                firsts = self.dst[np.arange(neb) * block_e]
+                lasts = self.dst[np.minimum(np.arange(1, neb + 1) * block_e, e) - 1]
+                lo = firsts // block_n  # first row block each edge block touches
+                hi = lasts // block_n  # last row block each edge block touches
+                rows = np.arange(nb)
+                start = np.searchsorted(hi, rows, side="left").astype(np.int32)
+                end = np.searchsorted(lo, rows, side="right").astype(np.int32)
+                count = np.maximum(end - start, 0).astype(np.int32)
+                cached[key] = (start, count, max(1, int(count.max())))
+        return cached[key]
+
+
+def dst_sorted_layout(
+    n_vertices: int,
+    src: np.ndarray,
+    dst: np.ndarray,
+    weights: np.ndarray | None = None,
+) -> CsrEdgeLayout:
+    """Build the static dst-sorted layout for an edge set (host-side, once)."""
+    order = np.argsort(dst, kind="stable")
+    w = (
+        np.ones(src.shape[0], dtype=np.float32)
+        if weights is None
+        else weights.astype(np.float32)
+    )
+    return CsrEdgeLayout(
+        n_vertices=n_vertices,
+        src=src[order].astype(np.int32),
+        dst=dst[order].astype(np.int32),
+        weights=w[order],
+    )
+
+
+@dataclasses.dataclass(frozen=True)
 class Graph:
     """Directed graph as an edge list. ``weights`` default to 1.0 (BFS)."""
 

@@ -1,4 +1,4 @@
-"""Pure-JAX subgraph-centric BFS/SSSP superstep engine.
+"""Pure-JAX subgraph-centric BFS/SSSP traversal engines.
 
 Semantics follow GoFFish (paper s3.1): within a BSP superstep, every *active*
 subgraph runs its local traversal to closure over **local** edges (a
@@ -9,8 +9,35 @@ active).  The engine also accumulates the per-partition *work counters*
 (vertices processed, edges examined) that instantiate the paper's time
 function A.
 
-Everything that executes per superstep is a single jitted function; shapes are
-static per graph so it compiles once.
+Two execution modes share the same math:
+
+  * ``make_superstep_fn`` -- one jitted superstep, host loop outside.  Used
+    by the elastic executor, which must interleave placement decisions
+    between supersteps.
+  * ``TraversalEngine`` -- the device-resident engine: the *entire*
+    traversal (inner local-closure loop, remote exchange, work-counter
+    accumulation) is a single jitted ``lax.while_loop`` that writes
+    per-superstep counters into preallocated ``[S, m_max, P]`` device
+    buffers; the host transfers the whole trace once, after convergence.
+    The frontier/distance state carries a leading source axis ``S``, so
+    multi-source sweeps (the BC forward phase) amortize compilation and
+    kernel launches across sources instead of paying a Python loop with a
+    host round-trip per superstep per source.
+
+Both consume the static dst-sorted CSR layout from
+``partition.partitioned_edge_layout``: local and remote edges are split and
+destination-sorted once per graph, so every relaxation takes the
+``indices_are_sorted`` fast path and no per-call ``argsort`` exists anywhere
+on the traversal hot path.
+
+Knobs (see ``TraversalEngine``):
+  * ``m_max``      -- trace-buffer depth = superstep cap.  Buffers are
+    ``[S, m_max, P]`` int32; 4096 x 40 partitions is ~0.7 MB per counter.
+  * batching ``S`` -- callers pass ``[S, n]`` initial state; one compiled
+    ``while_loop`` serves any S (recompiles per distinct S).
+  * ``collect_subgraphs`` -- also record per-superstep active-subgraph
+    bitmasks ``[S, m_max, n_subgraphs]`` on device (the metagraph layer's
+    ground truth), still transferred in the same single bulk pull.
 """
 
 from __future__ import annotations
@@ -21,6 +48,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.graph.partition import partitioned_edge_layout
 from repro.graph.structs import PartitionedGraph
 
 
@@ -33,16 +61,47 @@ class SuperstepResult(NamedTuple):
     inner_iters: jax.Array  # [] int32, local-closure iterations
 
 
+class _DeviceArrays(NamedTuple):
+    """Device copies of the static per-graph arrays, uploaded once per graph
+    and shared by every engine / superstep fn built on it."""
+
+    lsrc: jax.Array
+    ldst: jax.Array
+    lw: jax.Array
+    lpart: jax.Array
+    rsrc: jax.Array
+    rdst: jax.Array
+    rw: jax.Array
+    rpart: jax.Array
+    vpart: jax.Array
+
+
+def _device_arrays(pg: PartitionedGraph) -> _DeviceArrays:
+    cached = pg.__dict__.get("_traversal_device_arrays")
+    if cached is None:
+        layout = partitioned_edge_layout(pg)
+        cached = _DeviceArrays(
+            lsrc=jnp.asarray(layout.local.src),
+            ldst=jnp.asarray(layout.local.dst),
+            lw=jnp.asarray(layout.local.weights),
+            lpart=jnp.asarray(layout.local_part),
+            rsrc=jnp.asarray(layout.remote.src),
+            rdst=jnp.asarray(layout.remote.dst),
+            rw=jnp.asarray(layout.remote.weights),
+            rpart=jnp.asarray(layout.remote_src_part),
+            vpart=jnp.asarray(pg.part_of_vertex.astype(np.int32)),
+        )
+        pg.__dict__["_traversal_device_arrays"] = cached
+    return cached
+
+
 def make_superstep_fn(pg: PartitionedGraph) -> Callable[[jax.Array, jax.Array], SuperstepResult]:
     """Build the jitted one-superstep function for a fixed partitioned graph."""
-    g = pg.graph
-    src = jnp.asarray(g.src)
-    dst = jnp.asarray(g.dst)
-    w = jnp.asarray(g.edge_weights)
-    is_local = jnp.asarray(pg.is_local_edge)
-    e_part = jnp.asarray(pg.edge_src_part.astype(np.int32))
-    v_part = jnp.asarray(pg.part_of_vertex.astype(np.int32))
-    n = g.n_vertices
+    dev = _device_arrays(pg)
+    lsrc, ldst, lw, lpart = dev.lsrc, dev.ldst, dev.lw, dev.lpart
+    rsrc, rdst, rw, rpart = dev.rsrc, dev.rdst, dev.rw, dev.rpart
+    v_part = dev.vpart
+    n = pg.graph.n_vertices
     n_parts = pg.n_parts
 
     @jax.jit
@@ -56,13 +115,15 @@ def make_superstep_fn(pg: PartitionedGraph) -> Callable[[jax.Array, jax.Array], 
 
         def body(carry):
             d, fr, we, wv, touched, it = carry
-            active_e = fr[src] & is_local
-            cand = jnp.where(active_e, d[src] + w, jnp.inf)
-            relaxed = jax.ops.segment_min(cand, dst, num_segments=n)
+            active_e = fr[lsrc]
+            cand = jnp.where(active_e, d[lsrc] + lw, jnp.inf)
+            relaxed = jax.ops.segment_min(
+                cand, ldst, num_segments=n, indices_are_sorted=True
+            )
             new_d = jnp.minimum(d, relaxed)
             improved = new_d < d
             we = we + jax.ops.segment_sum(
-                active_e.astype(jnp.int32), e_part, num_segments=n_parts
+                active_e.astype(jnp.int32), lpart, num_segments=n_parts
             )
             wv = wv + jax.ops.segment_sum(
                 fr.astype(jnp.int32), v_part, num_segments=n_parts
@@ -73,17 +134,208 @@ def make_superstep_fn(pg: PartitionedGraph) -> Callable[[jax.Array, jax.Array], 
         dist2, _, we, wv, touched, iters = jax.lax.while_loop(cond, body, init)
 
         # -- remote exchange at the superstep boundary ------------------------
-        active_e = touched[src] & ~is_local
-        cand = jnp.where(active_e, dist2[src] + w, jnp.inf)
-        relaxed = jax.ops.segment_min(cand, dst, num_segments=n)
+        active_e = touched[rsrc]
+        cand = jnp.where(active_e, dist2[rsrc] + rw, jnp.inf)
+        relaxed = jax.ops.segment_min(
+            cand, rdst, num_segments=n, indices_are_sorted=True
+        )
         new_dist = jnp.minimum(dist2, relaxed)
         next_frontier = new_dist < dist2
         msgs = jax.ops.segment_sum(
-            active_e.astype(jnp.int32), e_part, num_segments=n_parts
+            active_e.astype(jnp.int32), rpart, num_segments=n_parts
         )
         return SuperstepResult(new_dist, next_frontier, we, wv, msgs, iters)
 
     return superstep
+
+
+class TraversalResult(NamedTuple):
+    """Raw device buffers from one batched traversal (one bulk transfer)."""
+
+    dist: jax.Array  # [S, n] float32 final distances
+    frontier: jax.Array  # [S, n] bool; non-empty only if m_max was hit
+    n_supersteps: jax.Array  # [S] int32 supersteps each source actually ran
+    edges_examined: jax.Array  # [S, m_max, P] int32
+    verts_processed: jax.Array  # [S, m_max, P] int32
+    msgs_sent: jax.Array  # [S, m_max, P] int32
+    inner_iters: jax.Array  # [S, m_max] int32
+    sg_active: jax.Array  # [S, m_max, n_sg] bool, or [S, m_max, 0] if off
+
+
+class TraversalEngine:
+    """Device-resident multi-source BSP traversal over a static CSR layout.
+
+    One call = one full traversal batch: the Python/host side contributes
+    exactly two interactions -- launching the jitted ``while_loop`` and one
+    bulk ``device_get`` of the final ``TraversalResult``.
+    """
+
+    def __init__(
+        self,
+        pg: PartitionedGraph,
+        *,
+        m_max: int = 512,
+        collect_subgraphs: bool = False,
+    ):
+        self.pg = pg
+        self.m_max = int(m_max)
+        self.collect_subgraphs = bool(collect_subgraphs)
+        self.n = pg.graph.n_vertices
+        self.n_parts = pg.n_parts
+        self.n_subgraphs = pg.n_subgraphs if collect_subgraphs else 0
+        dev = _device_arrays(pg)  # shared across engines on this graph
+        self._lsrc, self._ldst, self._lw, self._lpart = (
+            dev.lsrc, dev.ldst, dev.lw, dev.lpart,
+        )
+        self._rsrc, self._rdst, self._rw, self._rpart = (
+            dev.rsrc, dev.rdst, dev.rw, dev.rpart,
+        )
+        self._vpart = dev.vpart
+        self._sg = None
+        if collect_subgraphs:
+            if "_sg_device" not in pg.__dict__:
+                pg.__dict__["_sg_device"] = jnp.asarray(
+                    pg.subgraph_of_vertex.astype(np.int32)
+                )
+            self._sg = pg.__dict__["_sg_device"]
+        self._traverse = jax.jit(self._traverse_impl)
+
+    # -- device program ------------------------------------------------------
+
+    def _traverse_impl(self, dist: jax.Array, frontier: jax.Array) -> TraversalResult:
+        s_batch = dist.shape[0]
+        n, p = self.n, self.n_parts
+        m_max = self.m_max
+
+        seg_min_l = jax.vmap(
+            lambda c: jax.ops.segment_min(
+                c, self._ldst, num_segments=n, indices_are_sorted=True
+            )
+        )
+        seg_min_r = jax.vmap(
+            lambda c: jax.ops.segment_min(
+                c, self._rdst, num_segments=n, indices_are_sorted=True
+            )
+        )
+        seg_sum_lp = jax.vmap(
+            lambda v: jax.ops.segment_sum(v, self._lpart, num_segments=p)
+        )
+        seg_sum_rp = jax.vmap(
+            lambda v: jax.ops.segment_sum(v, self._rpart, num_segments=p)
+        )
+        seg_sum_vp = jax.vmap(
+            lambda v: jax.ops.segment_sum(v, self._vpart, num_segments=p)
+        )
+        n_sg = self.n_subgraphs
+        if self.collect_subgraphs:
+            seg_any_sg = jax.vmap(
+                lambda f: jax.ops.segment_max(
+                    f.astype(jnp.int32), self._sg, num_segments=n_sg
+                )
+                > 0
+            )
+
+        def superstep_body(carry):
+            s, d, fr, we, wv, ms, it, sg, nst = carry
+
+            if self.collect_subgraphs:
+                sg = jax.lax.dynamic_update_index_in_dim(
+                    sg, seg_any_sg(fr), s, axis=1
+                )
+            nst = nst + fr.any(axis=1).astype(jnp.int32)
+
+            # -- local closure over the partition-local edges -----------------
+            def icond(c):
+                return c[1].any()
+
+            def ibody(c):
+                d_i, f_i, we_s, wv_s, it_s, touched = c
+                active_e = f_i[:, self._lsrc]
+                cand = jnp.where(active_e, d_i[:, self._lsrc] + self._lw, jnp.inf)
+                new_d = jnp.minimum(d_i, seg_min_l(cand))
+                improved = new_d < d_i
+                we_s = we_s + seg_sum_lp(active_e.astype(jnp.int32))
+                wv_s = wv_s + seg_sum_vp(f_i.astype(jnp.int32))
+                it_s = it_s + f_i.any(axis=1).astype(jnp.int32)
+                return new_d, improved, we_s, wv_s, it_s, touched | improved
+
+            z_p = jnp.zeros((s_batch, p), jnp.int32)
+            z_s = jnp.zeros((s_batch,), jnp.int32)
+            d2, _, we_s, wv_s, it_s, touched = jax.lax.while_loop(
+                icond, ibody, (d, fr, z_p, z_p, z_s, fr)
+            )
+
+            # -- remote exchange at the superstep boundary --------------------
+            active_re = touched[:, self._rsrc]
+            cand = jnp.where(active_re, d2[:, self._rsrc] + self._rw, jnp.inf)
+            new_d = jnp.minimum(d2, seg_min_r(cand))
+            next_fr = new_d < d2
+            ms_s = seg_sum_rp(active_re.astype(jnp.int32))
+
+            we = jax.lax.dynamic_update_index_in_dim(we, we_s, s, axis=1)
+            wv = jax.lax.dynamic_update_index_in_dim(wv, wv_s, s, axis=1)
+            ms = jax.lax.dynamic_update_index_in_dim(ms, ms_s, s, axis=1)
+            it = jax.lax.dynamic_update_index_in_dim(it, it_s, s, axis=1)
+            return s + 1, new_d, next_fr, we, wv, ms, it, sg, nst
+
+        def superstep_cond(carry):
+            s, _, fr, *_ = carry
+            return (s < m_max) & fr.any()
+
+        zeros_smp = jnp.zeros((s_batch, m_max, p), jnp.int32)
+        init = (
+            jnp.int32(0),
+            dist,
+            frontier,
+            zeros_smp,
+            zeros_smp,
+            zeros_smp,
+            jnp.zeros((s_batch, m_max), jnp.int32),
+            jnp.zeros((s_batch, m_max, n_sg), bool),
+            jnp.zeros((s_batch,), jnp.int32),
+        )
+        _, d, fr, we, wv, ms, it, sg, nst = jax.lax.while_loop(
+            superstep_cond, superstep_body, init
+        )
+        return TraversalResult(d, fr, nst, we, wv, ms, it, sg)
+
+    # -- host API ------------------------------------------------------------
+
+    def run(self, sources) -> TraversalResult:
+        """Run one batched traversal from ``sources`` (host ints).
+
+        Returns the *host-side* ``TraversalResult`` (numpy leaves) -- the one
+        bulk transfer of the whole execution.  Raises if any source failed to
+        converge within ``m_max`` supersteps.
+        """
+        sources = np.atleast_1d(np.asarray(sources, dtype=np.int64))
+        s_batch = sources.shape[0]
+        dist = jnp.full((s_batch, self.n), jnp.inf, dtype=jnp.float32)
+        dist = dist.at[jnp.arange(s_batch), jnp.asarray(sources)].set(0.0)
+        frontier = (
+            jnp.zeros((s_batch, self.n), bool)
+            .at[jnp.arange(s_batch), jnp.asarray(sources)]
+            .set(True)
+        )
+        res = jax.device_get(self._traverse(dist, frontier))
+        if res.frontier.any():
+            raise RuntimeError(
+                f"BSP did not converge within {self.m_max} supersteps"
+            )
+        return res
+
+
+def get_engine(
+    pg: PartitionedGraph, *, m_max: int = 512, collect_subgraphs: bool = False
+) -> TraversalEngine:
+    """Per-graph engine cache (keyed by the knobs, stored on the instance)."""
+    engines = pg.__dict__.setdefault("_traversal_engines", {})
+    key = (m_max, collect_subgraphs)
+    if key not in engines:
+        engines[key] = TraversalEngine(
+            pg, m_max=m_max, collect_subgraphs=collect_subgraphs
+        )
+    return engines[key]
 
 
 def reference_sssp(pg: PartitionedGraph, source: int) -> np.ndarray:

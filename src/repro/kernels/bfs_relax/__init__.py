@@ -1,4 +1,4 @@
-from repro.kernels.bfs_relax.ops import bfs_relax
+from repro.kernels.bfs_relax.ops import bfs_relax, bfs_relax_csr
 from repro.kernels.bfs_relax.ref import reference_bfs_relax
 
-__all__ = ["bfs_relax", "reference_bfs_relax"]
+__all__ = ["bfs_relax", "bfs_relax_csr", "reference_bfs_relax"]

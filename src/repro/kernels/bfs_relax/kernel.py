@@ -1,13 +1,23 @@
-"""Min-plus frontier relaxation Pallas TPU kernel -- the paper's per-superstep
+"""Min-plus frontier relaxation Pallas TPU kernels -- the paper's per-superstep
 local-BFS hot spot (GoFFish compute() = repeated edge relaxations).
 
 Same TPU adaptation as segment_sum: candidate distances (dist[src] + w,
 masked by the frontier -- the gather runs outside the kernel where XLA
 schedules it) arrive sorted by destination; each (row-block x edge-block)
 cell selects matching candidates into a dense [bE, bN] matrix and takes a
-columnwise min, skipping off-band cells.  The output tile initializes from
-the current distances, so the kernel computes
-``new_dist = min(dist, segment_min(cand, dst))`` in one pass.
+columnwise min.  The output tile initializes from the current distances, so
+the kernel computes ``new_dist = min(dist, segment_min(cand, dst))`` in one
+pass.
+
+Two variants:
+  * ``bfs_relax_kernel`` -- dense (row_block, edge_block) grid; every tile
+    runs and tests ``intersects`` itself.  Kept for ad-hoc edge orders.
+  * ``bfs_relax_kernel_blockmap`` -- the static-layout fast path.  A
+    precomputed block map (``CsrEdgeLayout.block_ranges``: per row block, the
+    contiguous span of edge blocks that can hit it) is scalar-prefetched, so
+    the grid enumerates only tiles that provably contain in-range edges, and
+    a leading grid dimension batches multiple BFS sources over the same edge
+    blocks (the dst tile is fetched once per (row, t) regardless of S).
 """
 
 from __future__ import annotations
@@ -17,6 +27,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 INF = float("inf")  # python scalar: jnp constants would be captured tracers
 
@@ -75,3 +86,83 @@ def bfs_relax_kernel(
         out_shape=jax.ShapeDtypeStruct((1, n), jnp.float32),
         interpret=interpret,
     )(dst_sorted.reshape(1, e), cand.reshape(1, e), dist.reshape(1, n))[0]
+
+
+def _kernel_blockmap(
+    start_ref,  # [NB] int32 scalar-prefetch: first edge block per row block
+    cnt_ref,  # [NB] int32 scalar-prefetch: edge blocks per row block
+    dst_ref,  # (1, bE) int32 sorted, padded with n_pad
+    cand_ref,  # (1, bE) f32 candidates for source s (inf where inactive)
+    dist_ref,  # (1, bN) f32 current distances for (source s, row block)
+    o_ref,  # (1, bN) f32, persists across the t dimension
+    *,
+    block_n: int,
+    block_e: int,
+):
+    oi = pl.program_id(1)
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init():
+        o_ref[...] = dist_ref[...]
+
+    # the block map guarantees blocks [start, start+cnt) intersect this row
+    # block; tiles beyond cnt are clamped duplicates -- skip their compute
+    @pl.when(t < cnt_ref[oi])
+    def _relax():
+        dst = dst_ref[0, :]
+        rows = oi * block_n + jax.lax.broadcasted_iota(
+            jnp.int32, (block_e, block_n), 1
+        )
+        hit = dst[:, None] == rows
+        m = jnp.where(hit, cand_ref[0, :][:, None], INF)
+        o_ref[0, :] = jnp.minimum(o_ref[0, :], m.min(axis=0))
+
+
+def bfs_relax_kernel_blockmap(
+    start: jax.Array,  # [NB] int32 block map (see CsrEdgeLayout.block_ranges)
+    cnt: jax.Array,  # [NB] int32
+    dst_sorted: jax.Array,  # [Ep] int32 ascending, padded with n_pad
+    cand: jax.Array,  # [S, Ep] f32 candidates aligned with dst_sorted
+    dist: jax.Array,  # [S, Np] f32
+    *,
+    block_n: int,
+    block_e: int,
+    t_max: int,
+    interpret: bool = False,
+) -> jax.Array:
+    """Batched block-skipping relaxation over the static dst-sorted layout."""
+    s, e_pad = cand.shape
+    n_pad = dist.shape[1]
+    assert e_pad % block_e == 0 and n_pad % block_n == 0
+    n_eb = e_pad // block_e
+
+    def _edge_block(s_i, oi, t, start, cnt):
+        del s_i, cnt
+        return (0, jnp.minimum(start[oi] + t, n_eb - 1))
+
+    def _cand_block(s_i, oi, t, start, cnt):
+        del cnt
+        return (s_i, jnp.minimum(start[oi] + t, n_eb - 1))
+
+    def _row_block(s_i, oi, t, start, cnt):
+        del t, start, cnt
+        return (s_i, oi)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(s, n_pad // block_n, t_max),
+        in_specs=[
+            pl.BlockSpec((1, block_e), _edge_block),
+            pl.BlockSpec((1, block_e), _cand_block),
+            pl.BlockSpec((1, block_n), _row_block),
+        ],
+        out_specs=pl.BlockSpec((1, block_n), _row_block),
+    )
+    kern = functools.partial(_kernel_blockmap, block_n=block_n, block_e=block_e)
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((s, n_pad), jnp.float32),
+        interpret=interpret,
+    )(start, cnt, dst_sorted.reshape(1, e_pad), cand, dist)

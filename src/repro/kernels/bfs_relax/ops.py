@@ -1,5 +1,17 @@
-"""jit'd wrapper: computes candidates (XLA gather), sorts by destination,
-pads to block multiples, runs the relaxation kernel."""
+"""jit'd wrappers around the relaxation kernels.
+
+``bfs_relax`` is the general entry: computes candidates (XLA gather), sorts
+by destination unless ``presorted=True``, pads to block multiples, runs the
+dense-grid kernel.
+
+``bfs_relax_csr`` is the static-layout fast path for TPU backends: edges
+come from a ``CsrEdgeLayout`` (dst already ascending -- no argsort, ever),
+the layout's precomputed block map drives the block-skipping kernel, and a
+leading source dimension batches multiple BFS sweeps through one kernel
+launch.  Note the traversal engine currently relaxes via XLA segment ops
+(the right choice on CPU); wiring this kernel into the engine on TPU is a
+ROADMAP open item.
+"""
 
 from __future__ import annotations
 
@@ -8,7 +20,18 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.bfs_relax.kernel import bfs_relax_kernel
+from repro.kernels.bfs_relax.kernel import bfs_relax_kernel, bfs_relax_kernel_blockmap
+
+
+def _block_dims(n: int, e: int, block_n: int, block_e: int) -> tuple[int, int, int, int]:
+    """Clamp block sizes to the problem and round shapes up to multiples:
+    (block_n, block_e, n_pad, e_pad).  Padded dst entries use the sentinel
+    ``n_pad`` (>= every row block), padded candidates are +inf."""
+    block_e = min(block_e, max(8, e))
+    block_n = min(block_n, max(8, n))
+    e_pad = (e + block_e - 1) // block_e * block_e
+    n_pad = (n + block_n - 1) // block_n * block_n
+    return block_n, block_e, n_pad, e_pad
 
 
 @functools.partial(
@@ -32,10 +55,7 @@ def bfs_relax(
     if not presorted:
         order = jnp.argsort(dst)
         dst, cand = dst[order], cand[order]
-    block_e = min(block_e, max(8, e))
-    block_n = min(block_n, max(8, n))
-    e_pad = (e + block_e - 1) // block_e * block_e
-    n_pad = (n + block_n - 1) // block_n * block_n
+    block_n, block_e, n_pad, e_pad = _block_dims(n, e, block_n, block_e)
     dst = jnp.pad(dst, (0, e_pad - e), constant_values=n_pad)
     cand = jnp.pad(cand, (0, e_pad - e), constant_values=jnp.inf)
     dist_p = jnp.pad(dist, (0, n_pad - n), constant_values=jnp.inf)
@@ -43,3 +63,95 @@ def bfs_relax(
         dst, cand, dist_p, block_n=block_n, block_e=block_e, interpret=interpret
     )
     return out[:n]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n", "block_n", "block_e", "t_max", "interpret"),
+)
+def _bfs_relax_csr_jit(
+    dist,  # [S, N] f32
+    frontier,  # [S, N] bool
+    src,  # [E] int32 (dst-sorted order)
+    dst,  # [E] int32 ascending
+    w,  # [E] f32
+    start,  # [NB] int32 block map
+    cnt,  # [NB] int32
+    *,
+    n: int,
+    block_n: int,
+    block_e: int,
+    t_max: int,
+    interpret: bool,
+):
+    e = src.shape[0]
+    cand = jnp.where(frontier[:, src], dist[:, src] + w, jnp.inf)
+    _, _, n_pad, e_pad = _block_dims(n, e, block_n, block_e)
+    dst_p = jnp.pad(dst, (0, e_pad - e), constant_values=n_pad)
+    cand_p = jnp.pad(cand, ((0, 0), (0, e_pad - e)), constant_values=jnp.inf)
+    dist_p = jnp.pad(dist, ((0, 0), (0, n_pad - n)), constant_values=jnp.inf)
+    out = bfs_relax_kernel_blockmap(
+        start,
+        cnt,
+        dst_p,
+        cand_p,
+        dist_p,
+        block_n=block_n,
+        block_e=block_e,
+        t_max=t_max,
+        interpret=interpret,
+    )
+    return out[:, :n]
+
+
+def bfs_relax_csr(
+    dist: jax.Array,  # [N] or [S, N] f32
+    frontier: jax.Array,  # matching bool
+    layout,  # CsrEdgeLayout (static, host-side)
+    *,
+    block_n: int = 512,
+    block_e: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """``min(dist, segment_min(cand, dst))`` over a static dst-sorted layout.
+
+    Always takes the presorted path (the layout *is* the sort), and skips
+    empty (row_block, edge_block) tiles via the layout's block map.  Accepts
+    a batched ``[S, N]`` state to amortize kernel launches across sources.
+    """
+    squeeze = dist.ndim == 1
+    if squeeze:
+        dist, frontier = dist[None], frontier[None]
+    n = dist.shape[1]
+    e = layout.n_edges
+    if e == 0:
+        return dist[0] if squeeze else dist
+    block_n, block_e, _, _ = _block_dims(n, e, block_n, block_e)
+    start, cnt, t_max = layout.block_ranges(block_n, block_e)
+    # upload the static layout once per layout (edge arrays are block-shape
+    # independent; only the block map is keyed by the block geometry)
+    dev_cache = layout.__dict__.setdefault("_device_cache", {})
+    if "edges" not in dev_cache:
+        dev_cache["edges"] = tuple(
+            jnp.asarray(a) for a in (layout.src, layout.dst, layout.weights)
+        )
+    src_d, dst_d, w_d = dev_cache["edges"]
+    key = (block_n, block_e)
+    if key not in dev_cache:
+        dev_cache[key] = (jnp.asarray(start), jnp.asarray(cnt))
+    start_d, cnt_d = dev_cache[key]
+    out = _bfs_relax_csr_jit(
+        dist,
+        frontier,
+        src_d,
+        dst_d,
+        w_d,
+        start_d,
+        cnt_d,
+        n=n,
+        block_n=block_n,
+        block_e=block_e,
+        t_max=t_max,
+        interpret=interpret,
+    )
+    return out[0] if squeeze else out

@@ -84,27 +84,34 @@ def train(
             bundle.abstract_inputs, seed=seed, step=step, bounds=bundle.input_bounds
         )
 
-    with mesh:
-        for step in range(start, steps):
-            if crash_at is not None and step == crash_at:
-                raise RuntimeError(f"injected crash at step {step}")
-            t0 = time.perf_counter()
-            state, metrics = step_fn(state, batch_for(step))
-            loss = float(metrics["loss"])
-            dt = time.perf_counter() - t0
-            durations.append(dt)
-            med = float(np.median(durations))
-            if len(durations) > 3 and dt > step_timeout_factor * med:
-                stragglers += 1
-                if verbose:
-                    print(f"[train] straggler step {step}: {dt:.2f}s vs median {med:.2f}s")
-            losses.append(loss)
-            if not np.isfinite(loss):
-                raise FloatingPointError(f"loss diverged at step {step}")
-            if ckpt and (step + 1) % ckpt_every == 0:
-                ckpt.save_async(state, step + 1)
-            if verbose and (step % max(1, steps // 10) == 0):
-                print(f"[train] step {step}: loss {loss:.4f} ({dt*1e3:.0f} ms)")
+    try:
+        with mesh:
+            for step in range(start, steps):
+                if crash_at is not None and step == crash_at:
+                    raise RuntimeError(f"injected crash at step {step}")
+                t0 = time.perf_counter()
+                state, metrics = step_fn(state, batch_for(step))
+                loss = float(metrics["loss"])
+                dt = time.perf_counter() - t0
+                durations.append(dt)
+                med = float(np.median(durations))
+                if len(durations) > 3 and dt > step_timeout_factor * med:
+                    stragglers += 1
+                    if verbose:
+                        print(f"[train] straggler step {step}: {dt:.2f}s vs median {med:.2f}s")
+                losses.append(loss)
+                if not np.isfinite(loss):
+                    raise FloatingPointError(f"loss diverged at step {step}")
+                if ckpt and (step + 1) % ckpt_every == 0:
+                    ckpt.save_async(state, step + 1)
+                if verbose and (step % max(1, steps // 10) == 0):
+                    print(f"[train] step {step}: loss {loss:.4f} ({dt*1e3:.0f} ms)")
+    finally:
+        # drain any in-flight async save: a Python exception (crash injection,
+        # loss divergence) is a *graceful* failure -- the checkpoint written
+        # before the failing step must be durable for the restart to resume
+        if ckpt:
+            ckpt.wait()
     if ckpt:
         ckpt.save_async(state, steps)
         ckpt.wait()

@@ -1,0 +1,145 @@
+"""Deterministic stand-in for the ``hypothesis`` property-testing API.
+
+The container image does not ship ``hypothesis``; rather than skip the
+property tests, ``conftest.py`` installs this module as ``sys.modules
+["hypothesis"]`` when the real package is missing.  It implements the small
+surface the test-suite uses -- ``given``/``settings`` and the ``strategies``
+listed below -- as a deterministic sampler: each decorated test runs
+``max_examples`` examples drawn from an rng seeded by the test name (stable
+across runs and processes; no shrinking, no database).
+
+When the real hypothesis is installed it is always preferred.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import zlib
+
+import numpy as np
+
+
+class Strategy:
+    """A sampler: ``sample(rng) -> value``.  Composable like hypothesis's."""
+
+    def __init__(self, sample):
+        self.sample = sample
+
+    def map(self, fn):
+        return Strategy(lambda rng: fn(self.sample(rng)))
+
+    def filter(self, pred, *, max_tries: int = 1000):
+        def sample(rng):
+            for _ in range(max_tries):
+                v = self.sample(rng)
+                if pred(v):
+                    return v
+            raise ValueError("filter predicate too restrictive")
+
+        return Strategy(sample)
+
+
+def integers(min_value: int, max_value: int) -> Strategy:
+    return Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def floats(
+    min_value: float = 0.0,
+    max_value: float = 1.0,
+    *,
+    allow_nan: bool = False,
+    allow_infinity: bool = False,
+    width: int = 64,
+) -> Strategy:
+    del allow_nan, allow_infinity  # bounded draws are always finite here
+    dtype = np.float32 if width == 32 else np.float64
+
+    def sample(rng):
+        v = dtype(rng.uniform(min_value, max_value))
+        # respect the closed bounds after the dtype round-trip
+        return float(np.clip(v, min_value, max_value))
+
+    return Strategy(sample)
+
+
+def booleans() -> Strategy:
+    return Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+
+def sampled_from(elements) -> Strategy:
+    pool = list(elements)
+    return Strategy(lambda rng: pool[int(rng.integers(len(pool)))])
+
+
+def lists(elements: Strategy, *, min_size: int = 0, max_size: int = 10) -> Strategy:
+    def sample(rng):
+        k = int(rng.integers(min_size, max_size + 1))
+        return [elements.sample(rng) for _ in range(k)]
+
+    return Strategy(sample)
+
+
+def just(value) -> Strategy:
+    return Strategy(lambda rng: value)
+
+
+def composite(fn):
+    """``@st.composite`` -- fn's first arg becomes a ``draw`` callable."""
+
+    @functools.wraps(fn)
+    def builder(*args, **kwargs):
+        return Strategy(lambda rng: fn(lambda strat: strat.sample(rng), *args, **kwargs))
+
+    return builder
+
+
+def settings(max_examples: int = 10, deadline=None, **_ignored):
+    """Decorator recording the example budget (deadline etc. are ignored)."""
+
+    def deco(fn):
+        fn._mini_hypothesis_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*strat_args, **strat_kwargs):
+    """Run the test once per drawn example, deterministically seeded."""
+
+    def deco(fn):
+        seed = zlib.crc32(f"{fn.__module__}.{fn.__qualname__}".encode())
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            # read at call time so @settings works above or below @given
+            n_examples = getattr(
+                wrapper, "_mini_hypothesis_max_examples",
+                getattr(fn, "_mini_hypothesis_max_examples", 10),
+            )
+            rng = np.random.default_rng(seed)
+            for _ in range(n_examples):
+                drawn = [s.sample(rng) for s in strat_args]
+                drawn_kw = {k: s.sample(rng) for k, s in strat_kwargs.items()}
+                fn(*args, *drawn, **kwargs, **drawn_kw)
+
+        # strategy-provided params are filled here, not by pytest fixtures
+        wrapper.__signature__ = inspect.Signature()
+        return wrapper
+
+    return deco
+
+
+class _StrategiesNamespace:
+    """Stands in for the ``hypothesis.strategies`` submodule."""
+
+    integers = staticmethod(integers)
+    floats = staticmethod(floats)
+    booleans = staticmethod(booleans)
+    sampled_from = staticmethod(sampled_from)
+    lists = staticmethod(lists)
+    just = staticmethod(just)
+    composite = staticmethod(composite)
+
+
+strategies = _StrategiesNamespace()

@@ -63,12 +63,15 @@ def test_decode_matches_forward(arch, key):
     """Greedy prefix replay: decode-step logits must match full-forward logits
     (validates cache layout, RoPE positions, SWA ring semantics)."""
     cfg = reduced_config(ARCHS[arch])
-    params = init_lm_params(key, cfg)
+    # f32 params/cache: the equivalence under test (cache layout, positions)
+    # is dtype-independent, and bf16 rounding noise would force a tolerance
+    # loose enough to mask real off-by-one bugs
+    params = init_lm_params(key, cfg, jnp.float32)
     s = 12
     tokens = jax.random.randint(key, (1, s), 0, cfg.vocab)
     full_logits, _ = lm_forward(params, cfg, tokens)
 
-    cache = init_lm_cache(cfg, 1, 16)
+    cache = init_lm_cache(cfg, 1, 16, jnp.float32)
     dec = jax.jit(lambda p, c, t, pos: lm_decode_step(p, cfg, c, t, pos))
     errs = []
     for pos in range(s):

@@ -59,7 +59,7 @@ def packing_instances(draw):
 def test_ffd_within_theoretical_bound_of_opt(inst):
     """Dosa's tight bound: FFD <= 11/9 * OPT + 6/9."""
     sizes, cap = inst
-    _, ffd_bins = _ffd_pack(sizes, cap)
+    _, ffd_bins, _ = _ffd_pack(sizes, cap)
     _, opt_bins, proven = _exact_pack(sizes, cap, node_budget=500_000)
     if proven:
         assert ffd_bins <= math.floor(11 / 9 * opt_bins + 6 / 9) + 1e-9
@@ -70,8 +70,8 @@ def test_ffd_within_theoretical_bound_of_opt(inst):
 @settings(max_examples=100, deadline=None)
 def test_packings_respect_capacity(inst):
     sizes, cap = inst
-    for packer in (_ffd_pack, lambda s, c: _exact_pack(s, c)[:2]):
-        assign, n_bins = packer(sizes, cap)
+    for packer in (_ffd_pack, _exact_pack):
+        assign, n_bins, _ = packer(sizes, cap)
         loads = np.zeros(n_bins)
         np.add.at(loads, assign, sizes)
         assert loads.max() <= cap + 1e-6

@@ -44,7 +44,7 @@ def test_opt_beats_ffd_on_adversarial_case():
     # items 5,5,4,4,3,3,3,3 -> FFD: [5,5][4,4][3,3,3][3] = 4 bins; OPT: 3 bins
     sizes = np.array([5.0, 5, 4, 4, 3, 3, 3, 3])
     cap = 10.0
-    _, ffd_bins = _ffd_pack(sizes, cap)
+    _, ffd_bins, _ = _ffd_pack(sizes, cap)
     assign, opt_bins, proven = _exact_pack(sizes, cap)
     assert proven
     assert opt_bins == 3 and ffd_bins == 4

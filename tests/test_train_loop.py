@@ -45,9 +45,11 @@ def test_checkpointer_retention(tmp_path):
 
 
 def test_train_smoke_and_loss_decreases():
-    out = train("tinyllama-1.1b", "train_4k", steps=8, verbose=False)
-    assert len(out["losses"]) == 8
-    assert out["losses"][-1] < out["losses"][0]
+    # fresh random batch per step: compare window means, not endpoints (the
+    # per-batch loss noise is larger than 8 steps of learning signal)
+    out = train("tinyllama-1.1b", "train_4k", steps=16, verbose=False)
+    assert len(out["losses"]) == 16
+    assert np.mean(out["losses"][-4:]) < np.mean(out["losses"][:4])
 
 
 def test_crash_restart_resumes_identically(tmp_path):

@@ -1,0 +1,193 @@
+"""Device-resident traversal engine + static-CSR relax kernel regression.
+
+Sweeps the block-skipping kernel (interpret mode) against the pure-jnp
+oracle and the engine against the host Bellman-Ford oracle, on random ragged
+sizes -- including the ``presorted=True`` legacy path and n/e odd with
+respect to the block sizes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.graph import bfs_grow_partition, erdos_renyi_graph, hash_partition
+from repro.graph.bsp import concat_traces, run_bc_forward, run_sssp
+from repro.graph.generators import weighted
+from repro.graph.structs import dst_sorted_layout
+from repro.graph.traversal import get_engine, make_superstep_fn, reference_sssp
+from repro.kernels.bfs_relax import bfs_relax, bfs_relax_csr, reference_bfs_relax
+
+RAGGED_CASES = [
+    # (n, e) deliberately not multiples of the 64-block sizes used below
+    (100, 300),
+    (257, 1023),
+    (512, 2048),
+    (1000, 333),
+    (65, 65),
+    (7, 5),
+]
+
+
+def _random_relax_inputs(n, e, seed):
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, e).astype(np.int32)
+    dst = rng.integers(0, n, e).astype(np.int32)
+    w = rng.uniform(0.5, 2.0, e).astype(np.float32)
+    dist = np.where(rng.random(n) < 0.5, rng.uniform(0, 10, n), np.inf).astype(
+        np.float32
+    )
+    frontier = rng.random(n) < 0.3
+    return src, dst, w, dist, frontier
+
+
+@pytest.mark.parametrize("case", RAGGED_CASES)
+def test_bfs_relax_csr_matches_reference_ragged(case):
+    n, e = case
+    src, dst, w, dist, frontier = _random_relax_inputs(n, e, seed=n * 31 + e)
+    layout = dst_sorted_layout(n, src, dst, w)
+    out = bfs_relax_csr(
+        jnp.asarray(dist), jnp.asarray(frontier), layout,
+        block_n=64, block_e=64, interpret=True,
+    )
+    ref = reference_bfs_relax(
+        jnp.asarray(dist), jnp.asarray(frontier),
+        jnp.asarray(src), jnp.asarray(dst), jnp.asarray(w),
+    )
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+@pytest.mark.parametrize("case", RAGGED_CASES[:4])
+def test_bfs_relax_presorted_path_matches_reference(case):
+    """The legacy wrapper's presorted=True path must skip the argsort and
+    still be exact when fed the static layout's edge order."""
+    n, e = case
+    src, dst, w, dist, frontier = _random_relax_inputs(n, e, seed=e * 17 + n)
+    layout = dst_sorted_layout(n, src, dst, w)
+    out = bfs_relax(
+        jnp.asarray(dist), jnp.asarray(frontier),
+        jnp.asarray(layout.src), jnp.asarray(layout.dst), jnp.asarray(layout.weights),
+        block_n=64, block_e=64, interpret=True, presorted=True,
+    )
+    ref = reference_bfs_relax(
+        jnp.asarray(dist), jnp.asarray(frontier),
+        jnp.asarray(src), jnp.asarray(dst), jnp.asarray(w),
+    )
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_bfs_relax_csr_batched_matches_per_source():
+    n, e, s_batch = 203, 611, 5
+    rng = np.random.default_rng(3)
+    src = rng.integers(0, n, e).astype(np.int32)
+    dst = rng.integers(0, n, e).astype(np.int32)
+    w = rng.uniform(0.5, 2.0, e).astype(np.float32)
+    layout = dst_sorted_layout(n, src, dst, w)
+    dist = jnp.asarray(
+        np.where(rng.random((s_batch, n)) < 0.5, rng.uniform(0, 10, (s_batch, n)), np.inf),
+        jnp.float32,
+    )
+    frontier = jnp.asarray(rng.random((s_batch, n)) < 0.3)
+    out = bfs_relax_csr(dist, frontier, layout, block_n=64, block_e=64, interpret=True)
+    for s in range(s_batch):
+        ref = reference_bfs_relax(
+            dist[s], frontier[s], jnp.asarray(src), jnp.asarray(dst), jnp.asarray(w)
+        )
+        np.testing.assert_array_equal(np.asarray(out[s]), np.asarray(ref))
+
+
+@pytest.mark.parametrize("partitioner", [hash_partition, bfs_grow_partition])
+def test_batched_engine_bitmatches_oracle_every_source(partitioner):
+    """Acceptance: batched engine distances bit-match reference_sssp for
+    every source in the batch (unit-weight BFS distances are exact in f32)."""
+    g = erdos_renyi_graph(300, 5.0, seed=11)
+    pg = partitioner(g, 4)
+    sources = [0, 17, 123, 299]
+    res = get_engine(pg, m_max=256).run(sources)
+    for i, s in enumerate(sources):
+        ref = reference_sssp(pg, s)
+        np.testing.assert_array_equal(res.dist[i], ref.astype(np.float32))
+
+
+def test_batched_engine_weighted_matches_oracle():
+    g = weighted(erdos_renyi_graph(250, 5.0, seed=13), seed=2)
+    pg = bfs_grow_partition(g, 4, seed=3)
+    sources = [1, 42, 200]
+    res = get_engine(pg, m_max=256).run(sources)
+    for i, s in enumerate(sources):
+        np.testing.assert_allclose(
+            res.dist[i], reference_sssp(pg, s), rtol=1e-6
+        )
+
+
+def test_engine_trace_matches_serial_superstep_driver():
+    """The device-resident trace must equal a host-driven superstep loop's
+    counters row for row (same math, different orchestration)."""
+    g = erdos_renyi_graph(220, 4.0, seed=5)
+    pg = bfs_grow_partition(g, 3, seed=1)
+    source = 7
+
+    superstep = make_superstep_fn(pg)
+    n = g.n_vertices
+    dist = jnp.full((n,), jnp.inf, jnp.float32).at[source].set(0.0)
+    frontier = jnp.zeros((n,), bool).at[source].set(True)
+    rows_e, rows_v, rows_m, iters = [], [], [], []
+    while bool(frontier.any()):
+        r = superstep(dist, frontier)
+        dist, frontier = r.dist, r.next_frontier
+        rows_e.append(np.asarray(r.edges_examined))
+        rows_v.append(np.asarray(r.verts_processed))
+        rows_m.append(np.asarray(r.msgs_sent))
+        iters.append(int(r.inner_iters))
+
+    _, trace = run_sssp(pg, source, collect_subgraphs=False)
+    np.testing.assert_array_equal(trace.edges_examined, np.stack(rows_e))
+    np.testing.assert_array_equal(trace.verts_processed, np.stack(rows_v))
+    np.testing.assert_array_equal(trace.msgs_sent, np.stack(rows_m))
+    np.testing.assert_array_equal(trace.inner_iters, np.asarray(iters))
+
+
+def test_bc_forward_batched_equals_serial_waves():
+    """run_bc_forward (one batched traversal) must produce the same
+    concatenated trace as independent per-source runs."""
+    g = erdos_renyi_graph(180, 4.0, seed=9)
+    pg = bfs_grow_partition(g, 4, seed=2)
+    sources = [0, 50, 99, 150]
+    batched = run_bc_forward(pg, sources, max_supersteps=128)
+    serial = concat_traces(
+        [
+            run_sssp(pg, s, max_supersteps=128, collect_subgraphs=False)[1]
+            for s in sources
+        ]
+    )
+    np.testing.assert_array_equal(batched.active, serial.active)
+    np.testing.assert_array_equal(batched.edges_examined, serial.edges_examined)
+    np.testing.assert_array_equal(batched.verts_processed, serial.verts_processed)
+    np.testing.assert_array_equal(batched.msgs_sent, serial.msgs_sent)
+    np.testing.assert_array_equal(batched.inner_iters, serial.inner_iters)
+
+
+def test_engine_raises_on_superstep_cap():
+    g = erdos_renyi_graph(200, 4.0, seed=21)
+    pg = hash_partition(g, 4)
+    with pytest.raises(RuntimeError, match="did not converge"):
+        get_engine(pg, m_max=2).run([0])
+
+
+def test_active_subgraph_sets_from_device_counters():
+    """collect_subgraphs must reproduce the host-side definition: the set of
+    subgraphs holding frontier vertices at superstep start."""
+    g = erdos_renyi_graph(240, 4.0, seed=7)
+    pg = bfs_grow_partition(g, 4, seed=4)
+    dist, trace = run_sssp(pg, 0)
+    assert len(trace.active_subgraphs) == trace.n_supersteps
+    # superstep 0: exactly the source's subgraph
+    np.testing.assert_array_equal(
+        trace.active_subgraphs[0], [pg.subgraph_of_vertex[0]]
+    )
+    # active subgraphs always live in active partitions
+    for s in range(trace.n_supersteps):
+        parts = set(np.flatnonzero(trace.active[s]).tolist())
+        assert {
+            int(pg.part_of_subgraph[sg]) for sg in trace.active_subgraphs[s]
+        } == parts
