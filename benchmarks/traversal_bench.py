@@ -1,5 +1,6 @@
 """Traversal-engine benchmark: device-resident batched BC vs the serial
-per-superstep driver the seed shipped with.
+per-superstep driver the seed shipped with, plus the windowed elastic
+executor sweep.
 
 Measures, on a synthetic BC workload (>= 16 sources on an R-MAT graph):
   * serial driver  -- per-source Python superstep loop, one host sync
@@ -8,26 +9,35 @@ Measures, on a synthetic BC workload (>= 16 sources on an R-MAT graph):
   * batched engine -- one jitted ``lax.while_loop`` over ``[S, n]`` state,
     one bulk transfer per traversal
 
-and writes ``BENCH_traversal.json`` (supersteps/sec, edges/sec, speedup,
-host sync counts) so the perf trajectory is tracked from this PR onward.
+and, for the elastic executor, a window-size sweep (``k in {1, 4, 8, 16}``)
+on two graph shapes (power-law R-MAT vs uniform Erdos-Renyi): host-sync
+counts per run, the ``ceil(S/k) + 1`` sync-budget check at ``k=8``, and the
+windowed-vs-per-superstep wall speedup.
+
+Writes ``BENCH_traversal.json`` so the perf trajectory is tracked per PR.
 """
 
 from __future__ import annotations
 
 import json
+import math
 import time
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.graph.bsp import run_bc_forward
-from repro.graph.generators import rmat_graph
+from repro.core.elastic import ElasticBSPExecutor
+from repro.core.placement import ffd_placement
+from repro.core.timing import TimeFunction
+from repro.graph.bsp import run_bc_forward, run_sssp
+from repro.graph.generators import erdos_renyi_graph, rmat_graph
 from repro.graph.partition import bfs_grow_partition
 from repro.graph.traversal import make_superstep_fn
 
 N_SOURCES = 16
 SCALE, DEGREE = 12, 8  # R-MAT 2^12 vertices, avg degree 8
 N_PARTS = 8
+WINDOW_SIZES = (1, 4, 8, 16)
 OUT_PATH = "BENCH_traversal.json"
 
 
@@ -57,6 +67,34 @@ def _serial_bc(pg, sources):
             syncs += 3
             total_steps += 1
     return total_steps, syncs
+
+
+def _window_sweep(pg, source: int = 0) -> dict:
+    """Elastic-executor window sweep on one partitioned graph: wall time and
+    host syncs per window size, same ffd plan throughout."""
+    _, trace = run_sssp(pg, source, collect_subgraphs=False)
+    plan = ffd_placement(TimeFunction.from_trace(trace))
+    ex = ElasticBSPExecutor(pg)
+    per_k = {}
+    for k in WINDOW_SIZES:
+        ex.run(source, plan, window=k)  # warm (compile) this window depth
+        t0 = time.perf_counter()
+        rep = ex.run(source, plan, window=k)
+        wall = time.perf_counter() - t0
+        per_k[str(k)] = {
+            "wall_s": wall,
+            "host_syncs": rep.host_syncs,
+            "supersteps": rep.n_supersteps,
+        }
+    s = per_k["8"]["supersteps"]
+    return {
+        "n_vertices": pg.graph.n_vertices,
+        "n_edges": pg.graph.n_edges,
+        "n_parts": pg.n_parts,
+        "windows": per_k,
+        "speedup_w8_vs_w1": per_k["1"]["wall_s"] / per_k["8"]["wall_s"],
+        "sync_budget_w8_ok": per_k["8"]["host_syncs"] <= math.ceil(s / 8) + 1,
+    }
 
 
 def run(verbose: bool = True) -> dict:
@@ -94,6 +132,14 @@ def run(verbose: bool = True) -> dict:
         "host_syncs_serial": int(serial_syncs),
         "host_syncs_batched": 1,  # one bulk device_get per traversal batch
     }
+
+    # windowed elastic executor: power-law (R-MAT) vs uniform (Erdos-Renyi)
+    g_uni = erdos_renyi_graph(2**SCALE, float(DEGREE), seed=7)
+    out["window_sweep"] = {
+        "rmat": _window_sweep(pg),
+        "uniform": _window_sweep(bfs_grow_partition(g_uni, N_PARTS, seed=1)),
+    }
+
     with open(OUT_PATH, "w") as f:
         json.dump(out, f, indent=2)
     if verbose:
@@ -111,6 +157,13 @@ def run(verbose: bool = True) -> dict:
             f"{out['supersteps_per_sec']:.0f} supersteps/s, "
             f"{out['edges_examined_per_sec']:.3g} edges/s -> {OUT_PATH}"
         )
+        for shape, sw in out["window_sweep"].items():
+            syncs = {k: v["host_syncs"] for k, v in sw["windows"].items()}
+            print(
+                f"window sweep [{shape}]: syncs per k {syncs}, "
+                f"w8 vs w1 speedup {sw['speedup_w8_vs_w1']:.2f}x, "
+                f"budget ok: {sw['sync_budget_w8_ok']}"
+            )
     return out
 
 

@@ -2,10 +2,18 @@
 
 For each paper workload: plan placement from the metagraph *prediction*
 (launch-time planning, no profiling run), execute the BFS under that plan on
-the elastic executor (partition state device-placed per schedule, migrations
-tracked), bill the actual execution, and compare against the default
+the elastic executor (partition state device-resident per schedule, migration
+bytes billed), bill the actual execution, and compare against the default
 placement and the trace-oracle plan.  Also demonstrates dynamic re-planning
 (paper s7 future work) when the prediction diverges.
+
+Knobs:
+  --window K   supersteps per device launch (the windowed executor pulls one
+               O(K*P) counter window per placement point -- ceil(S/K)+1 host
+               syncs per run; K=1 is the legacy per-superstep path)
+  --no-replan  disable online re-planning; with it on, a divergence replans
+               the full remaining horizon via activity-decay extrapolation
+               (repro.core.replan, one replan per divergence)
 
   PYTHONPATH=src python examples/elastic_bfs.py [--workloads LIVJ/8P ...]
 """
@@ -42,6 +50,14 @@ def main():
     ap.add_argument("--workloads", nargs="*", default=["LIVJ/8P", "USRN/8P"])
     ap.add_argument("--strategy", default="lap", choices=["ffd", "lap"])
     ap.add_argument(
+        "--window", type=int, default=8, metavar="K",
+        help="supersteps per device launch (1 = legacy per-superstep sync)",
+    )
+    ap.add_argument(
+        "--no-replan", action="store_true",
+        help="disable online re-planning on prediction divergence",
+    )
+    ap.add_argument(
         "--bc", type=int, default=0, metavar="N",
         help="also run an N-source BC wave demo on the batched engine",
     )
@@ -68,15 +84,21 @@ def main():
             1e-12, TimeFunction.from_trace(wl.trace).t_min()
         )
         ex = ElasticBSPExecutor(wl.pg, tau_scale=tau_scale, billing=model)
-        rep = ex.run(wl.source, plan, strategy_fn=strat, replan=True)
+        rep = ex.run(
+            wl.source, plan, strategy_fn=strat, replan=not args.no_replan,
+            window=args.window,
+        )
         print(
-            f"executed {rep.n_supersteps} supersteps "
-            f"({rep.replans} replans, {rep.n_migrations} migrations, "
-            f"wall {rep.wall_seconds:.1f}s on this host)"
+            f"executed {rep.n_supersteps} supersteps in windows of "
+            f"{rep.window} ({rep.host_syncs} host syncs, {rep.replans} "
+            f"replans, {rep.n_migrations} migrations moving "
+            f"{rep.migration_bytes} B, wall {rep.wall_seconds:.1f}s on this "
+            f"host)"
         )
         print(
             f"actual billing: {rep.cost.cost_quanta} core-min, makespan "
-            f"{rep.cost.makespan:.1f}s = {rep.cost.makespan_over_tmin:.2f}x T_Min"
+            f"{rep.cost.makespan:.1f}s = {rep.cost.makespan_over_tmin:.2f}x "
+            f"T_Min (migration {rep.migration_secs:.2f}s billed in)"
         )
 
         # 3. compare against default and the trace-oracle plan

@@ -5,7 +5,8 @@
   placement   -- Default / OPT / FFD / MF-P / LA-P placement strategies
   activation  -- VM keep-vs-terminate policy across idle gaps
   billing     -- makespan / core-min cost / core-secs / under-utilization
-  elastic     -- executor mapping placement schedules onto jax devices
+  replan      -- online re-planning: activity-decay extrapolation + splice
+  elastic     -- windowed executor mapping placement schedules onto jax devices
 """
 
 from repro.core.timing import TimeFunction
@@ -20,8 +21,12 @@ from repro.core.placement import (
     STRATEGIES,
 )
 from repro.core.billing import BillingModel, CostReport, evaluate
+from repro.core.replan import OnlineReplanner, ReplanConfig, extrapolate_tau
 
 __all__ = [
+    "OnlineReplanner",
+    "ReplanConfig",
+    "extrapolate_tau",
     "TimeFunction",
     "Metagraph",
     "build_metagraph",

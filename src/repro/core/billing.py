@@ -51,6 +51,7 @@ class CostReport:
     total_vms: int
     vm_starts: int
     data_move_secs: float = 0.0
+    migration_secs: float = 0.0  # elastic-executor partition moves (bytes/bw)
 
     @property
     def makespan_over_tmin(self) -> float:
@@ -63,12 +64,34 @@ def evaluate(
     *,
     data_movement: bool = False,
     partition_bytes: np.ndarray | None = None,
+    migration_busy: np.ndarray | None = None,
 ) -> CostReport:
+    """Bill a placement.  ``migration_busy`` is an optional ``[m, J']`` matrix
+    of seconds each VM spends receiving migrated partition state per superstep
+    (``partition_bytes / move_bandwidth``, produced by the elastic executor);
+    it extends each receiving VM's busy time and therefore the superstep
+    durations, makespan, and billed quanta."""
     model = model or BillingModel()
     tau = placement.tau
     m, n = tau.shape
     loads = placement.loads()  # [m, J]
     n_vms = loads.shape[1]
+    migration_secs = 0.0
+    if migration_busy is not None and migration_busy.size:
+        if migration_busy.shape[0] != m:
+            raise ValueError(
+                f"migration_busy has {migration_busy.shape[0]} supersteps, "
+                f"placement has {m}"
+            )
+        migration_secs = float(migration_busy.sum())
+        # a migration target may be a VM no active partition ever ran on;
+        # widen to the larger VM count and bill it for the transfer time
+        j_all = max(n_vms, migration_busy.shape[1])
+        wide = np.zeros((m, j_all))
+        wide[:, : loads.shape[1]] = loads
+        wide[:, : migration_busy.shape[1]] += migration_busy
+        loads = wide
+        n_vms = j_all
 
     move = np.zeros_like(loads)
     data_move_secs = 0.0
@@ -90,9 +113,14 @@ def evaluate(
     busy = loads + move
     if placement.always_on:
         # default strategy: all n VMs provisioned every superstep
-        durations = tau.max(axis=1)
-        t_min = float(durations.sum())
-        makespan = t_min
+        compute = tau.max(axis=1)
+        t_min = float(compute.sum())
+        # migration transfers extend the receiving VM's superstep, and hence
+        # the barrier-synchronized duration (loads was widened above)
+        durations = (
+            np.maximum(compute, loads.max(axis=1)) if migration_secs else compute
+        )
+        makespan = float(durations.sum())
         core_secs = float(durations.sum() * n)
         useful = float(tau.sum())
         quanta = n * max(1, math.ceil(makespan / model.delta - _EPS))
@@ -112,6 +140,7 @@ def evaluate(
             peak_vms=n,
             total_vms=n,
             vm_starts=n,
+            migration_secs=migration_secs,
         )
 
     durations = busy.max(axis=1) if n_vms else np.zeros(m)
@@ -156,4 +185,5 @@ def evaluate(
         total_vms=n_vms,
         vm_starts=sessions.n_starts,
         data_move_secs=data_move_secs,
+        migration_secs=migration_secs,
     )

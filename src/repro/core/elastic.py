@@ -4,25 +4,43 @@ on a pool of jax devices standing in for cloud VMs.
 The mapping from the paper's cloud model to JAX:
 
   VM slot j            -> a jax device (round-robin over the local pool)
-  partition placement  -> ``jax.device_put`` of the partition's state shard
-                          onto its VM's device at superstep start (movement
-                          only happens when the mapping changed -- pinned
-                          strategies therefore never move state)
+  partition placement  -> the partition's state shard is kept device-resident
+                          on its VM's device; when the schedule moves it, the
+                          shard is ``jax.device_put`` to the target device and
+                          the transfer (``partition_bytes / move_bandwidth``)
+                          is billed into the receiving VM's busy time (pinned
+                          strategies therefore never move state and pay no
+                          migration seconds)
   superstep compute    -> the jitted global relaxation (mathematically equal
                           to per-VM sequential execution of its partitions;
                           per-VM time is accounted from the exact work
                           counters x the calibrated rate)
   billing              -> repro.core.billing on the *actual* executed trace
 
+Windowed execution (the scaling knob): ``run(..., window=k)`` executes ``k``
+supersteps per device launch on the resumable ``TraversalEngine`` window API
+and pulls only the ``O(k*P)`` counter window at each placement point -- one
+bulk host sync per window (``ceil(S/k) + 1`` syncs per run, the +1 being the
+final distance pull) instead of a frontier/counter round-trip every
+superstep.  ``window=1`` is the legacy per-superstep path, bit-identical in
+``dist`` and work counters for any ``k`` (the math does not depend on where
+the window boundaries fall).
+
 Beyond the paper: ``replan=True`` complements the static a-priori plan with
 dynamic re-planning (their s7 future work) -- when the actually-active
-partition set diverges from the prediction at a superstep, the remaining
-supersteps are re-planned from the observed timings.
+partition set diverges from the prediction at a window boundary, the
+remaining horizon is re-planned by ``repro.core.replan.OnlineReplanner``:
+the observed tau prefix is extrapolated per-partition (geometric activity
+decay + an activation floor) and the strategy re-runs over the full
+remaining horizon, so one divergence costs one replan.  Replan knobs
+(horizon bounds, decay model, activation floor) live on
+``replan.ReplanConfig`` and can be passed via ``replan_config``.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from typing import Callable
 
@@ -32,9 +50,10 @@ import numpy as np
 
 from repro.core.billing import BillingModel, CostReport, evaluate
 from repro.core.placement import Placement
+from repro.core.replan import OnlineReplanner, ReplanConfig
 from repro.core.timing import DEFAULT_ALPHA, DEFAULT_BETA, TimeFunction
 from repro.graph.structs import PartitionedGraph
-from repro.graph.traversal import make_superstep_fn
+from repro.graph.traversal import get_engine
 
 
 @dataclasses.dataclass
@@ -44,8 +63,17 @@ class ExecutionReport:
     cost: CostReport
     n_supersteps: int
     n_migrations: int  # partition moves between devices
+    migration_bytes: int  # total bytes of partition state moved
     replans: int
+    host_syncs: int  # bulk device->host pulls (windows + final dist)
+    window: int
     wall_seconds: float
+
+    @property
+    def migration_secs(self) -> float:
+        """bytes / move_bandwidth, billed into the makespan (single source
+        of truth: the cost report)."""
+        return self.cost.migration_secs
 
 
 class ElasticBSPExecutor:
@@ -65,20 +93,16 @@ class ElasticBSPExecutor:
         self.beta = beta
         self.tau_scale = tau_scale
         self.billing = billing or BillingModel()
-        self.superstep = make_superstep_fn(pg)
+        self.engine = get_engine(pg)
         self.devices = jax.devices()
-        # vertex ids grouped per partition so partition state is contiguous
-        self.v_order = np.argsort(pg.part_of_vertex, kind="stable")
-        # device-side partition activity: pull [P] bools per superstep, not
-        # the full [n] frontier (the executor must interleave placement
-        # decisions between supersteps, so *some* per-step sync is inherent
-        # -- keep it O(P))
-        v_part = jnp.asarray(pg.part_of_vertex.astype(np.int32))
-        self._active_parts = jax.jit(
-            lambda fr: jax.ops.segment_max(
-                fr.astype(jnp.int32), v_part, num_segments=pg.n_parts
-            )
-            > 0
+        # per-partition vertex index lists (device) for shard gathers, and
+        # shard sizes in bytes (dist is float32) for migration pricing
+        self._part_indices = [
+            jnp.asarray(np.flatnonzero(pg.part_of_vertex == i))
+            for i in range(pg.n_parts)
+        ]
+        self.partition_bytes = np.array(
+            [4 * ix.shape[0] for ix in self._part_indices], dtype=np.int64
         )
 
     def _device_of_vm(self, j: int):
@@ -91,79 +115,116 @@ class ElasticBSPExecutor:
         *,
         strategy_fn: Callable[[TimeFunction], Placement] | None = None,
         replan: bool = False,
+        replan_config: ReplanConfig | None = None,
+        window: int = 8,
         max_supersteps: int = 4096,
     ) -> ExecutionReport:
         pg = self.pg
         t0 = time.perf_counter()
-        n = pg.graph.n_vertices
-        dist = jnp.full((n,), jnp.inf, dtype=jnp.float32).at[source].set(0.0)
-        frontier = jnp.zeros((n,), dtype=bool).at[source].set(True)
+        window = max(1, int(window))
+
+        state = self.engine.init_state([source])
+        replanner = OnlineReplanner(
+            pg.n_parts, strategy_fn, replan_config or ReplanConfig()
+        )
 
         vm_of = plan.vm_of.copy()
         horizon = vm_of.shape[0]
         prev_vm = np.full(pg.n_parts, -1, dtype=np.int64)
+        shards: dict[int, jax.Array] = {}  # partition -> device-resident state
         migrations = 0
+        migration_bytes = 0
+        mig_events: list[tuple[int, int, float]] = []  # (superstep, vm, secs)
         replans = 0
+        host_syncs = 0
         taus: list[np.ndarray] = []
         vm_rows: list[np.ndarray] = []
 
         s = 0
-        while s < max_supersteps:
-            part_mask = np.asarray(self._active_parts(frontier))
-            if not part_mask.any():
-                break
-            active_parts = np.flatnonzero(part_mask)
+        # superstep 0's active set is the source's partition -- host-known,
+        # so the first placement decision costs no device round-trip
+        active_next = np.zeros(pg.n_parts, dtype=bool)
+        active_next[pg.part_of_vertex[source]] = True
+        done = False
 
+        while not done and s < max_supersteps:
+            # -- placement point: (re-)plan, then commit to a whole window ---
             if s >= horizon or (
-                replan and not set(active_parts) <= set(np.flatnonzero(vm_of[s] >= 0))
+                replan and bool((active_next & (vm_of[s] < 0)).any())
             ):
-                # prediction diverged (or ran past the plan): re-plan the rest
-                if strategy_fn is None:
-                    # fall back: extend the schedule by pinning actives to VM 0..
-                    row = np.full(pg.n_parts, -1, dtype=np.int64)
-                    row[active_parts] = np.arange(active_parts.size)
-                    vm_of = np.vstack([vm_of[:s], np.tile(row, (max(1, horizon - s) or 1, 1))])
-                else:
-                    observed = (
-                        np.vstack(taus) if taus else np.zeros((0, pg.n_parts))
+                # prediction diverged (or ran past the plan): re-plan the
+                # entire remaining horizon from the observed prefix
+                vm_of = replanner.replan(vm_of, s, active_next)
+                # pad to a window multiple (repeat the last planned row, which
+                # places every partition thanks to the activation floor) so
+                # replans never create remainder-sized window launches
+                rem = (vm_of.shape[0] - s) % window
+                if rem:
+                    vm_of = np.vstack(
+                        [vm_of, np.tile(vm_of[-1], (window - rem, 1))]
                     )
-                    est_row = np.zeros((1, pg.n_parts))
-                    est_row[0, active_parts] = (
-                        observed[observed > 0].mean() if (observed > 0).any() else 1.0
-                    )
-                    future = np.vstack([observed, est_row])
-                    newplan = strategy_fn(TimeFunction(future))
-                    vm_of = np.vstack([vm_of[:s], newplan.vm_of[s:]]) if (
-                        newplan.vm_of.shape[0] > s
-                    ) else np.vstack([vm_of[:s], newplan.vm_of[-1:][None][0]])
                 replans += 1
                 horizon = vm_of.shape[0]
 
-            row = vm_of[s] if s < vm_of.shape[0] else vm_of[-1]
-            # place partition state on its VM's device (movement = migration)
-            for i in active_parts:
-                j = int(row[i]) if row[i] >= 0 else int(prev_vm[i]) if prev_vm[i] >= 0 else 0
-                if prev_vm[i] != j:
+            # never run past the plan: divergence inside a window is caught
+            # at the next boundary, but an unplanned superstep never executes.
+            # (each distinct k compiles the window program once per engine --
+            # replanned horizons are padded to window multiples above, so the
+            # only remainder launch is a plan's final partial window)
+            k = max(1, min(window, horizon - s, max_supersteps - s))
+            rows = vm_of[s : s + k]
+
+            # -- one device launch, one bulk counter pull --------------------
+            wres = self.engine.run_window(state, k)
+            host_syncs += 1
+            state = wres.state
+            steps = int(wres.n_supersteps[0]) - s
+
+            # -- stage the executed supersteps' scheduled movement -----------
+            # only supersteps that actually ran move state: a window tail past
+            # convergence never migrates, so counted moves == billed moves
+            for t in range(steps):
+                row = rows[t]
+                for i in np.flatnonzero(row >= 0):
+                    j = int(row[i])
+                    if prev_vm[i] == j:
+                        continue
+                    # the shard's device_put result is retained for the whole
+                    # run: partition i's state lives on its VM's device (the
+                    # engine remains the compute source of truth -- this dict
+                    # is the simulated data plane whose content refreshes at
+                    # each move)
+                    shards[i] = jax.device_put(
+                        state.dist[0, self._part_indices[i]],
+                        self._device_of_vm(j),
+                    )
                     if prev_vm[i] >= 0:
                         migrations += 1
-                    # stage this partition's state shard onto the VM's device
-                    vmask = pg.part_of_vertex == i
-                    _ = jax.device_put(
-                        np.asarray(dist)[vmask], self._device_of_vm(j)
-                    )
+                        migration_bytes += int(self.partition_bytes[i])
+                        mig_events.append(
+                            (
+                                s + t,
+                                j,
+                                self.partition_bytes[i] / self.billing.move_bandwidth,
+                            )
+                        )
                     prev_vm[i] = j
 
-            res = self.superstep(dist, frontier)
-            dist, frontier = res.dist, res.next_frontier
-            tau_row = self.tau_scale * (
-                self.alpha * np.asarray(res.verts_processed, dtype=np.float64)
-                + self.beta * np.asarray(res.edges_examined, dtype=np.float64)
-            )
-            active_mask = np.zeros(pg.n_parts, dtype=bool)
-            active_mask[active_parts] = True
-            taus.append(np.where(active_mask, tau_row, 0.0))
-            vm_rows.append(np.where(active_mask, row, -1))
-            s += 1
+            for t in range(steps):
+                verts = wres.verts_processed[0, t].astype(np.float64)
+                edges = wres.edges_examined[0, t].astype(np.float64)
+                active_mask = verts > 0
+                tau_row = self.tau_scale * (self.alpha * verts + self.beta * edges)
+                tau_row = np.where(active_mask, tau_row, 0.0)
+                taus.append(tau_row)
+                vm_rows.append(np.where(active_mask, rows[t], -1))
+                replanner.observe(tau_row)
+            s += steps
+            active_next = wres.part_active_next[0]
+            done = bool(wres.done[0])
+
+        dist = np.asarray(state.dist[0])  # the final bulk pull
+        host_syncs += 1
 
         tau = np.vstack(taus) if taus else np.zeros((0, pg.n_parts))
         actual_tf = TimeFunction(tau)
@@ -174,13 +235,22 @@ class ElasticBSPExecutor:
             always_on=plan.always_on,
             pinned=plan.pinned,
         )
-        cost = evaluate(executed, self.billing)
+        mig_busy = None
+        if mig_events:
+            j_max = max(j for _, j, _ in mig_events) + 1
+            mig_busy = np.zeros((s, j_max))
+            for step, j, secs in mig_events:
+                mig_busy[step, j] += secs
+        cost = evaluate(executed, self.billing, migration_busy=mig_busy)
         return ExecutionReport(
-            dist=np.asarray(dist),
+            dist=dist,
             actual_tau=actual_tf,
             cost=cost,
             n_supersteps=s,
             n_migrations=migrations,
+            migration_bytes=migration_bytes,
             replans=replans,
+            host_syncs=host_syncs,
+            window=window,
             wall_seconds=time.perf_counter() - t0,
         )

@@ -81,16 +81,33 @@ class Placement:
         return (self.loads() > 0).sum(axis=1)
 
     def validate(self) -> None:
-        """Invariants shared by every strategy."""
+        """Invariants shared by every strategy.
+
+        Raises ``ValueError`` naming the offending superstep/partition (a
+        bare ``assert`` would be silently skipped under ``python -O``).
+        """
         active = self.tau > 0
-        placed = self.vm_of >= 0
-        assert (placed | ~active).all(), "every active partition must be placed"
+        unplaced = active & (self.vm_of < 0)
+        if unplaced.any():
+            s, i = (int(x) for x in np.argwhere(unplaced)[0])
+            raise ValueError(
+                f"{self.strategy}: active partition {i} is unplaced at "
+                f"superstep {s} (tau={self.tau[s, i]:g}, vm={self.vm_of[s, i]})"
+            )
         if self.pinned:
             # once placed, the mapping never changes
             for i in range(self.n_parts):
                 vms = self.vm_of[:, i]
-                seen = vms[vms >= 0]
-                assert (seen == seen[0]).all() if seen.size else True
+                placed_steps = np.flatnonzero(vms >= 0)
+                if placed_steps.size and (vms[placed_steps] != vms[placed_steps[0]]).any():
+                    bad = placed_steps[
+                        np.flatnonzero(vms[placed_steps] != vms[placed_steps[0]])[0]
+                    ]
+                    raise ValueError(
+                        f"{self.strategy}: pinned partition {i} migrates at "
+                        f"superstep {int(bad)} (VM {int(vms[placed_steps[0]])} "
+                        f"-> {int(vms[bad])})"
+                    )
 
 
 # ---------------------------------------------------------------------------

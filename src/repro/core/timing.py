@@ -73,3 +73,30 @@ class TimeFunction:
         t = self.t_min()
         assert t > 0
         return TimeFunction(self.tau * (target_seconds / t))
+
+    @classmethod
+    def concat(cls, *parts: "TimeFunction | np.ndarray") -> "TimeFunction":
+        """Stack time functions (or raw ``[m, n]`` rows) along supersteps.
+
+        Used by the online re-planner to splice an observed prefix onto an
+        extrapolated remaining horizon before re-running a strategy.
+        """
+        rows = [p.tau if isinstance(p, TimeFunction) else np.asarray(p) for p in parts]
+        n_parts = {r.shape[1] for r in rows}
+        if len(n_parts) > 1:
+            raise ValueError(f"partition counts differ across parts: {sorted(n_parts)}")
+        return cls(np.vstack(rows).astype(np.float64))
+
+    def decay_rates(self, *, default: float = 0.7, clip: tuple[float, float] = (0.05, 1.25)) -> np.ndarray:
+        """[n] per-partition activity decay: ratio of the last two positive
+        tau values of each partition, clipped to ``clip`` (``default`` when a
+        partition has fewer than two active supersteps).  This is the
+        one-parameter-per-partition activity model the online re-planner
+        extrapolates with (cf. the meta-graph activity sketch)."""
+        m, n = self.tau.shape
+        out = np.full(n, default, dtype=np.float64)
+        for i in range(n):
+            nz = np.flatnonzero(self.tau[:, i] > 0)
+            if nz.size >= 2:
+                out[i] = self.tau[nz[-1], i] / self.tau[nz[-2], i]
+        return np.clip(out, clip[0], clip[1])

@@ -38,6 +38,15 @@ Knobs (see ``TraversalEngine``):
   * ``collect_subgraphs`` -- also record per-superstep active-subgraph
     bitmasks ``[S, m_max, n_subgraphs]`` on device (the metagraph layer's
     ground truth), still transferred in the same single bulk pull.
+
+Windowed execution (``init_state`` / ``run_window``): the same device program
+also runs *resumably* -- ``run_window(state, k)`` executes up to ``k``
+supersteps in one launch, pulls only the ``[S, k, P]`` counter window (plus
+the ``[S, P]`` next-active partition mask and done flags -- one bulk
+``device_get`` per window), and leaves the carried ``[S, n]`` dist/frontier
+state on device.  The elastic executor interleaves placement decisions at
+window boundaries instead of every superstep; ``run`` is the degenerate
+single window of depth ``m_max``.
 """
 
 from __future__ import annotations
@@ -162,6 +171,47 @@ class TraversalResult(NamedTuple):
     sg_active: jax.Array  # [S, m_max, n_sg] bool, or [S, m_max, 0] if off
 
 
+class TraversalNotConverged(RuntimeError):
+    """Raised by ``TraversalEngine.run`` when some source still has a
+    non-empty frontier after ``m_max`` supersteps.  The partial
+    ``TraversalResult`` is kept on ``.result`` (host-side numpy leaves)
+    instead of being discarded."""
+
+    def __init__(self, m_max: int, result: "TraversalResult"):
+        self.result = result
+        steps = np.asarray(result.n_supersteps).tolist()
+        stuck = np.flatnonzero(result.frontier.any(axis=1)).tolist()
+        super().__init__(
+            f"BSP did not converge within {m_max} supersteps "
+            f"(per-source n_supersteps={steps}, unconverged sources={stuck})"
+        )
+
+
+class WindowState(NamedTuple):
+    """Device-resident carried state between windows (never pulled to host)."""
+
+    dist: jax.Array  # [S, n] float32
+    frontier: jax.Array  # [S, n] bool
+    n_supersteps: jax.Array  # [S] int32, cumulative over all windows so far
+
+
+class WindowResult(NamedTuple):
+    """One window of supersteps: carried device state + the pulled counters.
+
+    All counter fields are host numpy, fetched in ONE bulk ``device_get``;
+    rows past ``n_supersteps`` (sources that converged mid-window) are zero.
+    """
+
+    state: WindowState  # device-resident; feed to the next run_window
+    n_supersteps: np.ndarray  # [S] int32, cumulative (incl. this window)
+    edges_examined: np.ndarray  # [S, k, P] int32
+    verts_processed: np.ndarray  # [S, k, P] int32
+    msgs_sent: np.ndarray  # [S, k, P] int32
+    inner_iters: np.ndarray  # [S, k] int32
+    part_active_next: np.ndarray  # [S, P] bool, parts active at the next superstep
+    done: np.ndarray  # [S] bool, frontier empty (traversal converged)
+
+
 class TraversalEngine:
     """Device-resident multi-source BSP traversal over a static CSR layout.
 
@@ -198,14 +248,18 @@ class TraversalEngine:
                     pg.subgraph_of_vertex.astype(np.int32)
                 )
             self._sg = pg.__dict__["_sg_device"]
-        self._traverse = jax.jit(self._traverse_impl)
+        # one jitted program serves both modes: run() launches a single
+        # window of depth m_max, run_window() launches depth k (static arg,
+        # compiled once per distinct k/S)
+        self._window = jax.jit(self._window_impl, static_argnums=3)
 
     # -- device program ------------------------------------------------------
 
-    def _traverse_impl(self, dist: jax.Array, frontier: jax.Array) -> TraversalResult:
+    def _window_impl(
+        self, dist: jax.Array, frontier: jax.Array, nst0: jax.Array, m_max: int
+    ):
         s_batch = dist.shape[0]
         n, p = self.n, self.n_parts
-        m_max = self.m_max
 
         seg_min_l = jax.vmap(
             lambda c: jax.ops.segment_min(
@@ -292,22 +346,28 @@ class TraversalEngine:
             zeros_smp,
             jnp.zeros((s_batch, m_max), jnp.int32),
             jnp.zeros((s_batch, m_max, n_sg), bool),
-            jnp.zeros((s_batch,), jnp.int32),
+            nst0,
         )
         _, d, fr, we, wv, ms, it, sg, nst = jax.lax.while_loop(
             superstep_cond, superstep_body, init
         )
-        return TraversalResult(d, fr, nst, we, wv, ms, it, sg)
+        # next-superstep partition activity + done flags, computed on device
+        # so the executor's placement decision needs no extra [n]-sized pull
+        pact = (
+            jax.vmap(
+                lambda f: jax.ops.segment_max(
+                    f.astype(jnp.int32), self._vpart, num_segments=p
+                )
+            )(fr)
+            > 0
+        )
+        done = ~fr.any(axis=1)
+        return TraversalResult(d, fr, nst, we, wv, ms, it, sg), pact, done
 
     # -- host API ------------------------------------------------------------
 
-    def run(self, sources) -> TraversalResult:
-        """Run one batched traversal from ``sources`` (host ints).
-
-        Returns the *host-side* ``TraversalResult`` (numpy leaves) -- the one
-        bulk transfer of the whole execution.  Raises if any source failed to
-        converge within ``m_max`` supersteps.
-        """
+    def init_state(self, sources) -> WindowState:
+        """Device-resident initial state for ``run_window`` (no host sync)."""
         sources = np.atleast_1d(np.asarray(sources, dtype=np.int64))
         s_batch = sources.shape[0]
         dist = jnp.full((s_batch, self.n), jnp.inf, dtype=jnp.float32)
@@ -317,11 +377,58 @@ class TraversalEngine:
             .at[jnp.arange(s_batch), jnp.asarray(sources)]
             .set(True)
         )
-        res = jax.device_get(self._traverse(dist, frontier))
-        if res.frontier.any():
-            raise RuntimeError(
-                f"BSP did not converge within {self.m_max} supersteps"
+        return WindowState(dist, frontier, jnp.zeros((s_batch,), jnp.int32))
+
+    def run_window(self, state: WindowState, k: int) -> WindowResult:
+        """Run up to ``k`` more supersteps from ``state`` in one device launch.
+
+        Sources whose frontier empties mid-window simply stop contributing
+        counter rows (no convergence raise -- check ``done``).  The returned
+        counters are the window's ONE bulk host transfer; carried
+        dist/frontier stay on device in ``.state``.
+        """
+        k = int(k)
+        if k < 1:
+            raise ValueError(f"window size must be >= 1, got {k}")
+        res, pact, done = self._window(state.dist, state.frontier, state.n_supersteps, k)
+        nst, we, wv, ms, it, pact, done = jax.device_get(
+            (
+                res.n_supersteps,
+                res.edges_examined,
+                res.verts_processed,
+                res.msgs_sent,
+                res.inner_iters,
+                pact,
+                done,
             )
+        )
+        return WindowResult(
+            state=WindowState(res.dist, res.frontier, res.n_supersteps),
+            n_supersteps=nst,
+            edges_examined=we,
+            verts_processed=wv,
+            msgs_sent=ms,
+            inner_iters=it,
+            part_active_next=pact,
+            done=done,
+        )
+
+    def run(self, sources) -> TraversalResult:
+        """Run one batched traversal from ``sources`` (host ints).
+
+        Returns the *host-side* ``TraversalResult`` (numpy leaves) -- the one
+        bulk transfer of the whole execution.  Raises ``TraversalNotConverged``
+        (with the partial result attached and per-source ``n_supersteps`` in
+        the message) if any source failed to converge within ``m_max``
+        supersteps.
+        """
+        state = self.init_state(sources)
+        res, _, _ = self._window(
+            state.dist, state.frontier, state.n_supersteps, self.m_max
+        )
+        res = jax.device_get(res)
+        if res.frontier.any():
+            raise TraversalNotConverged(self.m_max, res)
         return res
 
 

@@ -1,0 +1,95 @@
+"""Online re-planner unit tests (repro.core.replan)."""
+
+import numpy as np
+import pytest
+
+from repro.core.placement import ffd_placement
+from repro.core.replan import (
+    OnlineReplanner,
+    ReplanConfig,
+    decay_horizon,
+    extrapolate_tau,
+)
+from repro.core.timing import TimeFunction
+
+
+def test_extrapolation_decays_active_partitions_per_partition_rate():
+    # partition 0 halves each superstep, partition 1 decays slowly
+    observed = np.array([[8.0, 1.0], [4.0, 0.9]])
+    cfg = ReplanConfig(activation_floor=0.0)
+    fut = extrapolate_tau(observed, np.array([True, True]), 3, cfg)
+    # next superstep continues at the last observed level, then decays at the
+    # per-partition fitted rate (0.5 and 0.9 here)
+    np.testing.assert_allclose(fut[:, 0], [4.0, 2.0, 1.0])
+    np.testing.assert_allclose(fut[:, 1], 0.9 * 0.9 ** np.arange(3))
+
+
+def test_extrapolation_floors_inactive_partitions():
+    """Not-yet-active partitions keep a small positive tau so the replanned
+    schedule places them -- one divergence must not cascade into replans at
+    every later superstep when a new partition activates."""
+    observed = np.array([[2.0, 0.0, 0.0]])
+    fut = extrapolate_tau(observed, np.array([True, False, False]), 4)
+    assert (fut > 0).all()  # every partition placed in every future row
+    assert fut[0, 0] > fut[0, 1]  # but actives dominate
+
+
+def test_extrapolation_with_no_observations_is_uniform():
+    fut = extrapolate_tau(np.zeros((0, 3)), np.array([False, True, True]), 2)
+    assert fut.shape == (2, 3)
+    assert (fut > 0).all()
+    np.testing.assert_allclose(fut[0, 1], fut[0, 2])
+
+
+def test_decay_horizon_tracks_activity_death():
+    cfg = ReplanConfig(min_horizon=2, eps_frac=1e-2)
+    # level 8 halving: 8 * 0.5^t < 0.01 * mean -> ~10 steps
+    slow = decay_horizon(np.array([[8.0], [4.0]]), np.array([True]), cfg)
+    fast_cfg = ReplanConfig(min_horizon=2, eps_frac=0.5)
+    fast = decay_horizon(np.array([[8.0], [4.0]]), np.array([True]), fast_cfg)
+    assert slow > fast >= fast_cfg.min_horizon
+    assert slow <= cfg.max_horizon
+
+
+def test_replanner_splices_full_remaining_horizon():
+    """THE bug fix: the spliced schedule must extend >= min_horizon rows past
+    the divergence point, not a single row."""
+    n_parts = 3
+    rp = OnlineReplanner(n_parts, ffd_placement, ReplanConfig(min_horizon=8))
+    rp.observe(np.array([[1.0, 0.0, 0.0], [0.5, 2.0, 0.0]]))
+    old = np.full((4, n_parts), -1, dtype=np.int64)
+    old[:, 0] = 0
+    new = rp.replan(old, 2, np.array([False, True, True]))
+    np.testing.assert_array_equal(new[:2], old[:2])  # executed prefix kept
+    assert new.shape[0] - 2 >= 8
+    # every partition is placed throughout the replanned remainder
+    assert (new[2:] >= 0).all()
+
+
+def test_replanner_fallback_without_strategy():
+    rp = OnlineReplanner(4)
+    rp.observe(np.array([[1.0, 1.0, 0.0, 0.0]]))
+    old = np.zeros((3, 4), dtype=np.int64)
+    new = rp.replan(old, 1, np.array([False, True, False, True]))
+    assert new.shape[0] >= 1 + rp.config.min_horizon
+    np.testing.assert_array_equal(new[1], [-1, 0, -1, 1])
+    np.testing.assert_array_equal(new[1], new[-1])
+
+
+def test_replanner_rejects_prefix_mismatch():
+    rp = OnlineReplanner(2, ffd_placement)
+    rp.observe(np.array([[1.0, 1.0]]))
+    with pytest.raises(ValueError, match="observed prefix"):
+        rp.replan(np.zeros((3, 2), dtype=np.int64), 2, np.array([True, True]))
+
+
+def test_timefunction_concat_and_decay_rates():
+    a = TimeFunction(np.array([[4.0, 0.0]]))
+    b = np.array([[2.0, 1.0], [1.0, 3.0]])
+    cat = TimeFunction.concat(a, b)
+    assert cat.n_supersteps == 3
+    rates = cat.decay_rates(default=0.7)
+    np.testing.assert_allclose(rates[0], 0.5)  # 2 -> 1
+    np.testing.assert_allclose(rates[1], 1.25)  # 1 -> 3, clipped at 1.25
+    with pytest.raises(ValueError, match="partition counts"):
+        TimeFunction.concat(a, np.zeros((1, 3)))

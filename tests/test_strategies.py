@@ -4,6 +4,7 @@ import numpy as np
 import pytest
 
 from repro.core.placement import (
+    Placement,
     _exact_pack,
     _ffd_pack,
     _l2_lower_bound,
@@ -146,6 +147,24 @@ def test_all_inactive_superstep_is_allowed():
         p = strat(tf)
         p.validate()
         assert (p.vm_of[1] == -1).all()
+
+
+def test_validate_raises_on_unplaced_active_partition():
+    """validate must raise (not silently pass under ``python -O``) and name
+    the offending superstep/partition."""
+    tau = np.array([[1.0, 2.0], [0.0, 3.0]])
+    vm_of = np.array([[0, 0], [-1, -1]], dtype=np.int64)  # P1 active, unplaced at s=1
+    with pytest.raises(ValueError, match=r"partition 1 is unplaced at superstep 1"):
+        Placement("bad", tau, vm_of).validate()
+
+
+def test_validate_raises_on_pinned_migration():
+    tau = np.array([[1.0, 1.0], [1.0, 1.0]])
+    vm_of = np.array([[0, 1], [1, 1]], dtype=np.int64)  # P0 moves VM0 -> VM1
+    with pytest.raises(ValueError, match=r"pinned partition 0 migrates at superstep 1"):
+        Placement("bad-pin", tau, vm_of, pinned=True).validate()
+    # the same mapping without the pinned contract is fine
+    Placement("ok", tau, vm_of).validate()
 
 
 def test_opt_node_budget_fallback_still_valid():

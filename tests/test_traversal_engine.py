@@ -15,7 +15,12 @@ from repro.graph import bfs_grow_partition, erdos_renyi_graph, hash_partition
 from repro.graph.bsp import concat_traces, run_bc_forward, run_sssp
 from repro.graph.generators import weighted
 from repro.graph.structs import dst_sorted_layout
-from repro.graph.traversal import get_engine, make_superstep_fn, reference_sssp
+from repro.graph.traversal import (
+    TraversalNotConverged,
+    get_engine,
+    make_superstep_fn,
+    reference_sssp,
+)
 from repro.kernels.bfs_relax import bfs_relax, bfs_relax_csr, reference_bfs_relax
 
 RAGGED_CASES = [
@@ -172,6 +177,65 @@ def test_engine_raises_on_superstep_cap():
     pg = hash_partition(g, 4)
     with pytest.raises(RuntimeError, match="did not converge"):
         get_engine(pg, m_max=2).run([0])
+
+
+def test_non_convergence_error_reports_steps_and_keeps_partial_result():
+    """The cap error must name the per-source n_supersteps and carry the
+    partial TraversalResult instead of discarding it."""
+    g = erdos_renyi_graph(200, 4.0, seed=21)
+    pg = hash_partition(g, 4)
+    with pytest.raises(TraversalNotConverged, match=r"n_supersteps=\[2\]") as ei:
+        get_engine(pg, m_max=2).run([0])
+    partial = ei.value.result
+    assert np.array_equal(partial.n_supersteps, [2])
+    # two supersteps of real progress are retained
+    assert np.isfinite(partial.dist).sum() > 1
+    assert partial.frontier.any()
+
+
+def test_run_window_chaining_matches_single_run():
+    """Chained run_window calls must reproduce run()'s distances, counters,
+    and superstep counts exactly, for several window sizes."""
+    g = erdos_renyi_graph(300, 5.0, seed=11)
+    pg = bfs_grow_partition(g, 4, seed=1)
+    eng = get_engine(pg, m_max=256)
+    sources = [0, 17, 123]
+    full = eng.run(sources)
+    for k in (1, 3, 7, 64):
+        state = eng.init_state(sources)
+        chunks = []
+        for _ in range(256):
+            w = eng.run_window(state, k)
+            state = w.state
+            chunks.append(w)
+            if w.done.all():
+                break
+        assert chunks[-1].done.all()  # no convergence raise mid-run
+        we = np.concatenate([c.edges_examined for c in chunks], axis=1)
+        wv = np.concatenate([c.verts_processed for c in chunks], axis=1)
+        m = we.shape[1]
+        np.testing.assert_array_equal(we, full.edges_examined[:, :m])
+        np.testing.assert_array_equal(wv, full.verts_processed[:, :m])
+        np.testing.assert_array_equal(np.asarray(state.dist), full.dist)
+        np.testing.assert_array_equal(
+            np.asarray(state.n_supersteps), full.n_supersteps
+        )
+
+
+def test_run_window_reports_next_active_partitions():
+    """part_active_next must equal the partition set holding next-frontier
+    vertices (what the elastic executor's placement decision consumes)."""
+    g = erdos_renyi_graph(250, 4.0, seed=3)
+    pg = bfs_grow_partition(g, 5, seed=2)
+    eng = get_engine(pg, m_max=256)
+    state = eng.init_state([0])
+    w = eng.run_window(state, 1)
+    frontier = np.asarray(w.state.frontier[0])
+    expect = np.zeros(pg.n_parts, dtype=bool)
+    for p in np.unique(pg.part_of_vertex[np.flatnonzero(frontier)]):
+        expect[p] = True
+    np.testing.assert_array_equal(w.part_active_next[0], expect)
+    assert not w.done[0]
 
 
 def test_active_subgraph_sets_from_device_counters():
