@@ -1,6 +1,6 @@
 """Traversal-engine benchmark: device-resident batched BC vs the serial
 per-superstep driver the seed shipped with, plus the windowed elastic
-executor sweep.
+executor sweep and the mesh-sharding device sweep.
 
 Measures, on a synthetic BC workload (>= 16 sources on an R-MAT graph):
   * serial driver  -- per-source Python superstep loop, one host sync
@@ -9,10 +9,18 @@ Measures, on a synthetic BC workload (>= 16 sources on an R-MAT graph):
   * batched engine -- one jitted ``lax.while_loop`` over ``[S, n]`` state,
     one bulk transfer per traversal
 
-and, for the elastic executor, a window-size sweep (``k in {1, 4, 8, 16}``)
+for the elastic executor, a window-size sweep (``k in {1, 4, 8, 16}``)
 on two graph shapes (power-law R-MAT vs uniform Erdos-Renyi): host-sync
 counts per run, the ``ceil(S/k) + 1`` sync-budget check at ``k=8``, and the
-windowed-vs-per-superstep wall speedup.
+windowed-vs-per-superstep wall speedup,
+
+and, for the mesh-sharded engine, a device sweep (``D in {1, 2, 4, 8}`` on
+8 forced host devices, run in a subprocess because the XLA device-count flag
+must precede jax init): per-superstep messages on the wire *post*
+per-destination aggregation vs the *pre*-aggregation active-remote-edge
+count -- the D>1 rows assert that aggregation genuinely shrinks the
+collective payload.  Run this file with ``--mesh-child`` to produce just
+that sweep as JSON on stdout (what the parent process invokes).
 
 Writes ``BENCH_traversal.json`` so the perf trajectory is tracked per PR.
 """
@@ -21,6 +29,8 @@ from __future__ import annotations
 
 import json
 import math
+import os
+import sys
 import time
 
 import jax.numpy as jnp
@@ -38,6 +48,8 @@ N_SOURCES = 16
 SCALE, DEGREE = 12, 8  # R-MAT 2^12 vertices, avg degree 8
 N_PARTS = 8
 WINDOW_SIZES = (1, 4, 8, 16)
+MESH_SIZES = (1, 2, 4, 8)
+MESH_FORCED_DEVICES = 8
 OUT_PATH = "BENCH_traversal.json"
 
 
@@ -97,6 +109,81 @@ def _window_sweep(pg, source: int = 0) -> dict:
     }
 
 
+def _mesh_child() -> dict:
+    """The device sweep body; runs under forced host devices (subprocess).
+
+    For each mesh size D: one batched traversal on the mesh-sharded engine,
+    recording per-superstep wire messages (post per-destination aggregation,
+    summed over sources and devices) against the pre-aggregation active
+    remote-edge count.  Asserts the reduction for every D > 1.
+    """
+    import jax
+
+    from repro.dist.sharding import partition_mesh
+    from repro.graph.traversal import get_engine
+
+    assert len(jax.devices()) >= max(MESH_SIZES), (
+        f"mesh child needs {max(MESH_SIZES)} devices, has {len(jax.devices())}"
+    )
+    g = rmat_graph(SCALE, DEGREE, seed=3)
+    pg = bfs_grow_partition(g, N_PARTS, seed=1)
+    rng = np.random.default_rng(0)
+    sources = rng.choice(g.n_vertices, size=4, replace=False).tolist()
+
+    per_d = {}
+    for d_n in MESH_SIZES:
+        eng = get_engine(pg, m_max=512, mesh=partition_mesh(d_n))
+        eng.run(sources)  # warm (compile)
+        t0 = time.perf_counter()
+        res = eng.run(sources)
+        wall = time.perf_counter() - t0
+        m = int(res.n_supersteps.max())
+        wire = res.wire_msgs[:, :m].sum(axis=0)  # [m] over sources
+        pre = res.msgs_sent[:, :m].sum(axis=(0, 2))  # [m] over sources/parts
+        wire_total, pre_total = int(wire.sum()), int(pre.sum())
+        if d_n > 1:
+            assert 0 < wire_total < pre_total, (
+                f"D={d_n}: per-destination aggregation must put fewer "
+                f"messages on the wire than the raw active-remote-edge "
+                f"count ({wire_total} vs {pre_total})"
+            )
+        per_d[str(d_n)] = {
+            "wall_s": wall,
+            "supersteps": m,
+            "wire_per_superstep": [int(x) for x in wire],
+            "pre_agg_per_superstep": [int(x) for x in pre],
+            "wire_total": wire_total,
+            "pre_agg_total": pre_total,
+            "wire_reduction": (
+                None if wire_total == 0 else 1.0 - wire_total / pre_total
+            ),
+        }
+    return {
+        "n_devices_forced": MESH_FORCED_DEVICES,
+        "n_sources": len(sources),
+        "graph": {
+            "n_vertices": g.n_vertices,
+            "n_edges": g.n_edges,
+            "n_parts": N_PARTS,
+        },
+        "per_d": per_d,
+    }
+
+
+def _mesh_sweep_subprocess() -> dict:
+    """Run ``--mesh-child`` with the XLA device-count flag in a fresh
+    process (the flag is dead after jax initializes, hence the subprocess)."""
+    from repro.testing.forced_devices import run_forced_devices
+
+    out = run_forced_devices(
+        os.path.abspath(__file__),
+        "--mesh-child",
+        n_devices=MESH_FORCED_DEVICES,
+        timeout=1800,
+    )
+    return json.loads(out)
+
+
 def run(verbose: bool = True) -> dict:
     g = rmat_graph(SCALE, DEGREE, seed=3)
     pg = bfs_grow_partition(g, N_PARTS, seed=1)
@@ -140,6 +227,9 @@ def run(verbose: bool = True) -> dict:
         "uniform": _window_sweep(bfs_grow_partition(g_uni, N_PARTS, seed=1)),
     }
 
+    # mesh-sharded engine device sweep (subprocess: needs forced devices)
+    out["mesh_sweep"] = _mesh_sweep_subprocess()
+
     with open(OUT_PATH, "w") as f:
         json.dump(out, f, indent=2)
     if verbose:
@@ -164,8 +254,19 @@ def run(verbose: bool = True) -> dict:
                 f"w8 vs w1 speedup {sw['speedup_w8_vs_w1']:.2f}x, "
                 f"budget ok: {sw['sync_budget_w8_ok']}"
             )
+        for d_n, row in out["mesh_sweep"]["per_d"].items():
+            red = row["wire_reduction"]
+            print(
+                f"mesh sweep D={d_n}: wire {row['wire_total']} vs pre-agg "
+                f"{row['pre_agg_total']} msgs over {row['supersteps']} "
+                f"supersteps"
+                + (f" ({red:.0%} saved by aggregation)" if red else "")
+            )
     return out
 
 
 if __name__ == "__main__":
-    run()
+    if "--mesh-child" in sys.argv:
+        print(json.dumps(_mesh_child()))
+    else:
+        run()

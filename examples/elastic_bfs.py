@@ -13,12 +13,38 @@ Knobs:
                syncs per run; K=1 is the legacy per-superstep path)
   --no-replan  disable online re-planning; with it on, a divergence replans
                the full remaining horizon via activity-decay extrapolation
-               (repro.core.replan, one replan per divergence)
+               (repro.core.replan, one replan per divergence; the metagraph
+               prediction doubles as the replanner's sketch prior)
+  --mesh N     force N host devices (must be set before jax initializes --
+               this flag is pre-parsed) and run the mesh-sharded engine:
+               partition axis on an N-device mesh, real all-to-all exchange,
+               and per-window *physical* shard migration.  Prints per-device
+               shard residency at every window so the movement is visible.
 
   PYTHONPATH=src python examples/elastic_bfs.py [--workloads LIVJ/8P ...]
 """
 
 import argparse
+import os
+import sys
+
+
+def _preparse_mesh() -> int:
+    """Read --mesh N from argv before anything imports jax."""
+    for i, a in enumerate(sys.argv):
+        if a == "--mesh" and i + 1 < len(sys.argv):
+            return int(sys.argv[i + 1])
+        if a.startswith("--mesh="):
+            return int(a.split("=", 1)[1])
+    return 0
+
+
+_MESH = _preparse_mesh()
+if _MESH > 1:
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={_MESH}"
+    ).strip()
 
 from repro.core import BillingModel, evaluate, default_placement, lap_placement, ffd_placement
 from repro.core.elastic import ElasticBSPExecutor
@@ -45,6 +71,30 @@ def bc_demo(wl, n_sources: int, strat, model):
     )
 
 
+def _print_residency(rep, n_devices: int):
+    """Per-window partition -> device residency (the real migration)."""
+    res = rep.residency
+    if res is None or not len(res):
+        return
+    for w, row in enumerate(res):
+        cells = " ".join(
+            f"P{i}@d{int(d)}" if d >= 0 else f"P{i}@--"
+            for i, d in enumerate(row)
+        )
+        moved = ""
+        if w > 0:
+            prev = res[w - 1]
+            n_moved = int(((row != prev) & (prev >= 0) & (row >= 0)).sum())
+            if n_moved:
+                moved = f"   <- {n_moved} shard(s) moved devices"
+        print(f"  window {w:2d}: {cells}{moved}")
+    print(
+        f"  physical: {rep.device_moves} device-to-device moves, "
+        f"{rep.device_move_bytes} B crossed the {n_devices}-device mesh "
+        f"(billed cloud moves: {rep.n_migrations} / {rep.migration_bytes} B)"
+    )
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--workloads", nargs="*", default=["LIVJ/8P", "USRN/8P"])
@@ -58,6 +108,11 @@ def main():
         help="disable online re-planning on prediction divergence",
     )
     ap.add_argument(
+        "--mesh", type=int, default=0, metavar="N",
+        help="force N host devices and run the mesh-sharded engine with "
+        "physical per-window shard migration",
+    )
+    ap.add_argument(
         "--bc", type=int, default=0, metavar="N",
         help="also run an N-source BC wave demo on the batched engine",
     )
@@ -65,6 +120,12 @@ def main():
 
     strat = {"ffd": ffd_placement, "lap": lap_placement}[args.strategy]
     model = BillingModel(delta=60.0)
+    mesh = None
+    if args.mesh > 1:
+        from repro.dist.sharding import partition_mesh
+
+        mesh = partition_mesh(args.mesh)
+        print(f"mesh: {args.mesh} forced host devices, partition axis sharded")
 
     for wl in paper_workloads(tuple(args.workloads)):
         print(f"\n=== {wl.name} " + "=" * 50)
@@ -77,15 +138,19 @@ def main():
             f"supersteps from {wl.pg.n_subgraphs} metagraph vertices"
         )
 
-        # 2. execute under the plan with dynamic re-planning enabled
+        # 2. execute under the plan with dynamic re-planning enabled; the
+        # metagraph prediction doubles as the replanner's sketch prior
         from repro.core.timing import TimeFunction
 
         tau_scale = wl.tf.t_min() / max(
             1e-12, TimeFunction.from_trace(wl.trace).t_min()
         )
-        ex = ElasticBSPExecutor(wl.pg, tau_scale=tau_scale, billing=model)
+        ex = ElasticBSPExecutor(
+            wl.pg, tau_scale=tau_scale, billing=model, mesh=mesh
+        )
         rep = ex.run(
             wl.source, plan, strategy_fn=strat, replan=not args.no_replan,
+            sketch=None if args.no_replan else pred_tf,
             window=args.window,
         )
         print(
@@ -95,6 +160,8 @@ def main():
             f"{rep.migration_bytes} B, wall {rep.wall_seconds:.1f}s on this "
             f"host)"
         )
+        if mesh is not None:
+            _print_residency(rep, args.mesh)
         print(
             f"actual billing: {rep.cost.cost_quanta} core-min, makespan "
             f"{rep.cost.makespan:.1f}s = {rep.cost.makespan_over_tmin:.2f}x "

@@ -26,15 +26,38 @@ superstep.  ``window=1`` is the legacy per-superstep path, bit-identical in
 ``dist`` and work counters for any ``k`` (the math does not depend on where
 the window boundaries fall).
 
+Mesh execution (``mesh=partition_mesh(D)``): the traversal itself runs on the
+mesh-sharded engine (partition axis -> device mesh, real all-to-all exchange;
+see ``graph.mesh_exchange``), and the per-window placement commit becomes
+*physical resharding*: each partition's state shard is ``place_shard``-ed to
+the device its VM maps onto (``Placement.device_row``), so migration is a
+device-to-device transfer, not a bookkeeping entry.  Two ledgers are kept
+deliberately separate:
+
+  * ``migration_bytes`` / ``CostReport.migration_secs`` bill the *simulated
+    cloud* moves of the plan (every VM change, priced at
+    ``move_bandwidth``); they are bit-identical for any device count -- the
+    paper's economics must not depend on how many local devices stand in
+    for the VMs.
+  * ``device_moves`` / ``device_move_bytes`` count the bytes that *actually
+    crossed jax devices*; with at least as many mesh devices as concurrently
+    active VMs the VM -> device map is injective and the two ledgers
+    coincide -- the billed migration is the physical one.
+
+``residency`` records the per-window partition -> device map for inspection
+(the ``--mesh`` demo prints it).
+
 Beyond the paper: ``replan=True`` complements the static a-priori plan with
 dynamic re-planning (their s7 future work) -- when the actually-active
 partition set diverges from the prediction at a window boundary, the
 remaining horizon is re-planned by ``repro.core.replan.OnlineReplanner``:
 the observed tau prefix is extrapolated per-partition (geometric activity
 decay + an activation floor) and the strategy re-runs over the full
-remaining horizon, so one divergence costs one replan.  Replan knobs
-(horizon bounds, decay model, activation floor) live on
-``replan.ReplanConfig`` and can be passed via ``replan_config``.
+remaining horizon, so one divergence costs one replan.  When a metagraph
+``sketch`` TimeFunction is supplied, the decay rates and activation floor of
+partitions with too-short observed histories are fitted from the sketch
+instead of global defaults.  Replan knobs live on ``replan.ReplanConfig``
+and can be passed via ``replan_config``.
 """
 
 from __future__ import annotations
@@ -49,9 +72,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.billing import BillingModel, CostReport, evaluate
-from repro.core.placement import Placement
+from repro.core.placement import Placement, device_of_vm
 from repro.core.replan import OnlineReplanner, ReplanConfig
 from repro.core.timing import DEFAULT_ALPHA, DEFAULT_BETA, TimeFunction
+from repro.graph.mesh_exchange import place_shard
 from repro.graph.structs import PartitionedGraph
 from repro.graph.traversal import get_engine
 
@@ -68,6 +92,10 @@ class ExecutionReport:
     host_syncs: int  # bulk device->host pulls (windows + final dist)
     window: int
     wall_seconds: float
+    device_moves: int = 0  # shard moves that crossed real jax devices
+    device_move_bytes: int = 0  # bytes physically transferred between devices
+    residency: np.ndarray | None = None  # [n_windows, P] device per partition
+    # (-1 = not yet placed), recorded at each window boundary
 
     @property
     def migration_secs(self) -> float:
@@ -87,18 +115,25 @@ class ElasticBSPExecutor:
         beta: float = DEFAULT_BETA,
         tau_scale: float = 1.0,
         billing: BillingModel | None = None,
+        mesh=None,
     ):
         self.pg = pg
         self.alpha = alpha
         self.beta = beta
         self.tau_scale = tau_scale
         self.billing = billing or BillingModel()
-        self.engine = get_engine(pg)
-        self.devices = jax.devices()
-        # per-partition vertex index lists (device) for shard gathers, and
-        # shard sizes in bytes (dist is float32) for migration pricing
+        self.mesh = mesh
+        self.engine = get_engine(pg, mesh=mesh)
+        self.devices = (
+            list(mesh.devices.flat) if mesh is not None else jax.devices()
+        )
+        # per-partition index lists into the carried state's trailing axis
+        # (identity layout on the dense engine, padded device-major positions
+        # on the mesh engine) for shard gathers, and shard sizes in bytes
+        # (dist is float32) for migration pricing
+        state_idx = self.engine.state_index_of_vertex
         self._part_indices = [
-            jnp.asarray(np.flatnonzero(pg.part_of_vertex == i))
+            jnp.asarray(state_idx[np.flatnonzero(pg.part_of_vertex == i)])
             for i in range(pg.n_parts)
         ]
         self.partition_bytes = np.array(
@@ -106,7 +141,7 @@ class ElasticBSPExecutor:
         )
 
     def _device_of_vm(self, j: int):
-        return self.devices[j % len(self.devices)]
+        return self.devices[device_of_vm(j, len(self.devices))]
 
     def run(
         self,
@@ -116,6 +151,7 @@ class ElasticBSPExecutor:
         strategy_fn: Callable[[TimeFunction], Placement] | None = None,
         replan: bool = False,
         replan_config: ReplanConfig | None = None,
+        sketch: TimeFunction | None = None,
         window: int = 8,
         max_supersteps: int = 4096,
     ) -> ExecutionReport:
@@ -125,20 +161,26 @@ class ElasticBSPExecutor:
 
         state = self.engine.init_state([source])
         replanner = OnlineReplanner(
-            pg.n_parts, strategy_fn, replan_config or ReplanConfig()
+            pg.n_parts, strategy_fn, replan_config or ReplanConfig(),
+            sketch=sketch,
         )
 
         vm_of = plan.vm_of.copy()
         horizon = vm_of.shape[0]
+        n_dev = len(self.devices)
         prev_vm = np.full(pg.n_parts, -1, dtype=np.int64)
+        prev_dev = np.full(pg.n_parts, -1, dtype=np.int64)  # real device slot
         shards: dict[int, jax.Array] = {}  # partition -> device-resident state
         migrations = 0
         migration_bytes = 0
+        device_moves = 0
+        device_move_bytes = 0
         mig_events: list[tuple[int, int, float]] = []  # (superstep, vm, secs)
         replans = 0
         host_syncs = 0
         taus: list[np.ndarray] = []
         vm_rows: list[np.ndarray] = []
+        residency: list[np.ndarray] = []
 
         s = 0
         # superstep 0's active set is the source's partition -- host-known,
@@ -182,22 +224,31 @@ class ElasticBSPExecutor:
 
             # -- stage the executed supersteps' scheduled movement -----------
             # only supersteps that actually ran move state: a window tail past
-            # convergence never migrates, so counted moves == billed moves
+            # convergence never migrates, so counted moves == billed moves.
+            # The VM move is the *billed* (simulated cloud) migration; the
+            # place_shard below is the *physical* resharding -- partition i's
+            # state genuinely moves to the device its VM maps onto
+            # (Placement.device_row), and bytes that actually crossed jax
+            # devices are tallied separately.
             for t in range(steps):
                 row = rows[t]
                 for i in np.flatnonzero(row >= 0):
                     j = int(row[i])
                     if prev_vm[i] == j:
                         continue
-                    # the shard's device_put result is retained for the whole
+                    # the shard's placed result is retained for the whole
                     # run: partition i's state lives on its VM's device (the
                     # engine remains the compute source of truth -- this dict
-                    # is the simulated data plane whose content refreshes at
+                    # is the elastic data plane whose content refreshes at
                     # each move)
-                    shards[i] = jax.device_put(
+                    shards[i], crossed = place_shard(
                         state.dist[0, self._part_indices[i]],
                         self._device_of_vm(j),
+                        self.devices[prev_dev[i]] if prev_dev[i] >= 0 else None,
                     )
+                    if crossed:
+                        device_moves += 1
+                        device_move_bytes += int(self.partition_bytes[i])
                     if prev_vm[i] >= 0:
                         migrations += 1
                         migration_bytes += int(self.partition_bytes[i])
@@ -209,6 +260,7 @@ class ElasticBSPExecutor:
                             )
                         )
                     prev_vm[i] = j
+                    prev_dev[i] = device_of_vm(j, n_dev)
 
             for t in range(steps):
                 verts = wres.verts_processed[0, t].astype(np.float64)
@@ -222,8 +274,11 @@ class ElasticBSPExecutor:
             s += steps
             active_next = wres.part_active_next[0]
             done = bool(wres.done[0])
+            residency.append(prev_dev.copy())
 
-        dist = np.asarray(state.dist[0])  # the final bulk pull
+        # the final bulk pull; mesh state comes back in padded device-major
+        # order and is gathered to global vertex order host-side
+        dist = self.engine.gather_global(np.asarray(state.dist))[0]
         host_syncs += 1
 
         tau = np.vstack(taus) if taus else np.zeros((0, pg.n_parts))
@@ -253,4 +308,11 @@ class ElasticBSPExecutor:
             host_syncs=host_syncs,
             window=window,
             wall_seconds=time.perf_counter() - t0,
+            device_moves=device_moves,
+            device_move_bytes=device_move_bytes,
+            residency=(
+                np.stack(residency)
+                if residency
+                else np.zeros((0, pg.n_parts), dtype=np.int64)
+            ),
         )

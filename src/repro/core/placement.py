@@ -46,6 +46,19 @@ class PackResult(NamedTuple):
 _EPS = 1e-9
 
 
+def device_of_vm(vm, n_devices: int):
+    """The single VM-slot -> mesh-device rule: round-robin ``vm % D``.
+    Elementwise on arrays of VM slots.
+
+    With at least as many devices as concurrently active VMs the mapping is
+    injective and every scheduled VM move is a physical device move.  Every
+    consumer (``Placement.device_row``, the elastic executor's shard
+    placement and residency ledger) must route through this function so the
+    plan, the physical placement, and the ledgers cannot disagree.
+    """
+    return vm % n_devices
+
+
 @dataclasses.dataclass(frozen=True)
 class Placement:
     strategy: str
@@ -66,6 +79,15 @@ class Placement:
     @property
     def n_vms(self) -> int:
         return int(self.vm_of.max()) + 1 if (self.vm_of >= 0).any() else 0
+
+    def device_row(self, s: int, n_devices: int) -> np.ndarray:
+        """Map superstep ``s``'s VM row onto mesh devices.
+
+        This is THE plan -> mesh bridge (see ``device_of_vm`` for the rule);
+        inactive partitions stay ``-1``.
+        """
+        row = self.vm_of[s]
+        return np.where(row >= 0, device_of_vm(row, n_devices), -1)
 
     def loads(self) -> np.ndarray:
         """[m, n_vms] cumulative active-partition time per VM per superstep."""

@@ -23,10 +23,21 @@ row.  The flow at a placement point ``s``:
 Without a strategy the fallback extends the schedule by pinning the active
 partitions to VMs 0..A-1 for the whole remaining horizon.
 
+When the launch-time **metagraph sketch** is available (the predicted
+TimeFunction from ``repro.core.metagraph.predict_time_function``), it stands
+in for the observed prefix wherever the prefix is too short to fit from:
+a partition with fewer than two observed active supersteps takes its decay
+rate from the sketch's predicted activity series instead of the global
+default, and the activation floor is scaled per partition by the sketch's
+predicted weight (a partition the sketch expects to run hot keeps a larger
+placed-when-idle prior).  With no sketch the behavior is exactly the
+observed-prefix fit.
+
 Knobs (``ReplanConfig``): ``min_horizon`` / ``horizon_pad`` bound how far the
 extrapolation looks; ``decay_default`` / ``decay_clip`` parameterize the
 per-partition geometric model; ``activation_floor`` is the idle-partition
-activity prior (as a fraction of the mean observed active tau).
+activity prior (as a fraction of the mean observed active tau);
+``sketch_rel_clip`` bounds the sketch-derived per-partition floor scaling.
 """
 
 from __future__ import annotations
@@ -50,25 +61,23 @@ class ReplanConfig:
     decay_clip: tuple[float, float] = (0.05, 1.25)
     activation_floor: float = 0.05  # idle-partition prior, x mean active tau
     eps_frac: float = 1e-3  # decay horizon cutoff, x mean active tau
+    sketch_rel_clip: tuple[float, float] = (0.1, 10.0)  # floor scale bounds
 
 
-def extrapolate_tau(
+def _mean_positive(tau: np.ndarray) -> float:
+    pos = tau > 0
+    return float(tau[pos].mean()) if pos.any() else 0.0
+
+
+def _fit_rates(
     observed: np.ndarray,
-    active_next: np.ndarray,
-    horizon: int,
-    config: ReplanConfig = ReplanConfig(),
+    config: ReplanConfig,
+    sketch: TimeFunction | None,
 ) -> np.ndarray:
-    """Predict ``[horizon, P]`` future tau rows from the observed prefix.
-
-    Partitions active at the next superstep start from their last observed
-    positive tau (mean active tau if never seen) and decay at their fitted
-    per-partition rate; every partition is floored at the activation prior so
-    the resulting plan keeps all partitions placed.
-    """
-    observed = np.asarray(observed, dtype=np.float64)
+    """Per-partition decay rates: observed-prefix fit where the prefix holds
+    at least two active supersteps, metagraph-sketch fit where only the
+    sketch does, ``decay_default`` otherwise."""
     n_parts = observed.shape[1]
-    pos = observed > 0
-    mean_pos = float(observed[pos].mean()) if pos.any() else 1.0
     rates = (
         TimeFunction(observed).decay_rates(
             default=config.decay_default, clip=config.decay_clip
@@ -76,6 +85,62 @@ def extrapolate_tau(
         if observed.shape[0]
         else np.full(n_parts, config.decay_default)
     )
+    if sketch is not None:
+        if sketch.n_parts != n_parts:
+            raise ValueError(
+                f"sketch has {sketch.n_parts} partitions, expected {n_parts}"
+            )
+        obs_fit = (observed > 0).sum(axis=0) >= 2
+        sk_fit = (sketch.tau > 0).sum(axis=0) >= 2
+        sk_rates = sketch.decay_rates(
+            default=config.decay_default, clip=config.decay_clip
+        )
+        rates = np.where(~obs_fit & sk_fit, sk_rates, rates)
+    return rates
+
+
+def _activation_floor(
+    mean_pos: float, n_parts: int, config: ReplanConfig, sketch: TimeFunction | None
+) -> np.ndarray:
+    """[P] placed-when-idle prior: uniform without a sketch, scaled by each
+    partition's predicted weight (relative mean active tau) with one."""
+    base = np.full(n_parts, config.activation_floor * mean_pos)
+    if sketch is None:
+        return base
+    sk_mean = _mean_positive(sketch.tau)
+    if sk_mean <= 0:
+        return base
+    per_part = np.array(
+        [_mean_positive(sketch.tau[:, i]) for i in range(n_parts)]
+    )
+    rel = np.where(per_part > 0, per_part / sk_mean, 1.0)
+    lo, hi = config.sketch_rel_clip
+    return base * np.clip(rel, lo, hi)
+
+
+def extrapolate_tau(
+    observed: np.ndarray,
+    active_next: np.ndarray,
+    horizon: int,
+    config: ReplanConfig = ReplanConfig(),
+    sketch: TimeFunction | None = None,
+) -> np.ndarray:
+    """Predict ``[horizon, P]`` future tau rows from the observed prefix.
+
+    Partitions active at the next superstep start from their last observed
+    positive tau (mean active tau if never seen) and decay at their fitted
+    per-partition rate; every partition is floored at the activation prior so
+    the resulting plan keeps all partitions placed.  ``sketch`` (the
+    metagraph-predicted TimeFunction) refines both the rates and the floor
+    for partitions the observed prefix says too little about.
+    """
+    observed = np.asarray(observed, dtype=np.float64)
+    n_parts = observed.shape[1]
+    mean_pos = _mean_positive(observed)
+    if mean_pos == 0.0:
+        sk_mean = _mean_positive(sketch.tau) if sketch is not None else 0.0
+        mean_pos = sk_mean if sk_mean > 0 else 1.0
+    rates = _fit_rates(observed, config, sketch)
     last = np.zeros(n_parts)
     for i in range(n_parts):
         nz = np.flatnonzero(observed[:, i] > 0)
@@ -86,7 +151,7 @@ def extrapolate_tau(
         np.where(last > 0, last, mean_pos),
         0.0,
     )
-    floor = config.activation_floor * mean_pos
+    floor = _activation_floor(mean_pos, n_parts, config, sketch)
     out = np.zeros((horizon, n_parts))
     cur = base
     for t in range(horizon):
@@ -99,6 +164,7 @@ def decay_horizon(
     observed: np.ndarray,
     active_next: np.ndarray,
     config: ReplanConfig = ReplanConfig(),
+    sketch: TimeFunction | None = None,
 ) -> int:
     """Supersteps until every active partition's extrapolated tau decays
     below ``eps_frac`` x mean active tau (the activity-death horizon)."""
@@ -108,9 +174,7 @@ def decay_horizon(
         return config.min_horizon
     mean_pos = float(observed[pos].mean())
     eps = config.eps_frac * mean_pos
-    rates = TimeFunction(observed).decay_rates(
-        default=config.decay_default, clip=config.decay_clip
-    )
+    rates = _fit_rates(observed, config, sketch)
     h = config.min_horizon
     for i in np.flatnonzero(np.asarray(active_next, dtype=bool)):
         nz = np.flatnonzero(observed[:, i] > 0)
@@ -133,10 +197,12 @@ class OnlineReplanner:
         n_parts: int,
         strategy_fn: Callable[[TimeFunction], Placement] | None = None,
         config: ReplanConfig = ReplanConfig(),
+        sketch: TimeFunction | None = None,
     ):
         self.n_parts = int(n_parts)
         self.strategy_fn = strategy_fn
         self.config = config
+        self.sketch = sketch
         self._rows: list[np.ndarray] = []
 
     @property
@@ -169,7 +235,7 @@ class OnlineReplanner:
             )
         active_next = np.asarray(active_next, dtype=bool)
         horizon = max(
-            decay_horizon(observed, active_next, cfg),
+            decay_horizon(observed, active_next, cfg, self.sketch),
             vm_of.shape[0] - s + cfg.horizon_pad,
             cfg.min_horizon,
         )
@@ -180,6 +246,6 @@ class OnlineReplanner:
             actives = np.flatnonzero(active_next)
             row[actives] = np.arange(actives.size)
             return np.vstack([vm_of[:s], np.tile(row, (horizon, 1))])
-        future = extrapolate_tau(observed, active_next, horizon, cfg)
+        future = extrapolate_tau(observed, active_next, horizon, cfg, self.sketch)
         newplan = self.strategy_fn(TimeFunction.concat(observed, future))
         return np.vstack([vm_of[:s], newplan.vm_of[s:]])

@@ -1,5 +1,13 @@
 """Sharding rule tables and the ``constrain`` activation helper.
 
+Two rule families live here:
+
+  * the **graph partition axis** (``PARTS``): a 1-D mesh over which the
+    traversal engine shards its device-major padded vertex layout
+    (``partition_mesh`` / ``traversal_state_spec`` / ``per_device_spec``) --
+    consumed by ``graph.mesh_exchange``;
+  * the **model axes** below, which follow ``launch.mesh``.
+
 Axis semantics follow ``launch.mesh``: ``pod``/``data`` are batch-like axes
 (FSDP lives on ``data``), ``model`` is the tensor/expert-parallel axis.
 ``BATCH`` is a sentinel resolved against the ambient mesh at trace time, so
@@ -17,6 +25,57 @@ from __future__ import annotations
 import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+# ---------------------------------------------------------------------------
+# graph partition-axis sharding (the traversal mesh layer)
+# ---------------------------------------------------------------------------
+
+#: mesh axis the graph partition dimension is sharded over; the traversal
+#: engine's mesh mode lays vertices out device-major on this axis
+PARTS = "parts"
+
+
+def partition_mesh(n_devices: int | None = None, devices=None) -> Mesh:
+    """A 1-D mesh over the ``parts`` axis for the sharded traversal engine.
+
+    ``devices`` defaults to the first ``n_devices`` local jax devices (all of
+    them when ``n_devices`` is None).  Single-device meshes are legal -- the
+    engine falls back to its dense path for them.
+    """
+    if devices is None:
+        devices = jax.devices()
+    devices = list(devices)
+    if n_devices is not None:
+        if n_devices > len(devices):
+            raise ValueError(
+                f"asked for {n_devices} mesh devices, only "
+                f"{len(devices)} available (set XLA_FLAGS="
+                f"--xla_force_host_platform_device_count=N before "
+                f"importing jax to fake more on CPU)"
+            )
+        devices = devices[:n_devices]
+    return Mesh(np.asarray(devices), (PARTS,))
+
+
+def traversal_state_spec() -> P:
+    """Spec of carried ``[S, n_pad * D]`` traversal state: sources replicated,
+    the padded vertex axis split device-major over ``parts``."""
+    return P(None, PARTS)
+
+
+def per_device_spec(ndim: int) -> P:
+    """Spec of a static per-device constant table ``[D, ...]``: the leading
+    axis indexes the device, everything trailing is that device's block."""
+    return P(PARTS, *(None,) * (ndim - 1))
+
+
+def traversal_state_sharding(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, traversal_state_spec())
+
+
+def per_device_sharding(mesh: Mesh, ndim: int) -> NamedSharding:
+    return NamedSharding(mesh, per_device_spec(ndim))
 
 
 class _BatchSentinel:

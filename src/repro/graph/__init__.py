@@ -6,24 +6,36 @@ Layers:
                  block-skipping relax kernel)
   generators  -- synthetic graphs matched to the paper's dataset families
   partition   -- hash + BFS-grow (METIS-like) partitioners and the
-                 partition-aware local/remote edge layout
+                 partition-aware local/remote edge layout (plus the
+                 mesh-aware per-device layout, ``mesh_edge_layout``)
   traversal   -- device-resident multi-source BSP engine (whole traversal in
-                 one lax.while_loop) + the per-superstep fn for the executor
+                 one lax.while_loop) + the per-superstep fn for the executor;
+                 ``mesh=`` shards the partition axis over a device mesh
+  mesh_exchange -- the shard_map window program: per-destination aggregation
+                 + all-to-all remote exchange, physical shard placement
   bsp         -- host drivers building BSP work traces (one bulk transfer
                  per traversal batch)
   sampler     -- fanout neighbor sampler for minibatch GNN training
 """
 
-from repro.graph.structs import Graph, PartitionedGraph
+from repro.graph.structs import Graph, MeshEdgeLayout, PartitionedGraph
 from repro.graph.generators import rmat_graph, road_grid_graph, erdos_renyi_graph
-from repro.graph.partition import hash_partition, bfs_grow_partition
+from repro.graph.partition import (
+    bfs_grow_partition,
+    contiguous_device_map,
+    hash_partition,
+    mesh_edge_layout,
+)
 
 __all__ = [
     "Graph",
+    "MeshEdgeLayout",
     "PartitionedGraph",
     "rmat_graph",
     "road_grid_graph",
     "erdos_renyi_graph",
     "hash_partition",
     "bfs_grow_partition",
+    "contiguous_device_map",
+    "mesh_edge_layout",
 ]

@@ -1,0 +1,294 @@
+"""Mesh-sharded traversal: the superstep-boundary exchange as a real
+collective over a 1-D device mesh.
+
+``MeshTraversalProgram`` is the multi-device twin of
+``TraversalEngine._window_impl``: the whole window (outer superstep loop,
+inner local-closure loop, remote exchange, counter accumulation) runs inside
+ONE ``shard_map`` over ``dist.sharding.partition_mesh`` -- each device owns a
+fixed-shape padded vertex shard (``MeshEdgeLayout``) and the program is pure
+SPMD:
+
+  * **local closure**: every device relaxes its own partitions' local edges;
+    iteration count is synchronized with a ``pmax`` of the per-device
+    "anything improved" bit, so the loop structure (and hence the work
+    counters) is bit-identical to the single-device engine.
+  * **remote exchange**: candidate distances over this device's remote
+    out-edges are min-aggregated into static wire slots **before** the
+    collective -- one message per ``(dst_vertex, dst_device)`` block entry,
+    not one per edge (the Spinner/message-combining structure, arXiv
+    1404.3861 / 1503.00626) -- then a single static-shape
+    ``jax.lax.all_to_all`` delivers every ``[n_devices, w_pad]`` buffer, and
+    a scatter-min applies the received minima to the local shard.  Padded
+    slots carry ``inf`` and are no-ops by construction.
+  * **counters**: each device accumulates the ``[S, k, P]`` work counters for
+    its own partitions only (partitions never span devices), so one ``psum``
+    per window reconstructs the exact global integers.  ``wire_msgs`` counts
+    the finite slots actually put on the collective per superstep -- the
+    post-aggregation message volume the bench compares against the raw
+    remote-edge count.
+
+The program preserves the engine's windowed contract exactly: same
+``(dist, frontier, nst0, k) -> (result..., part_active_next, done)``
+signature, same dtypes, and distances/counters bit-identical to the dense
+path (min and integer sums are order-independent).  The carried state is the
+*padded device-major* layout ``[S, n_devices * n_pad]``; ``gather_global``
+maps it back to vertex order.
+
+Physical shard placement for the elastic executor lives here too:
+``place_shard`` moves a partition's state array onto a target device and
+reports whether bytes actually crossed devices -- the executor's per-window
+resharding seam.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh
+
+from repro.dist.sharding import (
+    PARTS,
+    per_device_sharding,
+    per_device_spec,
+    traversal_state_sharding,
+    traversal_state_spec,
+)
+from repro.graph.partition import contiguous_device_map, mesh_edge_layout
+from repro.graph.structs import MeshEdgeLayout, PartitionedGraph
+from jax.sharding import PartitionSpec as P
+
+
+def mesh_size(mesh: Mesh) -> int:
+    return int(mesh.devices.size)
+
+
+def place_shard(
+    x: jax.Array, device, prev_device=None
+) -> tuple[jax.Array, bool]:
+    """Commit ``x`` to ``device``; True when the shard changed devices.
+
+    ``prev_device`` is where this shard resided before the move (``None`` for
+    the initial placement, which is never a move).  The returned flag marks
+    bytes a real deployment would put on the interconnect -- a device-to-
+    device transfer, as opposed to a refresh of a shard already resident on
+    its target -- which is what lets the elastic executor count *physical*
+    moves separately from the simulated cloud moves of the placement plan.
+    """
+    return jax.device_put(x, device), (
+        prev_device is not None and prev_device != device
+    )
+
+
+class MeshTraversalProgram:
+    """The shard_map-ed window program for one (graph, mesh, device map).
+
+    Static per-device constant tables (edge shards, wire-slot maps) are
+    uploaded once with a leading device axis sharded over ``parts``; one
+    jitted program per window depth ``k`` serves every launch.
+    """
+
+    def __init__(
+        self,
+        pg: PartitionedGraph,
+        mesh: Mesh,
+        device_of_part: np.ndarray | None = None,
+    ):
+        d_n = mesh_size(mesh)
+        if d_n < 2:
+            raise ValueError(
+                "MeshTraversalProgram needs >= 2 mesh devices; the engine "
+                "uses its dense path for single-device meshes"
+            )
+        if device_of_part is None:
+            device_of_part = contiguous_device_map(pg.n_parts, d_n)
+        self.mesh = mesh
+        self.n_parts = pg.n_parts
+        self.layout: MeshEdgeLayout = mesh_edge_layout(pg, device_of_part, d_n)
+        ml = self.layout
+        put = lambda a: jax.device_put(
+            jnp.asarray(a), per_device_sharding(mesh, np.ndim(a))
+        )
+        self._consts = (
+            put(ml.lsrc),
+            put(ml.ldst),
+            put(ml.lw),
+            put(ml.lpart),
+            put(ml.lvalid),
+            put(ml.part_of_pos),
+            put(ml.rsrc),
+            put(ml.rw),
+            put(ml.rslot),
+            put(ml.rpart),
+            put(ml.rvalid),
+            put(ml.recv_idx),
+        )
+        self._const_specs = tuple(per_device_spec(c.ndim) for c in self._consts)
+        self._windows: dict[int, object] = {}  # window depth -> jitted fn
+
+    # -- state layout --------------------------------------------------------
+
+    @property
+    def state_index_of_vertex(self) -> np.ndarray:
+        """[n] position of each global vertex in the sharded state axis."""
+        return self.layout.pos_of_vertex
+
+    def init_state(self, sources: np.ndarray) -> tuple[jax.Array, jax.Array]:
+        """Sharded padded ``(dist, frontier)`` for a batch of sources."""
+        s_batch = sources.shape[0]
+        pos = self.layout.pos_of_vertex[np.asarray(sources, dtype=np.int64)]
+        width = self.layout.state_width
+        dist = np.full((s_batch, width), np.inf, dtype=np.float32)
+        dist[np.arange(s_batch), pos] = 0.0
+        frontier = np.zeros((s_batch, width), dtype=bool)
+        frontier[np.arange(s_batch), pos] = True
+        sh = traversal_state_sharding(self.mesh)
+        return jax.device_put(dist, sh), jax.device_put(frontier, sh)
+
+    def gather_global(self, padded: np.ndarray) -> np.ndarray:
+        """Map ``[..., n_devices * n_pad]`` padded state to vertex order."""
+        return np.asarray(padded)[..., self.layout.pos_of_vertex]
+
+    # -- the device program --------------------------------------------------
+
+    def window(self, dist, frontier, nst0, m_max: int):
+        """Run up to ``m_max`` supersteps; mirrors ``_window_impl``'s output
+        tuple ``(dist, frontier, nst, we, wv, ms, it, sg, wire, pact, done)``
+        with ``dist``/``frontier`` in the padded sharded layout."""
+        fn = self._windows.get(m_max)
+        if fn is None:
+            fn = self._build(m_max)
+            self._windows[m_max] = fn
+        return fn(dist, frontier, nst0, *self._consts)
+
+    def _build(self, m_max: int):
+        ml = self.layout
+        n_parts, n_pad, w_pad, d_n = self.n_parts, ml.n_pad, ml.w_pad, ml.n_devices
+        body = partial(
+            self._body, m_max=m_max, n_parts=n_parts, n_pad=n_pad,
+            w_pad=w_pad, d_n=d_n,
+        )
+        state = traversal_state_spec()
+        rep = P()
+        mapped = shard_map(
+            body,
+            mesh=self.mesh,
+            in_specs=(state, state, rep) + self._const_specs,
+            out_specs=(state, state, rep, rep, rep, rep, rep, rep, rep, rep, rep),
+            check_rep=False,
+        )
+        return jax.jit(mapped)
+
+    @staticmethod
+    def _body(
+        dist, frontier, nst0,
+        lsrc, ldst, lw, lpart, lvalid, part_of_pos,
+        rsrc, rw, rslot, rpart, rvalid, recv_idx,
+        *, m_max: int, n_parts: int, n_pad: int, w_pad: int, d_n: int,
+    ):
+        # per-device blocks arrive with a leading length-1 device axis
+        lsrc, ldst, lw = lsrc[0], ldst[0], lw[0]
+        lpart, lvalid, part_of_pos = lpart[0], lvalid[0], part_of_pos[0]
+        rsrc, rw, rslot = rsrc[0], rw[0], rslot[0]
+        rpart, rvalid, recv_idx = rpart[0], rvalid[0], recv_idx[0]
+        s_batch, p = dist.shape[0], n_parts
+
+        seg_min_l = jax.vmap(
+            lambda c: jax.ops.segment_min(
+                c, ldst, num_segments=n_pad, indices_are_sorted=True
+            )
+        )
+        seg_min_wire = jax.vmap(
+            lambda c: jax.ops.segment_min(
+                c, rslot, num_segments=d_n * w_pad, indices_are_sorted=True
+            )
+        )
+        seg_sum_lp = jax.vmap(
+            lambda v: jax.ops.segment_sum(v, lpart, num_segments=p)
+        )
+        seg_sum_rp = jax.vmap(
+            lambda v: jax.ops.segment_sum(v, rpart, num_segments=p)
+        )
+        seg_sum_vp = jax.vmap(
+            lambda v: jax.ops.segment_sum(v, part_of_pos, num_segments=p)
+        )
+
+        def g_any(flags):  # [S] bool per device -> [S] bool, mesh-global
+            return jax.lax.pmax(flags.astype(jnp.int32), PARTS) > 0
+
+        recv_flat = recv_idx.reshape(-1)  # [D * w_pad] local dst rows
+
+        def superstep_body(carry):
+            s, d, fr, we, wv, ms, it, wire, nst = carry
+            nst = nst + g_any(fr.any(axis=1)).astype(jnp.int32)
+
+            # -- local closure: same iteration count on every device ----------
+            def icond(c):
+                return jax.lax.pmax(c[1].any().astype(jnp.int32), PARTS) > 0
+
+            def ibody(c):
+                d_i, f_i, we_s, wv_s, it_s, touched = c
+                active_e = f_i[:, lsrc] & lvalid
+                cand = jnp.where(active_e, d_i[:, lsrc] + lw, jnp.inf)
+                new_d = jnp.minimum(d_i, seg_min_l(cand))
+                improved = new_d < d_i
+                we_s = we_s + seg_sum_lp(active_e.astype(jnp.int32))
+                wv_s = wv_s + seg_sum_vp(f_i.astype(jnp.int32))
+                it_s = it_s + g_any(f_i.any(axis=1)).astype(jnp.int32)
+                return new_d, improved, we_s, wv_s, it_s, touched | improved
+
+            z_p = jnp.zeros((s_batch, p), jnp.int32)
+            z_s = jnp.zeros((s_batch,), jnp.int32)
+            d2, _, we_s, wv_s, it_s, touched = jax.lax.while_loop(
+                icond, ibody, (d, fr, z_p, z_p, z_s, fr)
+            )
+
+            # -- exchange: aggregate per destination, then ONE all-to-all -----
+            active_re = touched[:, rsrc] & rvalid
+            cand = jnp.where(active_re, d2[:, rsrc] + rw, jnp.inf)
+            send = seg_min_wire(cand).reshape(s_batch, d_n, w_pad)
+            wire_s = jnp.isfinite(send).sum(axis=(1, 2)).astype(jnp.int32)
+            recv = jax.lax.all_to_all(
+                send, PARTS, split_axis=1, concat_axis=1, tiled=True
+            )
+            new_d = d2.at[:, recv_flat].min(recv.reshape(s_batch, -1))
+            next_fr = new_d < d2
+            ms_s = seg_sum_rp(active_re.astype(jnp.int32))
+
+            upd = lambda buf, row: jax.lax.dynamic_update_index_in_dim(
+                buf, row, s, axis=1
+            )
+            return (
+                s + 1, new_d, next_fr,
+                upd(we, we_s), upd(wv, wv_s), upd(ms, ms_s),
+                upd(it, it_s), upd(wire, wire_s), nst,
+            )
+
+        def superstep_cond(carry):
+            s, _, fr, *_ = carry
+            return (s < m_max) & (
+                jax.lax.pmax(fr.any().astype(jnp.int32), PARTS) > 0
+            )
+
+        zeros_smp = jnp.zeros((s_batch, m_max, p), jnp.int32)
+        zeros_sm = jnp.zeros((s_batch, m_max), jnp.int32)
+        init = (
+            jnp.int32(0), dist, frontier,
+            zeros_smp, zeros_smp, zeros_smp, zeros_sm, zeros_sm, nst0,
+        )
+        _, d, fr, we, wv, ms, it, wire, nst = jax.lax.while_loop(
+            superstep_cond, superstep_body, init
+        )
+        # partitions never span devices: the psum of disjoint partial
+        # counters reconstructs the exact global integers
+        we = jax.lax.psum(we, PARTS)
+        wv = jax.lax.psum(wv, PARTS)
+        ms = jax.lax.psum(ms, PARTS)
+        wire = jax.lax.psum(wire, PARTS)
+        pact = jax.lax.psum(seg_sum_vp(fr.astype(jnp.int32)), PARTS) > 0
+        done = ~g_any(fr.any(axis=1))
+        sg = jnp.zeros((s_batch, m_max, 0), bool)  # mesh: single-device-only
+        return d, fr, nst, we, wv, ms, it, sg, wire, pact, done

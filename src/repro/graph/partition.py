@@ -22,7 +22,13 @@ import dataclasses
 
 import numpy as np
 
-from repro.graph.structs import CsrEdgeLayout, Graph, PartitionedGraph, dst_sorted_layout
+from repro.graph.structs import (
+    CsrEdgeLayout,
+    Graph,
+    MeshEdgeLayout,
+    PartitionedGraph,
+    dst_sorted_layout,
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -54,6 +60,178 @@ def partitioned_edge_layout(pg: PartitionedGraph) -> PartitionedEdgeLayout:
     )
     pg.__dict__["_edge_layout"] = layout
     return layout
+
+
+def contiguous_device_map(n_parts: int, n_devices: int) -> np.ndarray:
+    """Balanced static partition -> device assignment (contiguous blocks).
+
+    Partition ``i`` goes to device ``i * n_devices // n_parts`` when
+    ``n_parts >= n_devices`` (blocks differ by at most one partition); with
+    more devices than partitions the first ``n_parts`` devices get one
+    partition each and the rest stay empty -- a legal, if wasteful, mesh.
+    """
+    if n_parts <= 0 or n_devices <= 0:
+        raise ValueError(f"need positive sizes, got P={n_parts} D={n_devices}")
+    if n_parts >= n_devices:
+        return (np.arange(n_parts, dtype=np.int64) * n_devices // n_parts).astype(
+            np.int32
+        )
+    return np.arange(n_parts, dtype=np.int32)
+
+
+def mesh_edge_layout(
+    pg: PartitionedGraph,
+    device_of_part: np.ndarray,
+    n_devices: int,
+) -> MeshEdgeLayout:
+    """Build the static mesh-aware layout for a fixed partition -> device map.
+
+    Host-side numpy, built once per ``(pg, device_of_part)`` and cached on the
+    instance.  See ``structs.MeshEdgeLayout`` for the contract; the key
+    invariants preserved from the single-device layout are (a) per-device
+    local ``dst`` rows stay ascending (a device-filtered subsequence of the
+    globally dst-sorted local edges, renumbered by a per-device monotone map),
+    and (b) per-device remote edges are ``(dst_device, dst_vertex)``-sorted so
+    wire-slot ids ascend too -- every segment reduction keeps the
+    ``indices_are_sorted`` fast path.
+    """
+    device_of_part = np.asarray(device_of_part, dtype=np.int32)
+    if device_of_part.shape != (pg.n_parts,):
+        raise ValueError(
+            f"device_of_part has shape {device_of_part.shape}, "
+            f"expected ({pg.n_parts},)"
+        )
+    if device_of_part.min() < 0 or device_of_part.max() >= n_devices:
+        raise ValueError(
+            f"device ids must lie in [0, {n_devices}), got "
+            f"[{device_of_part.min()}, {device_of_part.max()}]"
+        )
+    cache = pg.__dict__.setdefault("_mesh_layouts", {})
+    key = (n_devices, device_of_part.tobytes())
+    if key in cache:
+        return cache[key]
+
+    layout = partitioned_edge_layout(pg)
+    n, d_n = pg.graph.n_vertices, int(n_devices)
+    dev_of_vertex = device_of_part[pg.part_of_vertex]
+    counts = np.bincount(dev_of_vertex, minlength=d_n)
+    n_pad = max(1, int(counts.max()))
+
+    # device-major vertex permutation (vertex ids ascending within a device)
+    pos_of_vertex = np.empty(n, dtype=np.int64)
+    vertex_of_pos = np.full(d_n * n_pad, -1, dtype=np.int64)
+    part_of_pos = np.zeros((d_n, n_pad), dtype=np.int32)
+    pos_valid = np.zeros((d_n, n_pad), dtype=bool)
+    for d in range(d_n):
+        verts = np.flatnonzero(dev_of_vertex == d)
+        pos_of_vertex[verts] = d * n_pad + np.arange(verts.size)
+        vertex_of_pos[d * n_pad : d * n_pad + verts.size] = verts
+        part_of_pos[d, : verts.size] = pg.part_of_vertex[verts]
+        pos_valid[d, : verts.size] = True
+
+    # -- local edges: filter per device, renumber to device-local rows -------
+    loc = layout.local
+    ldev = dev_of_vertex[loc.dst]  # == dev_of_vertex[loc.src] (same partition)
+    lcounts = np.bincount(ldev, minlength=d_n) if loc.n_edges else np.zeros(d_n, int)
+    e_local_pad = max(1, int(lcounts.max()) if loc.n_edges else 1)
+    lsrc = np.zeros((d_n, e_local_pad), dtype=np.int32)
+    ldst = np.full((d_n, e_local_pad), n_pad - 1, dtype=np.int32)
+    lw = np.zeros((d_n, e_local_pad), dtype=np.float32)
+    lpart = np.zeros((d_n, e_local_pad), dtype=np.int32)
+    lvalid = np.zeros((d_n, e_local_pad), dtype=bool)
+    for d in range(d_n):
+        sel = np.flatnonzero(ldev == d)  # preserves global dst-ascending order
+        m = sel.size
+        lsrc[d, :m] = pos_of_vertex[loc.src[sel]] - d * n_pad
+        ldst[d, :m] = pos_of_vertex[loc.dst[sel]] - d * n_pad
+        lw[d, :m] = loc.weights[sel]
+        lpart[d, :m] = layout.local_part[sel]
+        lvalid[d, :m] = True
+        # padding dst rows keep the allocation value n_pad - 1, >= any real
+        # local row, so the ascending (indices_are_sorted) contract holds
+
+    # -- remote edges: (src_device, dst_device) blocks + wire slots ----------
+    rem = layout.remote
+    sdev = dev_of_vertex[rem.src]
+    ddev = dev_of_vertex[rem.dst]
+    remote_block_edges = np.zeros((d_n, d_n), dtype=np.int64)
+    wire_slots = np.zeros((d_n, d_n), dtype=np.int64)
+    # first pass: per-block raw and distinct-dst counts fix the pad shapes
+    per_dev: list[tuple[np.ndarray, np.ndarray, np.ndarray]] = []
+    for d in range(d_n):
+        sel = np.flatnonzero(sdev == d)
+        order = np.lexsort((rem.dst[sel], ddev[sel]))
+        sel = sel[order]  # (dst_device, dst_vertex)-sorted
+        bd = ddev[sel]
+        key_dd = bd.astype(np.int64) * n + rem.dst[sel]
+        uniq, inv = (
+            np.unique(key_dd, return_inverse=True)
+            if sel.size
+            else (np.empty(0, np.int64), np.empty(0, np.int64))
+        )
+        np.add.at(remote_block_edges[d], bd, 1)
+        u_dd = (uniq // n).astype(np.int64)
+        np.add.at(wire_slots[d], u_dd, 1)
+        per_dev.append((sel, uniq, inv))
+    e_remote_pad = max(1, int(remote_block_edges.sum(axis=1).max()))
+    w_pad = max(1, int(wire_slots.max()))
+
+    rsrc = np.zeros((d_n, e_remote_pad), dtype=np.int32)
+    rw = np.zeros((d_n, e_remote_pad), dtype=np.float32)
+    rslot = np.full((d_n, e_remote_pad), d_n * w_pad - 1, dtype=np.int32)
+    rpart = np.zeros((d_n, e_remote_pad), dtype=np.int32)
+    rvalid = np.zeros((d_n, e_remote_pad), dtype=bool)
+    recv_idx = np.zeros((d_n, d_n, w_pad), dtype=np.int32)
+    part32 = pg.part_of_vertex.astype(np.int32)
+    for d in range(d_n):
+        sel, uniq, inv = per_dev[d]
+        m = sel.size
+        if m:
+            u_dd = (uniq // n).astype(np.int64)
+            u_dst = (uniq % n).astype(np.int64)
+            # slot rank within each dst-device group (uniq is (dd, dst)-sorted)
+            first_of_dd = np.searchsorted(u_dd, np.arange(d_n))
+            slot_of_uniq = np.arange(uniq.size) - first_of_dd[u_dd]
+            rsrc[d, :m] = pos_of_vertex[rem.src[sel]] - d * n_pad
+            rw[d, :m] = rem.weights[sel]
+            rslot[d, :m] = (u_dd[inv] * w_pad + slot_of_uniq[inv]).astype(np.int32)
+            rpart[d, :m] = part32[rem.src[sel]]
+            rvalid[d, :m] = True
+            # receive side: block (d -> dd) slot s lands on the dst vertex's
+            # device-local row on device dd
+            recv_idx[u_dd, d, slot_of_uniq] = (
+                pos_of_vertex[u_dst] - u_dd * n_pad
+            ).astype(np.int32)
+
+    out = MeshEdgeLayout(
+        n_devices=d_n,
+        n_vertices=n,
+        n_parts=pg.n_parts,
+        device_of_part=device_of_part,
+        n_pad=n_pad,
+        pos_of_vertex=pos_of_vertex,
+        vertex_of_pos=vertex_of_pos,
+        part_of_pos=part_of_pos,
+        pos_valid=pos_valid,
+        e_local_pad=e_local_pad,
+        lsrc=lsrc,
+        ldst=ldst,
+        lw=lw,
+        lpart=lpart,
+        lvalid=lvalid,
+        e_remote_pad=e_remote_pad,
+        w_pad=w_pad,
+        rsrc=rsrc,
+        rw=rw,
+        rslot=rslot,
+        rpart=rpart,
+        rvalid=rvalid,
+        recv_idx=recv_idx,
+        wire_slots=wire_slots,
+        remote_block_edges=remote_block_edges,
+    )
+    cache[key] = out
+    return out
 
 
 def hash_partition(g: Graph, n_parts: int, *, seed: int = 0) -> PartitionedGraph:

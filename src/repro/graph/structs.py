@@ -77,6 +77,74 @@ class CsrEdgeLayout:
         return cached[key]
 
 
+@dataclasses.dataclass(frozen=True)
+class MeshEdgeLayout:
+    """Static mesh-aware extension of ``CsrEdgeLayout`` (one per device map).
+
+    Extends the partitioned dst-sorted layout to a fixed assignment of
+    partitions onto ``n_devices`` mesh devices so that every device's shard is
+    a *fixed-shape* slice and every collective has a *static* payload:
+
+      * vertices are permuted device-major and padded to ``n_pad`` rows per
+        device (``pos_of_vertex``/``vertex_of_pos``); sharded traversal state
+        is ``[S, n_devices * n_pad]`` split on the trailing axis,
+      * local (within-partition) edges are grouped per owning device and
+        padded to ``e_local_pad``, endpoints renumbered to device-local rows
+        (both endpoints of a local edge share a device because a partition is
+        never split across devices),
+      * remote (cross-partition) edges are grouped by
+        ``(src_device, dst_device)`` block; within each block the *distinct*
+        destination vertices define static wire slots (``w_pad`` slots per
+        block), so the superstep-boundary exchange aggregates per-destination
+        minima **before** the collective -- one message per
+        ``(dst_vertex, dst_device)``, not one per edge -- and the all-to-all
+        payload is the fixed ``[n_devices, w_pad]`` buffer.
+
+    All index arrays carry explicit validity masks; padded entries are wired
+    to contribute identity values (``inf`` under min, ``0`` under sum), so no
+    consumer needs data-dependent shapes.  Built host-side once per
+    ``(PartitionedGraph, device_of_part)`` by
+    ``partition.mesh_edge_layout``; the shard_map program in
+    ``graph.mesh_exchange`` consumes it verbatim.
+    """
+
+    n_devices: int
+    n_vertices: int
+    n_parts: int
+    device_of_part: np.ndarray  # [P] int32 owning device per partition
+    # -- vertex shard views --------------------------------------------------
+    n_pad: int  # padded vertex rows per device
+    pos_of_vertex: np.ndarray  # [n] int64: device-major padded position
+    vertex_of_pos: np.ndarray  # [D * n_pad] int64, -1 on padding rows
+    part_of_pos: np.ndarray  # [D, n_pad] int32 (0 on padding; masked by valid)
+    pos_valid: np.ndarray  # [D, n_pad] bool
+    # -- per-device local edges (device-local dst ascending) -----------------
+    e_local_pad: int
+    lsrc: np.ndarray  # [D, e_local_pad] int32 device-local src row
+    ldst: np.ndarray  # [D, e_local_pad] int32 device-local dst row, ascending
+    lw: np.ndarray  # [D, e_local_pad] float32
+    lpart: np.ndarray  # [D, e_local_pad] int32 partition of each edge
+    lvalid: np.ndarray  # [D, e_local_pad] bool
+    # -- per-device remote out-edges, (dst_device, dst_vertex)-sorted --------
+    e_remote_pad: int
+    w_pad: int  # wire slots per (src_device, dst_device) block
+    rsrc: np.ndarray  # [D, e_remote_pad] int32 device-local src row
+    rw: np.ndarray  # [D, e_remote_pad] float32
+    rslot: np.ndarray  # [D, e_remote_pad] int32 in [0, D*w_pad), ascending
+    rpart: np.ndarray  # [D, e_remote_pad] int32 src partition of each edge
+    rvalid: np.ndarray  # [D, e_remote_pad] bool
+    # -- receive side: wire slot -> device-local dst row ---------------------
+    recv_idx: np.ndarray  # [D_recv, D_send, w_pad] int32 (0 on padding slots)
+    # -- static exchange metadata (bench / diagnostics) ----------------------
+    wire_slots: np.ndarray  # [D_send, D_recv] int64 distinct-dst slot counts
+    remote_block_edges: np.ndarray  # [D_send, D_recv] int64 raw edge counts
+
+    @property
+    def state_width(self) -> int:
+        """Width of the sharded state axis: ``n_devices * n_pad``."""
+        return self.n_devices * self.n_pad
+
+
 def dst_sorted_layout(
     n_vertices: int,
     src: np.ndarray,

@@ -9,24 +9,43 @@ active).  The engine also accumulates the per-partition *work counters*
 (vertices processed, edges examined) that instantiate the paper's time
 function A.
 
-Two execution modes share the same math:
+Execution modes sharing the same math:
 
-  * ``make_superstep_fn`` -- one jitted superstep, host loop outside.  Used
-    by the elastic executor, which must interleave placement decisions
-    between supersteps.
-  * ``TraversalEngine`` -- the device-resident engine: the *entire*
+  * ``make_superstep_fn`` -- one jitted superstep, host loop outside (legacy
+    per-superstep orchestration, kept as the equivalence oracle).
+  * ``TraversalEngine`` (dense) -- the device-resident engine: the *entire*
     traversal (inner local-closure loop, remote exchange, work-counter
-    accumulation) is a single jitted ``lax.while_loop`` that writes
-    per-superstep counters into preallocated ``[S, m_max, P]`` device
-    buffers; the host transfers the whole trace once, after convergence.
-    The frontier/distance state carries a leading source axis ``S``, so
-    multi-source sweeps (the BC forward phase) amortize compilation and
-    kernel launches across sources instead of paying a Python loop with a
-    host round-trip per superstep per source.
+    accumulation) is a single jitted ``lax.while_loop`` writing per-superstep
+    counters into preallocated ``[S, m_max, P]`` device buffers, one bulk
+    transfer after convergence.  State carries a leading source axis ``S``
+    so multi-source sweeps (BC forward) amortize compilation and launches.
+  * ``TraversalEngine(mesh=...)`` -- the **mesh-sharded** engine: the same
+    window program, but the partition axis is laid out over a 1-D
+    ``jax.sharding.Mesh`` (``dist.sharding.partition_mesh``).  Each device
+    owns a fixed-shape padded vertex shard (``structs.MeshEdgeLayout``), the
+    local closure runs per device with ``pmax``-synchronized iteration
+    counts, and the superstep-boundary exchange is a *real* collective:
+    per-destination min-aggregation into static wire slots (one message per
+    ``(dst_vertex, dst_device)``, not per edge) followed by one static-shape
+    ``jax.lax.all_to_all`` (``graph.mesh_exchange``).  Distances and the
+    ``[S, m_max, P]`` counters are bit-identical to the dense engine for any
+    device count; a one-device mesh silently uses the dense path.
 
-Both consume the static dst-sorted CSR layout from
-``partition.partitioned_edge_layout``: local and remote edges are split and
-destination-sorted once per graph, so every relaxation takes the
+Exchange contract (mesh mode): the carried state is the padded device-major
+layout ``[S, n_devices * n_pad]`` sharded on the trailing axis --
+``state_index_of_vertex`` maps vertex ids into it and ``gather_global`` maps
+results back; ``run``/``run_window`` signatures are unchanged and
+host-visible results are always in global vertex order.  The extra
+``wire_msgs`` counter records post-aggregation messages put on the collective
+per superstep (0 on the dense path, where nothing crosses a wire).
+
+Single-device-only paths: ``collect_subgraphs`` (metagraph ground-truth
+bitmasks) and ``make_superstep_fn`` do not have mesh twins; the engine
+raises if both ``mesh`` and ``collect_subgraphs`` are requested.
+
+All modes consume the static dst-sorted CSR layout built once per graph
+(``partition.partitioned_edge_layout``, extended per device map by
+``partition.mesh_edge_layout``): every segment reduction takes the
 ``indices_are_sorted`` fast path and no per-call ``argsort`` exists anywhere
 on the traversal hot path.
 
@@ -38,15 +57,18 @@ Knobs (see ``TraversalEngine``):
   * ``collect_subgraphs`` -- also record per-superstep active-subgraph
     bitmasks ``[S, m_max, n_subgraphs]`` on device (the metagraph layer's
     ground truth), still transferred in the same single bulk pull.
+  * ``mesh`` / ``device_of_part`` -- shard the partition axis over mesh
+    devices (default: balanced contiguous blocks).
 
 Windowed execution (``init_state`` / ``run_window``): the same device program
 also runs *resumably* -- ``run_window(state, k)`` executes up to ``k``
 supersteps in one launch, pulls only the ``[S, k, P]`` counter window (plus
 the ``[S, P]`` next-active partition mask and done flags -- one bulk
-``device_get`` per window), and leaves the carried ``[S, n]`` dist/frontier
-state on device.  The elastic executor interleaves placement decisions at
-window boundaries instead of every superstep; ``run`` is the degenerate
-single window of depth ``m_max``.
+``device_get`` per window), and leaves the carried dist/frontier state on
+device (sharded across the mesh in mesh mode).  The elastic executor
+interleaves placement decisions -- and, on a mesh, physical shard migration
+-- at window boundaries; ``run`` is the degenerate single window of depth
+``m_max``.
 """
 
 from __future__ import annotations
@@ -169,6 +191,8 @@ class TraversalResult(NamedTuple):
     msgs_sent: jax.Array  # [S, m_max, P] int32
     inner_iters: jax.Array  # [S, m_max] int32
     sg_active: jax.Array  # [S, m_max, n_sg] bool, or [S, m_max, 0] if off
+    wire_msgs: jax.Array  # [S, m_max] int32 post-aggregation collective
+    # messages per superstep (mesh mode; 0 on the dense path)
 
 
 class TraversalNotConverged(RuntimeError):
@@ -226,6 +250,8 @@ class TraversalEngine:
         *,
         m_max: int = 512,
         collect_subgraphs: bool = False,
+        mesh=None,
+        device_of_part: np.ndarray | None = None,
     ):
         self.pg = pg
         self.m_max = int(m_max)
@@ -233,6 +259,19 @@ class TraversalEngine:
         self.n = pg.graph.n_vertices
         self.n_parts = pg.n_parts
         self.n_subgraphs = pg.n_subgraphs if collect_subgraphs else 0
+        self.mesh = mesh
+        self._mesh_prog = None
+        if mesh is not None and int(mesh.devices.size) > 1:
+            if collect_subgraphs:
+                raise NotImplementedError(
+                    "collect_subgraphs is single-device-only; run the "
+                    "metagraph ground-truth pass without a mesh"
+                )
+            from repro.graph.mesh_exchange import MeshTraversalProgram
+
+            self._mesh_prog = MeshTraversalProgram(
+                pg, mesh, device_of_part=device_of_part
+            )
         dev = _device_arrays(pg)  # shared across engines on this graph
         self._lsrc, self._ldst, self._lw, self._lpart = (
             dev.lsrc, dev.ldst, dev.lw, dev.lpart,
@@ -252,6 +291,34 @@ class TraversalEngine:
         # window of depth m_max, run_window() launches depth k (static arg,
         # compiled once per distinct k/S)
         self._window = jax.jit(self._window_impl, static_argnums=3)
+
+    # -- state layout (identity on the dense path) ---------------------------
+
+    @property
+    def state_index_of_vertex(self) -> np.ndarray:
+        """[n] index of each vertex in the carried state's trailing axis.
+
+        The elastic executor uses this to address partition shards inside
+        ``WindowState.dist`` without knowing whether the engine is dense
+        (identity) or mesh-sharded (padded device-major positions).
+        """
+        if self._mesh_prog is not None:
+            return self._mesh_prog.state_index_of_vertex
+        return np.arange(self.n, dtype=np.int64)
+
+    def gather_global(self, state_rows: np.ndarray) -> np.ndarray:
+        """Map host-side carried state ``[..., state_width]`` to global
+        vertex order ``[..., n]`` (identity on the dense path)."""
+        if self._mesh_prog is not None:
+            return self._mesh_prog.gather_global(state_rows)
+        return np.asarray(state_rows)
+
+    def _launch(self, dist, frontier, nst0, k: int):
+        """One window launch on whichever device program this engine runs."""
+        if self._mesh_prog is not None:
+            out = self._mesh_prog.window(dist, frontier, nst0, k)
+            return TraversalResult(*out[:9]), out[9], out[10]
+        return self._window(dist, frontier, nst0, k)
 
     # -- device program ------------------------------------------------------
 
@@ -362,14 +429,22 @@ class TraversalEngine:
             > 0
         )
         done = ~fr.any(axis=1)
-        return TraversalResult(d, fr, nst, we, wv, ms, it, sg), pact, done
+        wire = jnp.zeros((s_batch, m_max), jnp.int32)  # dense: no wire
+        return TraversalResult(d, fr, nst, we, wv, ms, it, sg, wire), pact, done
 
     # -- host API ------------------------------------------------------------
 
     def init_state(self, sources) -> WindowState:
-        """Device-resident initial state for ``run_window`` (no host sync)."""
+        """Device-resident initial state for ``run_window`` (no host sync).
+
+        In mesh mode the state is the padded device-major layout, already
+        sharded over the partition axis.
+        """
         sources = np.atleast_1d(np.asarray(sources, dtype=np.int64))
         s_batch = sources.shape[0]
+        if self._mesh_prog is not None:
+            dist, frontier = self._mesh_prog.init_state(sources)
+            return WindowState(dist, frontier, jnp.zeros((s_batch,), jnp.int32))
         dist = jnp.full((s_batch, self.n), jnp.inf, dtype=jnp.float32)
         dist = dist.at[jnp.arange(s_batch), jnp.asarray(sources)].set(0.0)
         frontier = (
@@ -390,7 +465,9 @@ class TraversalEngine:
         k = int(k)
         if k < 1:
             raise ValueError(f"window size must be >= 1, got {k}")
-        res, pact, done = self._window(state.dist, state.frontier, state.n_supersteps, k)
+        res, pact, done = self._launch(
+            state.dist, state.frontier, state.n_supersteps, k
+        )
         nst, we, wv, ms, it, pact, done = jax.device_get(
             (
                 res.n_supersteps,
@@ -423,24 +500,42 @@ class TraversalEngine:
         supersteps.
         """
         state = self.init_state(sources)
-        res, _, _ = self._window(
+        res, _, _ = self._launch(
             state.dist, state.frontier, state.n_supersteps, self.m_max
         )
         res = jax.device_get(res)
+        if self._mesh_prog is not None:
+            # padded device-major -> global vertex order for host consumers
+            res = res._replace(
+                dist=self.gather_global(res.dist),
+                frontier=self.gather_global(res.frontier),
+            )
         if res.frontier.any():
             raise TraversalNotConverged(self.m_max, res)
         return res
 
 
 def get_engine(
-    pg: PartitionedGraph, *, m_max: int = 512, collect_subgraphs: bool = False
+    pg: PartitionedGraph,
+    *,
+    m_max: int = 512,
+    collect_subgraphs: bool = False,
+    mesh=None,
 ) -> TraversalEngine:
-    """Per-graph engine cache (keyed by the knobs, stored on the instance)."""
+    """Per-graph engine cache (keyed by the knobs, stored on the instance).
+
+    Mesh engines are keyed by the mesh's device ids; the default balanced
+    contiguous partition map is assumed (construct ``TraversalEngine``
+    directly for a custom ``device_of_part``).
+    """
     engines = pg.__dict__.setdefault("_traversal_engines", {})
-    key = (m_max, collect_subgraphs)
+    mesh_key = (
+        None if mesh is None else tuple(d.id for d in mesh.devices.flat)
+    )
+    key = (m_max, collect_subgraphs, mesh_key)
     if key not in engines:
         engines[key] = TraversalEngine(
-            pg, m_max=m_max, collect_subgraphs=collect_subgraphs
+            pg, m_max=m_max, collect_subgraphs=collect_subgraphs, mesh=mesh
         )
     return engines[key]
 

@@ -1,0 +1,37 @@
+"""Mesh-test plumbing: the ``mesh`` marker and a subprocess-safe way to get
+multi-device runs.
+
+``--xla_force_host_platform_device_count`` only takes effect before jax
+initializes its backends, and the main pytest process has already imported
+jax on the single real CPU device (the root ``conftest.py`` deliberately
+keeps it that way).  Multi-device tests therefore run in a *subprocess* with
+``XLA_FLAGS`` set in its environment: the ``mesh_subprocess`` fixture runs a
+script (by path, with optional argv) under N forced host devices via the
+shared ``repro.testing.forced_devices`` recipe and fails the test on a
+non-zero exit, so a mesh test is "this child script's assertions all
+passed".
+
+Mark such tests ``@pytest.mark.mesh``; deselect with ``-m 'not mesh'`` when
+iterating on single-device code (each child pays a fresh jax import +
+compile, ~tens of seconds).
+"""
+
+from __future__ import annotations
+
+import pytest
+
+from repro.testing.forced_devices import run_forced_devices
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "mesh: multi-device test; runs a child process with "
+        "XLA_FLAGS=--xla_force_host_platform_device_count=N",
+    )
+
+
+@pytest.fixture
+def mesh_subprocess():
+    """Fixture handle on ``run_forced_devices`` (see module docstring)."""
+    return run_forced_devices

@@ -1,0 +1,141 @@
+"""Mesh placement layer tests.
+
+Host-side pieces (layout construction, device maps, plan -> device bridge,
+single-device fallback) run in-process; real multi-device execution runs in
+a subprocess with 8 forced host devices via the ``mesh_subprocess`` fixture
+(``tests/_mesh_child.py`` holds those assertions -- engine/executor
+equivalence for D in {1, 2, 8} x window {1, 8}, the ragged P=5 regression,
+and the wire-message reduction).
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.placement import Placement
+from repro.dist.sharding import partition_mesh
+from repro.graph.generators import erdos_renyi_graph
+from repro.graph.partition import (
+    bfs_grow_partition,
+    contiguous_device_map,
+    mesh_edge_layout,
+    partitioned_edge_layout,
+)
+from repro.graph.traversal import TraversalEngine, get_engine
+
+_CHILD = os.path.join(os.path.dirname(__file__), "_mesh_child.py")
+
+
+# -- host-side layout invariants (no devices needed) -------------------------
+
+
+def test_contiguous_device_map_is_balanced():
+    for p, d in [(8, 4), (5, 2), (7, 3), (3, 8)]:
+        m = contiguous_device_map(p, d)
+        assert m.shape == (p,)
+        counts = np.bincount(m, minlength=d)
+        # contiguous blocks differing by at most one partition (and with
+        # D > P, one partition each on the first P devices)
+        assert counts.max() - counts[counts > 0].min() <= 1
+        assert (np.diff(m) >= 0).all()
+    with pytest.raises(ValueError):
+        contiguous_device_map(0, 4)
+
+
+@pytest.mark.parametrize("n_parts,n_dev", [(5, 2), (5, 8), (6, 3), (4, 1)])
+def test_mesh_layout_invariants_ragged(n_parts, n_dev):
+    """The mesh layout must be exact for any P/D combination -- including P
+    not divisible by D and more devices than partitions."""
+    g = erdos_renyi_graph(300, 4.0, seed=11)
+    pg = bfs_grow_partition(g, n_parts, seed=2)
+    lay = partitioned_edge_layout(pg)
+    ml = mesh_edge_layout(pg, contiguous_device_map(n_parts, n_dev), n_dev)
+
+    # vertex permutation round-trips and respects the device map
+    assert np.array_equal(
+        ml.vertex_of_pos[ml.pos_of_vertex], np.arange(g.n_vertices)
+    )
+    dev_of_vertex = ml.device_of_part[pg.part_of_vertex]
+    assert np.array_equal(ml.pos_of_vertex // ml.n_pad, dev_of_vertex)
+    assert int(ml.pos_valid.sum()) == g.n_vertices
+
+    # every local and remote edge appears exactly once
+    assert int(ml.lvalid.sum()) == lay.local.n_edges
+    assert int(ml.rvalid.sum()) == lay.remote.n_edges
+
+    # segment indices stay ascending per device (indices_are_sorted contract)
+    for d in range(n_dev):
+        assert (np.diff(ml.ldst[d]) >= 0).all()
+        assert (np.diff(ml.rslot[d]) >= 0).all()
+
+    # per-destination slots never exceed raw block edges, and decode back to
+    # a real vertex on the right device
+    assert (ml.wire_slots <= ml.remote_block_edges).all()
+    assert ml.wire_slots.sum() > 0
+    for d in range(n_dev):
+        m = int(ml.rvalid[d].sum())
+        for i in range(0, m, max(1, m // 25)):
+            slot = int(ml.rslot[d, i])
+            dd, s = slot // ml.w_pad, slot % ml.w_pad
+            gv = int(ml.vertex_of_pos[dd * ml.n_pad + int(ml.recv_idx[dd, d, s])])
+            assert gv >= 0 and dev_of_vertex[gv] == dd
+
+
+def test_mesh_layout_rejects_bad_device_map():
+    g = erdos_renyi_graph(100, 3.0, seed=1)
+    pg = bfs_grow_partition(g, 4, seed=1)
+    with pytest.raises(ValueError, match="device ids"):
+        mesh_edge_layout(pg, np.array([0, 1, 2, 5], np.int32), 4)
+    with pytest.raises(ValueError, match="shape"):
+        mesh_edge_layout(pg, np.zeros(3, np.int32), 4)
+
+
+def test_placement_device_row_bridges_vms_to_mesh():
+    vm_of = np.array([[0, 3, -1, 9]], dtype=np.int64)
+    p = Placement("x", np.ones((1, 4)), vm_of)
+    np.testing.assert_array_equal(p.device_row(0, 4), [0, 3, -1, 1])
+    np.testing.assert_array_equal(p.device_row(0, 1), [0, 0, -1, 0])
+
+
+# -- single-device fallback (runs on the real 1-CPU pytest process) ----------
+
+
+def test_one_device_mesh_falls_back_to_dense_path():
+    g = erdos_renyi_graph(250, 4.0, seed=5)
+    pg = bfs_grow_partition(g, 4, seed=3)
+    mesh = partition_mesh(1)
+    eng = TraversalEngine(pg, m_max=64, mesh=mesh)
+    assert eng._mesh_prog is None  # dense program serves 1-device meshes
+    dense = get_engine(pg, m_max=64).run([0, 11])
+    res = eng.run([0, 11])
+    np.testing.assert_array_equal(res.dist, dense.dist)
+    np.testing.assert_array_equal(res.edges_examined, dense.edges_examined)
+    assert int(res.wire_msgs.sum()) == 0  # nothing crosses a wire
+    # state-layout helpers are the identity on the dense path
+    np.testing.assert_array_equal(
+        eng.state_index_of_vertex, np.arange(g.n_vertices)
+    )
+
+
+def test_mesh_rejects_collect_subgraphs():
+    """collect_subgraphs is documented single-device-only."""
+    g = erdos_renyi_graph(100, 3.0, seed=2)
+    pg = bfs_grow_partition(g, 3, seed=1)
+
+    class _FakeMesh:
+        devices = np.empty((2,), dtype=object)
+
+    with pytest.raises(NotImplementedError, match="single-device"):
+        TraversalEngine(pg, mesh=_FakeMesh(), collect_subgraphs=True)
+
+
+# -- real multi-device execution ---------------------------------------------
+
+
+@pytest.mark.mesh
+def test_mesh_equivalence_and_migration_8_devices(mesh_subprocess):
+    """Engine + executor equivalence under 8 forced host devices; see
+    ``tests/_mesh_child.py`` for the assertion inventory."""
+    out = mesh_subprocess(_CHILD, n_devices=8)
+    assert "ALL MESH CHECKS PASSED" in out

@@ -83,6 +83,69 @@ def test_replanner_rejects_prefix_mismatch():
         rp.replan(np.zeros((3, 2), dtype=np.int64), 2, np.array([True, True]))
 
 
+def test_sketch_supplies_decay_rates_for_unobserved_partitions():
+    """A partition with < 2 observed active supersteps takes its decay rate
+    from the metagraph sketch; observed fits keep priority."""
+    # partition 0: observed halving (rate 0.5); partition 1: one observation
+    # only -- unusable -- but the sketch predicts a 0.25 decay for it
+    observed = np.array([[8.0, 0.0], [4.0, 2.0]])
+    sketch = TimeFunction(np.array([[1.0, 8.0], [0.5, 2.0], [0.0, 0.5]]))
+    cfg = ReplanConfig(activation_floor=0.0)
+    fut = extrapolate_tau(
+        observed, np.array([True, True]), 3, cfg, sketch=sketch
+    )
+    np.testing.assert_allclose(fut[:, 0], [4.0, 2.0, 1.0])  # observed 0.5
+    np.testing.assert_allclose(fut[:, 1], 2.0 * 0.25 ** np.arange(3))
+    # without the sketch, partition 1 falls back to decay_default
+    fut_no = extrapolate_tau(observed, np.array([True, True]), 3, cfg)
+    np.testing.assert_allclose(
+        fut_no[:, 1], 2.0 * cfg.decay_default ** np.arange(3)
+    )
+
+
+def test_sketch_scales_activation_floor_per_partition():
+    """Partitions the sketch predicts heavy keep a larger placed-when-idle
+    prior than ones it predicts light."""
+    observed = np.array([[4.0, 0.0, 0.0]])
+    # sketch: partition 1 predicted 8x heavier than partition 2
+    sketch = TimeFunction(np.array([[0.0, 8.0, 1.0], [0.0, 8.0, 1.0]]))
+    fut = extrapolate_tau(
+        observed, np.array([True, False, False]), 2, sketch=sketch
+    )
+    assert (fut > 0).all()  # every partition still placed
+    assert fut[0, 1] > fut[0, 2]  # sketch-heavy partition floors higher
+    # without a sketch the idle floors are uniform
+    fut_no = extrapolate_tau(observed, np.array([True, False, False]), 2)
+    np.testing.assert_allclose(fut_no[0, 1], fut_no[0, 2])
+
+
+def test_sketch_partition_count_mismatch_raises():
+    with pytest.raises(ValueError, match="partitions"):
+        extrapolate_tau(
+            np.array([[1.0, 1.0]]),
+            np.array([True, True]),
+            2,
+            sketch=TimeFunction(np.ones((2, 3))),
+        )
+
+
+def test_replanner_threads_sketch_through_replans():
+    """OnlineReplanner(sketch=...) must produce a valid full-horizon splice
+    (the sketch changes the extrapolation, not the splice contract)."""
+    n_parts = 3
+    sketch = TimeFunction(np.tile([[4.0, 2.0, 1.0]], (6, 1)))
+    rp = OnlineReplanner(
+        n_parts, ffd_placement, ReplanConfig(min_horizon=6), sketch=sketch
+    )
+    rp.observe(np.array([[1.0, 0.0, 0.0]]))
+    old = np.full((3, n_parts), -1, dtype=np.int64)
+    old[:, 0] = 0
+    new = rp.replan(old, 1, np.array([True, True, False]))
+    np.testing.assert_array_equal(new[:1], old[:1])
+    assert new.shape[0] - 1 >= 6
+    assert (new[1:] >= 0).all()  # floor keeps every partition placed
+
+
 def test_timefunction_concat_and_decay_rates():
     a = TimeFunction(np.array([[4.0, 0.0]]))
     b = np.array([[2.0, 1.0], [1.0, 3.0]])
