@@ -22,6 +22,18 @@ count -- the D>1 rows assert that aggregation genuinely shrinks the
 collective payload.  Run this file with ``--mesh-child`` to produce just
 that sweep as JSON on stdout (what the parent process invokes).
 
+The ``--programs`` sweep (also part of the full run) exercises the
+VertexProgram algebra on a weighted twin of the benchmark graph: for each of
+bfs / sssp / wcc / pagerank it records dense supersteps/sec, the wire-message
+saving of per-destination combiner aggregation on an 8-device mesh (its own
+forced-device subprocess, ``--programs-child``), and the elastic
+(ffd-planned) vs static (default placement) billing of the program's own
+executed trace.  The stationary pagerank row is the designed contrast case:
+``mean_active_fraction == 1`` (no activation sparsity for elasticity to
+harvest -- its ffd savings are pure load consolidation), versus the sweeping
+partial-activation profiles of the traversals.  ``--programs`` alone merges
+just this sweep into an existing ``BENCH_traversal.json``.
+
 Writes ``BENCH_traversal.json`` so the perf trajectory is tracked per PR.
 """
 
@@ -36,12 +48,15 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.billing import BillingModel, evaluate
 from repro.core.elastic import ElasticBSPExecutor
-from repro.core.placement import ffd_placement
+from repro.core.placement import default_placement, ffd_placement
 from repro.core.timing import TimeFunction
-from repro.graph.bsp import run_bc_forward, run_sssp
-from repro.graph.generators import erdos_renyi_graph, rmat_graph
+from repro.graph.bsp import run_bc_forward, run_program, run_sssp
+from repro.graph.generators import erdos_renyi_graph, rmat_graph, weighted
 from repro.graph.partition import bfs_grow_partition
+from repro.graph.program import BUILTIN_PROGRAMS, PageRankProgram
+from repro.graph.structs import PartitionedGraph
 from repro.graph.traversal import make_superstep_fn
 
 N_SOURCES = 16
@@ -50,7 +65,29 @@ N_PARTS = 8
 WINDOW_SIZES = (1, 4, 8, 16)
 MESH_SIZES = (1, 2, 4, 8)
 MESH_FORCED_DEVICES = 8
+PAGERANK_ITERS = 20
 OUT_PATH = "BENCH_traversal.json"
+
+
+def _bench_programs():
+    """One instance per builtin program, pagerank pinned to the bench budget."""
+    return {
+        name: (
+            PageRankProgram(num_iters=PAGERANK_ITERS)
+            if name == "pagerank"
+            else ctor()
+        )
+        for name, ctor in BUILTIN_PROGRAMS.items()
+    }
+
+
+def _weighted_bench_pg() -> PartitionedGraph:
+    """Weighted twin of the benchmark graph, same partition map (weights do
+    not influence partitioning, so the partition structure stays comparable
+    across the sweeps)."""
+    g = rmat_graph(SCALE, DEGREE, seed=3)
+    pg = bfs_grow_partition(g, N_PARTS, seed=1)
+    return PartitionedGraph(weighted(g, seed=5), N_PARTS, pg.part_of_vertex)
 
 
 def _serial_bc(pg, sources):
@@ -184,6 +221,109 @@ def _mesh_sweep_subprocess() -> dict:
     return json.loads(out)
 
 
+def _programs_child() -> dict:
+    """Per-program wire-message accounting on an 8-device mesh (subprocess
+    body): post-aggregation wire slots vs raw active remote edges, per
+    builtin VertexProgram, on the weighted benchmark graph."""
+    import jax
+
+    from repro.dist.sharding import partition_mesh
+    from repro.graph.traversal import get_engine
+
+    assert len(jax.devices()) >= MESH_FORCED_DEVICES
+    pg = _weighted_bench_pg()
+    mesh = partition_mesh(MESH_FORCED_DEVICES)
+    rows = {}
+    for name, prog in _bench_programs().items():
+        res = get_engine(pg, program=prog, m_max=512, mesh=mesh).run([0])
+        wire, pre = int(res.wire_msgs.sum()), int(res.msgs_sent.sum())
+        assert 0 < wire < pre, (
+            f"{name}: combiner aggregation must shrink the wire "
+            f"({wire} vs {pre})"
+        )
+        rows[name] = {
+            "wire_total": wire,
+            "pre_agg_total": pre,
+            "wire_reduction": 1.0 - wire / pre,
+        }
+    return {"n_devices": MESH_FORCED_DEVICES, "per_program": rows}
+
+
+def _program_sweep() -> dict:
+    """The VertexProgram sweep: per program, dense supersteps/sec, mesh wire
+    savings (subprocess), and the elastic-vs-static billing of the program's
+    own executed trace."""
+    from repro.testing.forced_devices import run_forced_devices
+
+    pg = _weighted_bench_pg()
+    model = BillingModel()
+    rows = {}
+    for name, prog in _bench_programs().items():
+        run_program(pg, prog, [0], max_supersteps=512)  # warm (compile)
+        t0 = time.perf_counter()
+        _, traces = run_program(pg, prog, [0], max_supersteps=512)
+        wall = time.perf_counter() - t0
+        trace = traces[0]
+        tf = TimeFunction.from_trace(trace)
+        elastic = evaluate(ffd_placement(tf), model)
+        static = evaluate(default_placement(tf), model)
+        rows[name] = {
+            "supersteps": int(trace.n_supersteps),
+            "wall_s": wall,
+            "supersteps_per_sec": trace.n_supersteps / wall,
+            "mean_active_fraction": trace.mean_active_fraction(),
+            "elastic_cost_quanta": int(elastic.cost_quanta),
+            "static_cost_quanta": int(static.cost_quanta),
+            "elastic_saving_vs_static": (
+                1.0 - elastic.cost_quanta / static.cost_quanta
+            ),
+        }
+    wire = json.loads(
+        run_forced_devices(
+            os.path.abspath(__file__),
+            "--programs-child",
+            n_devices=MESH_FORCED_DEVICES,
+            timeout=1800,
+        )
+    )
+    for name, row in wire["per_program"].items():
+        rows[name].update(row)
+    return {
+        "graph": "weighted rmat",
+        "n_parts": N_PARTS,
+        "pagerank_iters": PAGERANK_ITERS,
+        "per_program": rows,
+    }
+
+
+def _print_program_sweep(sweep: dict) -> None:
+    for name, row in sweep["per_program"].items():
+        print(
+            f"program {name}: {row['supersteps']} supersteps "
+            f"({row['supersteps_per_sec']:.0f}/s), active frac "
+            f"{row['mean_active_fraction']:.2f}, wire saved "
+            f"{row['wire_reduction']:.0%}, elastic {row['elastic_cost_quanta']}"
+            f" vs static {row['static_cost_quanta']} core-min "
+            f"({row['elastic_saving_vs_static']:.0%} saved)"
+        )
+
+
+def run_programs_only(verbose: bool = True) -> dict:
+    """``--programs``: compute just the program sweep and merge it into an
+    existing ``BENCH_traversal.json`` (fresh file if none)."""
+    out = {}
+    if os.path.exists(OUT_PATH):
+        with open(OUT_PATH) as f:
+            out = json.load(f)
+    out["program_sweep"] = _program_sweep()
+    with open(OUT_PATH, "w") as f:
+        json.dump(out, f, indent=2)
+    if verbose:
+        _print_program_sweep(out["program_sweep"])
+        print(f"-> {OUT_PATH}")
+    return out
+
+
 def run(verbose: bool = True) -> dict:
     g = rmat_graph(SCALE, DEGREE, seed=3)
     pg = bfs_grow_partition(g, N_PARTS, seed=1)
@@ -230,6 +370,9 @@ def run(verbose: bool = True) -> dict:
     # mesh-sharded engine device sweep (subprocess: needs forced devices)
     out["mesh_sweep"] = _mesh_sweep_subprocess()
 
+    # VertexProgram sweep: algorithms x {dense rate, wire savings, elasticity}
+    out["program_sweep"] = _program_sweep()
+
     with open(OUT_PATH, "w") as f:
         json.dump(out, f, indent=2)
     if verbose:
@@ -262,11 +405,16 @@ def run(verbose: bool = True) -> dict:
                 f"supersteps"
                 + (f" ({red:.0%} saved by aggregation)" if red else "")
             )
+        _print_program_sweep(out["program_sweep"])
     return out
 
 
 if __name__ == "__main__":
     if "--mesh-child" in sys.argv:
         print(json.dumps(_mesh_child()))
+    elif "--programs-child" in sys.argv:
+        print(json.dumps(_programs_child()))
+    elif "--programs" in sys.argv:
+        run_programs_only()
     else:
         run()

@@ -1,6 +1,14 @@
 """Elastic BSP executor: run a subgraph-centric job under a placement schedule
 on a pool of jax devices standing in for cloud VMs.
 
+The executed job is any ``graph.program.VertexProgram`` (``program=``):
+non-stationary traversals (BFS/SSSP/WCC) whose active partition set sweeps
+and dies out, or stationary algorithms (PageRank) that keep every partition
+hot for a fixed budget -- the contrast the paper's placement strategies are
+about.  The replanner's extrapolation defaults follow the program
+(``ReplanConfig.for_program``): stationary workloads get a flat
+activity-decay prior instead of the traversal decay fit.
+
 The mapping from the paper's cloud model to JAX:
 
   VM slot j            -> a jax device (round-robin over the local pool)
@@ -76,6 +84,7 @@ from repro.core.placement import Placement, device_of_vm
 from repro.core.replan import OnlineReplanner, ReplanConfig
 from repro.core.timing import DEFAULT_ALPHA, DEFAULT_BETA, TimeFunction
 from repro.graph.mesh_exchange import place_shard
+from repro.graph.program import SsspProgram, VertexProgram
 from repro.graph.structs import PartitionedGraph
 from repro.graph.traversal import get_engine
 
@@ -105,12 +114,14 @@ class ExecutionReport:
 
 
 class ElasticBSPExecutor:
-    """Executes BFS/SSSP under a placement schedule with elastic devices."""
+    """Executes any ``VertexProgram`` under a placement schedule with elastic
+    devices (default program: weighted SSSP == BFS on unit weights)."""
 
     def __init__(
         self,
         pg: PartitionedGraph,
         *,
+        program: VertexProgram | None = None,
         alpha: float = DEFAULT_ALPHA,
         beta: float = DEFAULT_BETA,
         tau_scale: float = 1.0,
@@ -118,26 +129,29 @@ class ElasticBSPExecutor:
         mesh=None,
     ):
         self.pg = pg
+        self.program = program or SsspProgram()
         self.alpha = alpha
         self.beta = beta
         self.tau_scale = tau_scale
         self.billing = billing or BillingModel()
         self.mesh = mesh
-        self.engine = get_engine(pg, mesh=mesh)
+        self.engine = get_engine(pg, program=self.program, mesh=mesh)
         self.devices = (
             list(mesh.devices.flat) if mesh is not None else jax.devices()
         )
         # per-partition index lists into the carried state's trailing axis
         # (identity layout on the dense engine, padded device-major positions
         # on the mesh engine) for shard gathers, and shard sizes in bytes
-        # (dist is float32) for migration pricing
+        # (per the program's state dtype) for migration pricing
         state_idx = self.engine.state_index_of_vertex
         self._part_indices = [
             jnp.asarray(state_idx[np.flatnonzero(pg.part_of_vertex == i)])
             for i in range(pg.n_parts)
         ]
+        itemsize = np.dtype(self.program.dtype).itemsize
         self.partition_bytes = np.array(
-            [4 * ix.shape[0] for ix in self._part_indices], dtype=np.int64
+            [itemsize * ix.shape[0] for ix in self._part_indices],
+            dtype=np.int64,
         )
 
     def _device_of_vm(self, j: int):
@@ -161,7 +175,8 @@ class ElasticBSPExecutor:
 
         state = self.engine.init_state([source])
         replanner = OnlineReplanner(
-            pg.n_parts, strategy_fn, replan_config or ReplanConfig(),
+            pg.n_parts, strategy_fn,
+            replan_config or ReplanConfig.for_program(self.program),
             sketch=sketch,
         )
 
@@ -183,10 +198,10 @@ class ElasticBSPExecutor:
         residency: list[np.ndarray] = []
 
         s = 0
-        # superstep 0's active set is the source's partition -- host-known,
-        # so the first placement decision costs no device round-trip
-        active_next = np.zeros(pg.n_parts, dtype=bool)
-        active_next[pg.part_of_vertex[source]] = True
+        # superstep 0's active set is program-defined and host-known (the
+        # source's partition for traversals, every partition for source-free
+        # programs), so the first placement decision costs no device round-trip
+        active_next = self.program.initial_active_parts(pg, [source])
         done = False
 
         while not done and s < max_supersteps:

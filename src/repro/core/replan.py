@@ -63,6 +63,19 @@ class ReplanConfig:
     eps_frac: float = 1e-3  # decay horizon cutoff, x mean active tau
     sketch_rel_clip: tuple[float, float] = (0.1, 10.0)  # floor scale bounds
 
+    @classmethod
+    def for_program(cls, program) -> "ReplanConfig":
+        """Extrapolation defaults matched to the vertex program's shape.
+
+        Traversals get the geometric activity-decay fit; stationary programs
+        (``program.stationary``) hold every partition at its observed level
+        -- their tau is flat until the budget ends, so a decaying
+        extrapolation would spuriously shrink the replanned VM pool.
+        """
+        if getattr(program, "stationary", False):
+            return cls(decay_default=1.0, decay_clip=(0.5, 1.25))
+        return cls()
+
 
 def _mean_positive(tau: np.ndarray) -> float:
     pos = tau > 0

@@ -5,9 +5,12 @@ Layers:
                  static dst-sorted CsrEdgeLayout (per-tile dst ranges for the
                  block-skipping relax kernel)
   generators  -- synthetic graphs matched to the paper's dataset families
+                 (plus seeded deterministic edge weights for SSSP)
   partition   -- hash + BFS-grow (METIS-like) partitioners and the
                  partition-aware local/remote edge layout (plus the
                  mesh-aware per-device layout, ``mesh_edge_layout``)
+  program     -- the VertexProgram algebra (BFS / weighted SSSP / WCC /
+                 PageRank) both engines are parameterized by
   traversal   -- device-resident multi-source BSP engine (whole traversal in
                  one lax.while_loop) + the per-superstep fn for the executor;
                  ``mesh=`` shards the partition axis over a device mesh
@@ -26,6 +29,14 @@ from repro.graph.partition import (
     hash_partition,
     mesh_edge_layout,
 )
+from repro.graph.program import (
+    BUILTIN_PROGRAMS,
+    BfsProgram,
+    PageRankProgram,
+    SsspProgram,
+    VertexProgram,
+    WccProgram,
+)
 
 __all__ = [
     "Graph",
@@ -38,4 +49,10 @@ __all__ = [
     "bfs_grow_partition",
     "contiguous_device_map",
     "mesh_edge_layout",
+    "VertexProgram",
+    "BfsProgram",
+    "SsspProgram",
+    "WccProgram",
+    "PageRankProgram",
+    "BUILTIN_PROGRAMS",
 ]

@@ -26,6 +26,7 @@ import dataclasses
 
 import numpy as np
 
+from repro.graph.program import VertexProgram
 from repro.graph.structs import PartitionedGraph
 from repro.graph.traversal import TraversalResult, get_engine
 
@@ -95,6 +96,33 @@ def run_sssp(
     )
     res = engine.run([source])
     return res.dist[0], _trace_of_source(res, 0, collect_subgraphs)
+
+
+def run_program(
+    pg: PartitionedGraph,
+    program: VertexProgram,
+    sources=(0,),
+    *,
+    max_supersteps: int = 4096,
+    collect_subgraphs: bool = False,
+) -> tuple[np.ndarray, list[BSPTrace]]:
+    """Run any ``VertexProgram`` on the device-resident engine.
+
+    Returns the final per-vertex values ``[S, n]`` and one trimmed
+    ``BSPTrace`` per batch row.  For source-free programs (WCC, PageRank)
+    ``sources`` only sizes the batch; a single row is the common case.
+    """
+    sources = list(sources)  # materialize once: iterators must not re-drain
+    engine = get_engine(
+        pg, program=program, m_max=max_supersteps,
+        collect_subgraphs=collect_subgraphs,
+    )
+    res = engine.run(sources)
+    traces = [
+        _trace_of_source(res, s, collect_subgraphs)
+        for s in range(len(sources))
+    ]
+    return res.dist, traces
 
 
 def concat_traces(traces: list[BSPTrace]) -> BSPTrace:

@@ -86,16 +86,32 @@ def erdos_renyi_graph(n: int, avg_degree: float, *, seed: int = 0) -> Graph:
 
 
 def weighted(g: Graph, *, low: float = 1.0, high: float = 4.0, seed: int = 0) -> Graph:
-    """Attach symmetric uniform edge weights (for SSSP)."""
-    rng = np.random.default_rng(seed)
+    """Attach deterministic symmetric uniform edge weights in ``[low, high)``.
+
+    Weights are a pure hash of the unordered endpoint pair mixed with
+    ``seed`` -- reproducible across runs and process boundaries (no RNG
+    state), equal for ``(u, v)`` and ``(v, u)``, and strictly positive for
+    ``low > 0`` (what the weighted ``SsspProgram`` tests rely on).  Distinct
+    seeds give distinct weight planes on the same graph; ``seed=0``
+    reproduces the historical unseeded plane bit-for-bit.
+    """
+    if low <= 0:
+        raise ValueError(f"edge weights must stay positive, got low={low}")
     # weight must agree for (u,v) and (v,u): derive from unordered key
-    u = np.minimum(g.src, g.dst).astype(np.int64)
-    v = np.maximum(g.src, g.dst).astype(np.int64)
-    key = u * g.n_vertices + v
-    # hash key -> [0,1)
-    h = (key * np.int64(2654435761)) % np.int64(2**31)
+    u = np.minimum(g.src, g.dst).astype(np.uint64)
+    v = np.maximum(g.src, g.dst).astype(np.uint64)
+    key = u * np.uint64(g.n_vertices) + v
+    with np.errstate(over="ignore"):  # wrapping arithmetic is the hash
+        if seed:
+            # xor + splitmix-style round: a purely additive seed would only
+            # shift the whole plane by one constant mod 2^31, leaving the
+            # relative edge ordering identical across seeds.  seed=0 skips
+            # this and reproduces the historical unseeded plane bit-for-bit.
+            key = key ^ np.uint64((int(seed) * 0x9E3779B97F4A7C15) % 2**64)
+            key = key * np.uint64(0xBF58476D1CE4E5B9)
+            key = key ^ (key >> np.uint64(31))
+        h = (key * np.uint64(2654435761)) & np.uint64(2**31 - 1)
     w = low + (high - low) * (h.astype(np.float64) / 2**31)
-    del rng
     return Graph(g.n_vertices, g.src, g.dst, w.astype(np.float32))
 
 

@@ -6,33 +6,43 @@ collective over a 1-D device mesh.
 inner local-closure loop, remote exchange, counter accumulation) runs inside
 ONE ``shard_map`` over ``dist.sharding.partition_mesh`` -- each device owns a
 fixed-shape padded vertex shard (``MeshEdgeLayout``) and the program is pure
-SPMD:
+SPMD.  The per-edge math and every aggregation point route through a
+``graph.program.VertexProgram`` (default ``SsspProgram`` -- BFS semantics on
+unit weights, bit-identical to the pre-algebra program):
 
-  * **local closure**: every device relaxes its own partitions' local edges;
-    iteration count is synchronized with a ``pmax`` of the per-device
-    "anything improved" bit, so the loop structure (and hence the work
-    counters) is bit-identical to the single-device engine.
-  * **remote exchange**: candidate distances over this device's remote
-    out-edges are min-aggregated into static wire slots **before** the
-    collective -- one message per ``(dst_vertex, dst_device)`` block entry,
-    not one per edge (the Spinner/message-combining structure, arXiv
-    1404.3861 / 1503.00626) -- then a single static-shape
-    ``jax.lax.all_to_all`` delivers every ``[n_devices, w_pad]`` buffer, and
-    a scatter-min applies the received minima to the local shard.  Padded
-    slots carry ``inf`` and are no-ops by construction.
+  * **local closure** (monotone programs): every device relaxes its own
+    partitions' local edges under ``program.relax``/``combine``; iteration
+    count is synchronized with a ``pmax`` of the per-device "anything
+    improved" bit, so the loop structure (and hence the work counters) is
+    bit-identical to the single-device engine.  Stationary programs
+    (PageRank) instead take one gather pass per superstep and fold the
+    accumulated messages with ``program.apply`` at the boundary.
+  * **remote exchange**: candidate messages over this device's remote
+    out-edges are ``combine``-aggregated into static wire slots **before**
+    the collective -- one message per ``(dst_vertex, dst_device)`` block
+    entry, not one per edge (the Spinner/message-combining structure, arXiv
+    1404.3861 / 1503.00626; combiner aggregation is algorithm-generic, so
+    min-programs and sum-programs share the machinery) -- then a single
+    static-shape ``jax.lax.all_to_all`` delivers every ``[n_devices, w_pad]``
+    buffer, and a scatter (``.min`` or ``.add`` per ``program.reduce``)
+    applies the received aggregates to the local shard.  Padded slots carry
+    the program's ``identity`` and are no-ops by construction.
   * **counters**: each device accumulates the ``[S, k, P]`` work counters for
     its own partitions only (partitions never span devices), so one ``psum``
     per window reconstructs the exact global integers.  ``wire_msgs`` counts
-    the finite slots actually put on the collective per superstep -- the
+    the non-identity slots actually put on the collective per superstep (for
+    sum programs: slots fed by at least one active edge) -- the
     post-aggregation message volume the bench compares against the raw
     remote-edge count.
 
 The program preserves the engine's windowed contract exactly: same
 ``(dist, frontier, nst0, k) -> (result..., part_active_next, done)``
-signature, same dtypes, and distances/counters bit-identical to the dense
-path (min and integer sums are order-independent).  The carried state is the
-*padded device-major* layout ``[S, n_devices * n_pad]``; ``gather_global``
-maps it back to vertex order.
+signature, state dtype per ``program.dtype``, and state/counters
+bit-identical to the dense path for monotone programs (min and integer sums
+are order-independent; float sums reassociate, so stationary state matches
+only to rounding while its integer counters stay exact).  The carried state
+is the *padded device-major* layout ``[S, n_devices * n_pad]``;
+``MeshEdgeLayout.gather_global`` maps it back to vertex order.
 
 Physical shard placement for the elastic executor lives here too:
 ``place_shard`` moves a partition's state array onto a target device and
@@ -57,7 +67,17 @@ from repro.dist.sharding import (
     traversal_state_sharding,
     traversal_state_spec,
 )
-from repro.graph.partition import contiguous_device_map, mesh_edge_layout
+from repro.graph.partition import (
+    contiguous_device_map,
+    mesh_edge_layout,
+    partitioned_edge_layout,
+)
+from repro.graph.program import (
+    SsspProgram,
+    VertexProgram,
+    resolve_edge_plane,
+    validate_program,
+)
 from repro.graph.structs import MeshEdgeLayout, PartitionedGraph
 from jax.sharding import PartitionSpec as P
 
@@ -96,6 +116,7 @@ class MeshTraversalProgram:
         pg: PartitionedGraph,
         mesh: Mesh,
         device_of_part: np.ndarray | None = None,
+        program: VertexProgram | None = None,
     ):
         d_n = mesh_size(mesh)
         if d_n < 2:
@@ -106,21 +127,24 @@ class MeshTraversalProgram:
         if device_of_part is None:
             device_of_part = contiguous_device_map(pg.n_parts, d_n)
         self.mesh = mesh
+        self.pg = pg
+        self.program = validate_program(program or SsspProgram())
         self.n_parts = pg.n_parts
         self.layout: MeshEdgeLayout = mesh_edge_layout(pg, device_of_part, d_n)
         ml = self.layout
+        lw, rw = self._plane_shards(pg, ml)
         put = lambda a: jax.device_put(
             jnp.asarray(a), per_device_sharding(mesh, np.ndim(a))
         )
         self._consts = (
             put(ml.lsrc),
             put(ml.ldst),
-            put(ml.lw),
+            put(lw),
             put(ml.lpart),
             put(ml.lvalid),
             put(ml.part_of_pos),
             put(ml.rsrc),
-            put(ml.rw),
+            put(rw),
             put(ml.rslot),
             put(ml.rpart),
             put(ml.rvalid),
@@ -129,28 +153,36 @@ class MeshTraversalProgram:
         self._const_specs = tuple(per_device_spec(c.ndim) for c in self._consts)
         self._windows: dict[int, object] = {}  # window depth -> jitted fn
 
+    def _plane_shards(self, pg: PartitionedGraph, ml: MeshEdgeLayout):
+        """Per-device ``(lw, rw)`` edge planes for this program: the layout's
+        own weights for ``plane_key == "graph"``, else the program's ``[E]``
+        plane permuted through the retained layout/shard edge ids."""
+        plane = resolve_edge_plane(pg, self.program)
+        if plane is None:
+            return ml.lw, ml.rw
+        pel = partitioned_edge_layout(pg)
+        plane_l = plane[pel.local_eid]  # dst-sorted local order
+        plane_r = plane[pel.remote_eid]  # dst-sorted remote order
+        lw = np.where(ml.lvalid, plane_l[ml.l_eid], 0.0).astype(np.float32)
+        rw = np.where(ml.rvalid, plane_r[ml.r_eid], 0.0).astype(np.float32)
+        return lw, rw
+
     # -- state layout --------------------------------------------------------
 
-    @property
-    def state_index_of_vertex(self) -> np.ndarray:
-        """[n] position of each global vertex in the sharded state axis."""
-        return self.layout.pos_of_vertex
-
     def init_state(self, sources: np.ndarray) -> tuple[jax.Array, jax.Array]:
-        """Sharded padded ``(dist, frontier)`` for a batch of sources."""
-        s_batch = sources.shape[0]
-        pos = self.layout.pos_of_vertex[np.asarray(sources, dtype=np.int64)]
+        """Sharded padded ``(state, frontier)`` for a batch of sources: the
+        program's global-order init scattered into the device-major layout
+        (padding rows carry the program identity / an empty frontier)."""
+        prog = self.program
+        state_g, fr_g = prog.init(self.pg, np.asarray(sources, dtype=np.int64))
+        s_batch = state_g.shape[0]
         width = self.layout.state_width
-        dist = np.full((s_batch, width), np.inf, dtype=np.float32)
-        dist[np.arange(s_batch), pos] = 0.0
+        state = np.full((s_batch, width), prog.identity, dtype=prog.dtype)
+        state[:, self.layout.pos_of_vertex] = state_g
         frontier = np.zeros((s_batch, width), dtype=bool)
-        frontier[np.arange(s_batch), pos] = True
+        frontier[:, self.layout.pos_of_vertex] = fr_g
         sh = traversal_state_sharding(self.mesh)
-        return jax.device_put(dist, sh), jax.device_put(frontier, sh)
-
-    def gather_global(self, padded: np.ndarray) -> np.ndarray:
-        """Map ``[..., n_devices * n_pad]`` padded state to vertex order."""
-        return np.asarray(padded)[..., self.layout.pos_of_vertex]
+        return jax.device_put(state, sh), jax.device_put(frontier, sh)
 
     # -- the device program --------------------------------------------------
 
@@ -169,7 +201,8 @@ class MeshTraversalProgram:
         n_parts, n_pad, w_pad, d_n = self.n_parts, ml.n_pad, ml.w_pad, ml.n_devices
         body = partial(
             self._body, m_max=m_max, n_parts=n_parts, n_pad=n_pad,
-            w_pad=w_pad, d_n=d_n,
+            w_pad=w_pad, d_n=d_n, prog=self.program,
+            n_global=self.pg.graph.n_vertices,
         )
         state = traversal_state_spec()
         rep = P()
@@ -188,6 +221,7 @@ class MeshTraversalProgram:
         lsrc, ldst, lw, lpart, lvalid, part_of_pos,
         rsrc, rw, rslot, rpart, rvalid, recv_idx,
         *, m_max: int, n_parts: int, n_pad: int, w_pad: int, d_n: int,
+        prog: VertexProgram, n_global: int,
     ):
         # per-device blocks arrive with a leading length-1 device axis
         lsrc, ldst, lw = lsrc[0], ldst[0], lw[0]
@@ -195,15 +229,24 @@ class MeshTraversalProgram:
         rsrc, rw, rslot = rsrc[0], rw[0], rslot[0]
         rpart, rvalid, recv_idx = rpart[0], rvalid[0], recv_idx[0]
         s_batch, p = dist.shape[0], n_parts
+        ident = prog.identity
+        seg_red = (
+            jax.ops.segment_min if prog.reduce == "min" else jax.ops.segment_sum
+        )
 
-        seg_min_l = jax.vmap(
-            lambda c: jax.ops.segment_min(
+        seg_red_l = jax.vmap(
+            lambda c: seg_red(
                 c, ldst, num_segments=n_pad, indices_are_sorted=True
             )
         )
-        seg_min_wire = jax.vmap(
-            lambda c: jax.ops.segment_min(
+        seg_red_wire = jax.vmap(
+            lambda c: seg_red(
                 c, rslot, num_segments=d_n * w_pad, indices_are_sorted=True
+            )
+        )
+        seg_any_wire = jax.vmap(
+            lambda v: jax.ops.segment_max(
+                v, rslot, num_segments=d_n * w_pad, indices_are_sorted=True
             )
         )
         seg_sum_lp = jax.vmap(
@@ -221,7 +264,62 @@ class MeshTraversalProgram:
 
         recv_flat = recv_idx.reshape(-1)  # [D * w_pad] local dst rows
 
-        def superstep_body(carry):
+        def exchange(src_vals, active_re):
+            """Wire aggregation -> one all-to-all -> (recv aggregates [S,
+            D*w_pad], wire count [S]).  ``combine``-aggregates per
+            destination slot BEFORE the collective for any program."""
+            cand = jnp.where(active_re, prog.relax(src_vals, rw), ident)
+            send = seg_red_wire(cand)
+            if prog.reduce == "min":
+                # a slot is on the wire iff some active edge fed it, which
+                # for min-programs is exactly "the aggregate is not identity"
+                wire_s = (send != ident).sum(axis=1).astype(jnp.int32)
+            else:
+                # a sum can legitimately hit the identity; count fed slots
+                wire_s = (
+                    (seg_any_wire(active_re.astype(jnp.int32)) > 0)
+                    .sum(axis=1)
+                    .astype(jnp.int32)
+                )
+            recv = jax.lax.all_to_all(
+                send.reshape(s_batch, d_n, w_pad),
+                PARTS, split_axis=1, concat_axis=1, tiled=True,
+            )
+            return recv.reshape(s_batch, -1), wire_s
+
+        def stationary_superstep(carry):
+            # one gather pass (local + wire), program.apply at the boundary
+            s, d, fr, we, wv, ms, it, wire, nst = carry
+            nst = nst + g_any(fr.any(axis=1)).astype(jnp.int32)
+
+            active_le = fr[:, lsrc] & lvalid
+            cand = jnp.where(active_le, prog.relax(d[:, lsrc], lw), ident)
+            acc = seg_red_l(cand)
+            we_s = seg_sum_lp(active_le.astype(jnp.int32))
+            wv_s = seg_sum_vp(fr.astype(jnp.int32))
+            it_s = g_any(fr.any(axis=1)).astype(jnp.int32)
+
+            active_re = fr[:, rsrc] & rvalid
+            recv, wire_s = exchange(d[:, rsrc], active_re)
+            if prog.reduce == "min":
+                acc = acc.at[:, recv_flat].min(recv)
+            else:
+                acc = acc.at[:, recv_flat].add(recv)
+            ms_s = seg_sum_rp(active_re.astype(jnp.int32))
+
+            new_d = prog.apply(d, acc, n_global)
+            next_fr = fr & prog.keep_running(nst)[:, None]
+
+            upd = lambda buf, row: jax.lax.dynamic_update_index_in_dim(
+                buf, row, s, axis=1
+            )
+            return (
+                s + 1, new_d, next_fr,
+                upd(we, we_s), upd(wv, wv_s), upd(ms, ms_s),
+                upd(it, it_s), upd(wire, wire_s), nst,
+            )
+
+        def monotone_superstep(carry):
             s, d, fr, we, wv, ms, it, wire, nst = carry
             nst = nst + g_any(fr.any(axis=1)).astype(jnp.int32)
 
@@ -232,9 +330,11 @@ class MeshTraversalProgram:
             def ibody(c):
                 d_i, f_i, we_s, wv_s, it_s, touched = c
                 active_e = f_i[:, lsrc] & lvalid
-                cand = jnp.where(active_e, d_i[:, lsrc] + lw, jnp.inf)
-                new_d = jnp.minimum(d_i, seg_min_l(cand))
-                improved = new_d < d_i
+                cand = jnp.where(
+                    active_e, prog.relax(d_i[:, lsrc], lw), ident
+                )
+                new_d = prog.combine(d_i, seg_red_l(cand))
+                improved = prog.is_active(new_d, d_i)
                 we_s = we_s + seg_sum_lp(active_e.astype(jnp.int32))
                 wv_s = wv_s + seg_sum_vp(f_i.astype(jnp.int32))
                 it_s = it_s + g_any(f_i.any(axis=1)).astype(jnp.int32)
@@ -248,14 +348,9 @@ class MeshTraversalProgram:
 
             # -- exchange: aggregate per destination, then ONE all-to-all -----
             active_re = touched[:, rsrc] & rvalid
-            cand = jnp.where(active_re, d2[:, rsrc] + rw, jnp.inf)
-            send = seg_min_wire(cand).reshape(s_batch, d_n, w_pad)
-            wire_s = jnp.isfinite(send).sum(axis=(1, 2)).astype(jnp.int32)
-            recv = jax.lax.all_to_all(
-                send, PARTS, split_axis=1, concat_axis=1, tiled=True
-            )
-            new_d = d2.at[:, recv_flat].min(recv.reshape(s_batch, -1))
-            next_fr = new_d < d2
+            recv, wire_s = exchange(d2[:, rsrc], active_re)
+            new_d = d2.at[:, recv_flat].min(recv)
+            next_fr = prog.is_active(new_d, d2)
             ms_s = seg_sum_rp(active_re.astype(jnp.int32))
 
             upd = lambda buf, row: jax.lax.dynamic_update_index_in_dim(
@@ -266,6 +361,10 @@ class MeshTraversalProgram:
                 upd(we, we_s), upd(wv, wv_s), upd(ms, ms_s),
                 upd(it, it_s), upd(wire, wire_s), nst,
             )
+
+        superstep_body = (
+            stationary_superstep if prog.stationary else monotone_superstep
+        )
 
         def superstep_cond(carry):
             s, _, fr, *_ = carry

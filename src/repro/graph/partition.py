@@ -33,12 +33,20 @@ from repro.graph.structs import (
 
 @dataclasses.dataclass(frozen=True)
 class PartitionedEdgeLayout:
-    """Static traversal layout: dst-sorted local + remote edge sets."""
+    """Static traversal layout: dst-sorted local + remote edge sets.
+
+    ``local_eid``/``remote_eid`` map each layout row back to the original
+    edge-list index, so a per-program ``[E]`` edge-weight plane
+    (``graph.program.VertexProgram.edge_plane``) permutes into layout order
+    with one gather instead of a rebuild.
+    """
 
     local: CsrEdgeLayout  # within-partition edges, dst ascending
     remote: CsrEdgeLayout  # cross-partition edges, dst ascending
     local_part: np.ndarray  # [E_local] int32 partition of each local edge
     remote_src_part: np.ndarray  # [E_remote] int32 src partition per remote edge
+    local_eid: np.ndarray  # [E_local] int64 original edge index per local row
+    remote_eid: np.ndarray  # [E_remote] int64 original edge index per remote row
 
 
 def partitioned_edge_layout(pg: PartitionedGraph) -> PartitionedEdgeLayout:
@@ -57,6 +65,8 @@ def partitioned_edge_layout(pg: PartitionedGraph) -> PartitionedEdgeLayout:
         remote=rem,
         local_part=part[loc.src],
         remote_src_part=part[rem.src],
+        local_eid=np.flatnonzero(local)[loc.perm],
+        remote_eid=np.flatnonzero(~local)[rem.perm],
     )
     pg.__dict__["_edge_layout"] = layout
     return layout
@@ -139,6 +149,7 @@ def mesh_edge_layout(
     lw = np.zeros((d_n, e_local_pad), dtype=np.float32)
     lpart = np.zeros((d_n, e_local_pad), dtype=np.int32)
     lvalid = np.zeros((d_n, e_local_pad), dtype=bool)
+    l_eid = np.zeros((d_n, e_local_pad), dtype=np.int64)
     for d in range(d_n):
         sel = np.flatnonzero(ldev == d)  # preserves global dst-ascending order
         m = sel.size
@@ -147,6 +158,7 @@ def mesh_edge_layout(
         lw[d, :m] = loc.weights[sel]
         lpart[d, :m] = layout.local_part[sel]
         lvalid[d, :m] = True
+        l_eid[d, :m] = sel
         # padding dst rows keep the allocation value n_pad - 1, >= any real
         # local row, so the ascending (indices_are_sorted) contract holds
 
@@ -181,6 +193,7 @@ def mesh_edge_layout(
     rslot = np.full((d_n, e_remote_pad), d_n * w_pad - 1, dtype=np.int32)
     rpart = np.zeros((d_n, e_remote_pad), dtype=np.int32)
     rvalid = np.zeros((d_n, e_remote_pad), dtype=bool)
+    r_eid = np.zeros((d_n, e_remote_pad), dtype=np.int64)
     recv_idx = np.zeros((d_n, d_n, w_pad), dtype=np.int32)
     part32 = pg.part_of_vertex.astype(np.int32)
     for d in range(d_n):
@@ -197,6 +210,7 @@ def mesh_edge_layout(
             rslot[d, :m] = (u_dd[inv] * w_pad + slot_of_uniq[inv]).astype(np.int32)
             rpart[d, :m] = part32[rem.src[sel]]
             rvalid[d, :m] = True
+            r_eid[d, :m] = sel
             # receive side: block (d -> dd) slot s lands on the dst vertex's
             # device-local row on device dd
             recv_idx[u_dd, d, slot_of_uniq] = (
@@ -219,6 +233,7 @@ def mesh_edge_layout(
         lw=lw,
         lpart=lpart,
         lvalid=lvalid,
+        l_eid=l_eid,
         e_remote_pad=e_remote_pad,
         w_pad=w_pad,
         rsrc=rsrc,
@@ -226,6 +241,7 @@ def mesh_edge_layout(
         rslot=rslot,
         rpart=rpart,
         rvalid=rvalid,
+        r_eid=r_eid,
         recv_idx=recv_idx,
         wire_slots=wire_slots,
         remote_block_edges=remote_block_edges,

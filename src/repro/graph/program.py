@@ -1,0 +1,337 @@
+"""VertexProgram algebra: one engine API for BFS, SSSP, WCC, and PageRank.
+
+The paper's elastic placement strategies are about *modeling algorithm
+behavior* -- non-stationary traversals whose active partition set sweeps and
+dies out versus stationary algorithms that keep every partition hot.  This
+module abstracts the per-edge/per-vertex math of the traversal engine into a
+semiring-style ``VertexProgram`` so the same device-resident window programs
+(``graph.traversal`` dense, ``graph.mesh_exchange`` sharded) execute any
+member of the algebra, and the elastic planner/replanner observe genuinely
+different activity profiles from one engine.
+
+A program is defined by:
+
+  * ``relax(msg, w)``   -- the per-edge transform applied to the source
+    vertex's state value along an edge carrying plane value ``w``
+    (BFS/SSSP: ``msg + w``; WCC: ``msg``; PageRank: ``msg * w``),
+  * ``combine(a, b)`` with ``identity`` -- the commutative, associative
+    reduction used for *every* aggregation point: the segment reductions of
+    the dense engine, the per-destination **wire aggregation before the mesh
+    all-to-all** (the Spinner/Pregel message-combiner, algorithm-generic per
+    Yan et al.'s message-reduction work), and the receive-side scatter.
+    ``reduce`` names it ("min" or "sum") so both engines can route through
+    ``jax.ops.segment_min``/``segment_sum`` and ``.at[].min()``/``.add()``
+    without tracing host lambdas into scatter primitives,
+  * ``is_active(new, old)`` -- the frontier predicate of monotone programs
+    (a vertex whose state strictly improved joins the next frontier),
+  * ``apply(state, acc, n)`` + ``keep_running(n_steps)`` -- the stationary
+    alternative: one gather pass per superstep, a per-vertex update applied
+    at the superstep boundary, and a fixed iteration budget standing in for
+    the frontier (``converged`` is then "budget exhausted"),
+  * ``dtype`` / ``init`` -- the state spec: element type, identity padding
+    value, and the initial ``(state, frontier)`` in global vertex order,
+  * ``edge_plane`` -- an optional per-edge value plane replacing the graph's
+    weights (BFS forces unit hops; PageRank uses ``1/out_degree[src]``),
+    threaded through the static layouts via the retained sort permutations
+    (``partition.PartitionedEdgeLayout.local_eid`` / ``MeshEdgeLayout.l_eid``).
+
+Two execution shapes share all the engine machinery (windowing, ``[S, k, P]``
+counters, wire slots, resharding):
+
+  * **monotone** (``stationary=False``): the classic traversal shape -- the
+    inner local-closure loop runs ``combine``-relaxations over local edges to
+    fixpoint, the superstep boundary exchanges remote messages, and improved
+    vertices form the next frontier.  Requires ``reduce == "min"`` (the
+    closure loop needs an idempotent, order-free combine).
+  * **stationary** (``stationary=True``): one local gather pass per
+    superstep, remote contributions summed through the same wire machinery,
+    ``apply`` folds the accumulated messages into the state once per
+    superstep, and every vertex stays active until ``superstep_budget``
+    supersteps have run -- the contrast case for elastic planning (constant
+    per-partition tau, nothing for a decay model to exploit).
+
+Built-ins: ``BfsProgram`` (hop counts, unit plane), ``SsspProgram`` (weighted
+edges -- the engine default, bit-identical to the pre-algebra engine),
+``WccProgram`` (min label propagation, int32 labels), ``PageRankProgram``
+(stationary sum-times with damping and a fixed iteration budget).
+
+Writing a new program: subclass ``VertexProgram``, pick ``reduce``, implement
+``relax``/``init`` (and ``apply``/``superstep_budget`` if stationary), and
+hand it to ``get_engine(pg, program=...)``, ``ElasticBSPExecutor`` or
+``bsp.run_program`` -- dense and mesh execution, windowing, counters, and
+elastic placement come for free.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.graph.structs import PartitionedGraph
+
+try:  # jnp is only needed on the traced paths; keep host-side use importable
+    import jax.numpy as jnp
+except Exception:  # pragma: no cover - jax is baked into the image
+    jnp = None
+
+
+class VertexProgram:
+    """Base class of the vertex-program algebra (see module docstring).
+
+    Class attributes define the static spec; methods named in the table are
+    traced into the engine's jitted window programs.
+
+      name              program id (also the engine-cache key head)
+      reduce            "min" | "sum": the combine op both engines route
+                        segment reductions and wire aggregation through
+      stationary        False: monotone closure shape; True: one-pass shape
+      plane_key         cache key of the edge-weight plane this program reads
+      superstep_budget  stationary only: exact supersteps to run
+    """
+
+    name = "vertex-program"
+    reduce = "min"
+    stationary = False
+    plane_key = "graph"
+    superstep_budget: int | None = None
+
+    # -- state spec ----------------------------------------------------------
+
+    @property
+    def dtype(self):
+        """numpy dtype of the per-vertex state."""
+        return np.float32
+
+    @property
+    def identity(self):
+        """Identity element of ``combine`` (also the padding value)."""
+        if self.reduce == "min":
+            if np.issubdtype(self.dtype, np.floating):
+                return self.dtype(np.inf)
+            return self.dtype(np.iinfo(self.dtype).max)
+        return self.dtype(0)
+
+    @property
+    def key(self) -> tuple:
+        """Hashable engine-cache key (override for parameterized programs)."""
+        return (self.name,)
+
+    # -- the algebra (traced) ------------------------------------------------
+
+    def relax(self, msg, w):
+        """Per-edge transform of the source state value ``msg`` along an edge
+        with plane value ``w``.  Must map ``identity`` to ``identity``."""
+        raise NotImplementedError
+
+    def combine(self, a, b):
+        """Commutative, associative reduction matching ``reduce``."""
+        return jnp.minimum(a, b) if self.reduce == "min" else a + b
+
+    def is_active(self, new, old):
+        """Monotone frontier predicate: which vertices changed enough to run
+        next superstep.  Min-programs strictly decrease, so ``new < old``."""
+        return new < old
+
+    def apply(self, state, acc, n_vertices: int):
+        """Stationary per-superstep update: fold the ``combine``-accumulated
+        incoming messages ``acc`` into the state (once per superstep)."""
+        raise NotImplementedError
+
+    def keep_running(self, n_steps):
+        """Stationary frontier: ``[S]`` bool, True while under budget."""
+        return n_steps < self.superstep_budget
+
+    # -- host-side hooks -----------------------------------------------------
+
+    def converged(self, frontier_any: bool) -> bool:
+        """Host-side convergence test for ``TraversalEngine.run``: by
+        construction both shapes drain the frontier (monotone: no vertex
+        improved; stationary: budget exhausted empties it)."""
+        return not frontier_any
+
+    def init(
+        self, pg: PartitionedGraph, sources: np.ndarray
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Initial ``(state, frontier)``, both ``[S, n]`` in global vertex
+        order (the mesh engine scatters them into its padded layout)."""
+        raise NotImplementedError
+
+    def initial_active_parts(
+        self, pg: PartitionedGraph, sources: np.ndarray
+    ) -> np.ndarray:
+        """[P] bool: partitions active at superstep 0 (the executor's first
+        placement decision, taken without a device round-trip)."""
+        _, frontier = self.init(pg, np.atleast_1d(np.asarray(sources)))
+        active = np.zeros(pg.n_parts, dtype=bool)
+        parts = pg.part_of_vertex[np.flatnonzero(frontier.any(axis=0))]
+        active[np.unique(parts)] = True
+        return active
+
+    def edge_plane(self, pg: PartitionedGraph) -> np.ndarray | None:
+        """Per-edge ``[E]`` float32 value plane in *original* edge order, or
+        None to read the graph's weights (unit by default)."""
+        return None
+
+
+def resolve_edge_plane(
+    pg: PartitionedGraph, program: VertexProgram
+) -> np.ndarray | None:
+    """The program's validated ``[E]`` float32 plane in original edge order,
+    or None when ``plane_key == "graph"`` (read the layout's own weights).
+    The single validation point for both the dense and mesh engines."""
+    if program.plane_key == "graph":
+        return None
+    plane = np.asarray(program.edge_plane(pg), dtype=np.float32)
+    if plane.shape != (pg.graph.n_edges,):
+        raise ValueError(
+            f"{program.name}: edge_plane must be [{pg.graph.n_edges}], "
+            f"got {plane.shape}"
+        )
+    return plane
+
+
+def validate_program(program: VertexProgram) -> VertexProgram:
+    """Engine-entry validation of a program's static spec."""
+    if program.reduce not in ("min", "sum"):
+        raise ValueError(f"{program.name}: reduce must be 'min' or 'sum'")
+    if not program.stationary and program.reduce != "min":
+        raise NotImplementedError(
+            f"{program.name}: the monotone local-closure loop needs an "
+            "idempotent combine (reduce='min'); sum-style programs must set "
+            "stationary=True"
+        )
+    if program.stationary:
+        budget = program.superstep_budget
+        if budget is None or int(budget) < 1:
+            raise ValueError(
+                f"{program.name}: stationary programs need a positive "
+                f"superstep_budget, got {budget!r}"
+            )
+    return program
+
+
+def _source_init(
+    pg: PartitionedGraph, sources: np.ndarray, identity, dtype
+) -> tuple[np.ndarray, np.ndarray]:
+    """(state=identity except 0 at each row's source, one-hot frontier)."""
+    sources = np.atleast_1d(np.asarray(sources, dtype=np.int64))
+    s_batch = sources.shape[0]
+    state = np.full((s_batch, pg.graph.n_vertices), identity, dtype=dtype)
+    state[np.arange(s_batch), sources] = 0
+    frontier = np.zeros((s_batch, pg.graph.n_vertices), dtype=bool)
+    frontier[np.arange(s_batch), sources] = True
+    return state, frontier
+
+
+class SsspProgram(VertexProgram):
+    """Weighted single-source shortest paths (min-plus semiring).
+
+    The engine default: on a unit-weight graph this *is* BFS, and the traced
+    ops are exactly the pre-algebra engine's (``+``/``segment_min``/
+    ``jnp.minimum``/``<``), keeping PR 3 behavior bit-identical.
+    """
+
+    name = "sssp"
+    reduce = "min"
+    plane_key = "graph"
+
+    def relax(self, msg, w):
+        return msg + w
+
+    def init(self, pg, sources):
+        return _source_init(pg, sources, np.inf, self.dtype)
+
+
+class BfsProgram(SsspProgram):
+    """Unweighted BFS: hop counts regardless of the graph's weight plane."""
+
+    name = "bfs"
+    plane_key = "unit"
+
+    def edge_plane(self, pg):
+        return np.ones(pg.graph.n_edges, dtype=np.float32)
+
+
+class WccProgram(VertexProgram):
+    """Weakly-connected components by min label propagation.
+
+    Every vertex starts active with its own id as the label; labels flow
+    along (directed) edges under min.  Graphs from ``graph.generators`` are
+    symmetrized, so the fixpoint labels each vertex with the smallest vertex
+    id in its weakly-connected component.  Labels are int32 state -- the
+    dtype/identity spec is what makes non-float programs possible.
+    """
+
+    name = "wcc"
+    reduce = "min"
+    plane_key = "graph"  # plane values are ignored by relax
+
+    @property
+    def dtype(self):
+        return np.int32
+
+    def relax(self, msg, w):
+        del w
+        return msg
+
+    def init(self, pg, sources):
+        sources = np.atleast_1d(np.asarray(sources))
+        s_batch = sources.shape[0]
+        n = pg.graph.n_vertices
+        state = np.tile(np.arange(n, dtype=self.dtype), (s_batch, 1))
+        frontier = np.ones((s_batch, n), dtype=bool)
+        return state, frontier
+
+
+class PageRankProgram(VertexProgram):
+    """Stationary PageRank: sum-times semiring, fixed iteration budget.
+
+    Per superstep every vertex recomputes
+    ``(1 - damping)/n + damping * sum_{u -> v} rank[u] / out_degree[u]``;
+    the per-edge contribution rides the ``1/out_degree[src]`` edge plane so
+    ``relax`` is a multiply and the wire aggregation a sum.  All partitions
+    stay active for exactly ``num_iters`` supersteps -- the stationary
+    workload whose flat tau profile is the elastic planner's contrast case.
+    """
+
+    name = "pagerank"
+    reduce = "sum"
+    stationary = True
+    plane_key = "invdeg"
+
+    def __init__(self, damping: float = 0.85, num_iters: int = 20):
+        if not 0.0 < damping < 1.0:
+            raise ValueError(f"damping must lie in (0, 1), got {damping}")
+        self.damping = float(damping)
+        self.superstep_budget = int(num_iters)
+
+    @property
+    def key(self):
+        return (self.name, self.damping, self.superstep_budget)
+
+    def relax(self, msg, w):
+        return msg * w
+
+    def apply(self, state, acc, n_vertices: int):
+        return (1.0 - self.damping) / n_vertices + self.damping * acc
+
+    def init(self, pg, sources):
+        sources = np.atleast_1d(np.asarray(sources))
+        s_batch = sources.shape[0]
+        n = pg.graph.n_vertices
+        state = np.full((s_batch, n), 1.0 / n, dtype=self.dtype)
+        frontier = np.ones((s_batch, n), dtype=bool)
+        return state, frontier
+
+    def edge_plane(self, pg):
+        deg = np.maximum(pg.graph.out_degree, 1).astype(np.float32)
+        return (1.0 / deg)[pg.graph.src]
+
+
+#: registry for CLI / bench sweeps (constructors, not instances: PageRank is
+#: parameterized and instances carry the engine-cache key)
+BUILTIN_PROGRAMS = {
+    "bfs": BfsProgram,
+    "sssp": SsspProgram,
+    "wcc": WccProgram,
+    "pagerank": PageRankProgram,
+}

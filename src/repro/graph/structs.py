@@ -30,15 +30,18 @@ class CsrEdgeLayout:
     per-tile destination ranges *static*, so the kernel grid can skip
     (row_block, edge_block) tiles that provably hold no in-range edge.
 
-    Contract: ``dst`` is ascending; ``src``/``weights`` are permuted to match
-    (the permutation itself is not retained -- no consumer needs to map back
-    to the original edge order).
+    Contract: ``dst`` is ascending; ``src``/``weights`` are permuted to match.
+    ``perm`` retains the applied permutation (indices into the edge arrays the
+    layout was built from) so per-program *edge-weight planes* -- alternative
+    ``[E]`` value arrays such as PageRank's ``1/out_degree[src]`` -- can be
+    permuted into layout order without re-sorting (``graph.program``).
     """
 
     n_vertices: int
     src: np.ndarray  # [E] int32, reordered by dst
     dst: np.ndarray  # [E] int32, ascending
     weights: np.ndarray  # [E] float32, reordered by dst
+    perm: np.ndarray | None = None  # [E] int64 indices into the input order
 
     @property
     def n_edges(self) -> int:
@@ -106,6 +109,15 @@ class MeshEdgeLayout:
     ``(PartitionedGraph, device_of_part)`` by
     ``partition.mesh_edge_layout``; the shard_map program in
     ``graph.mesh_exchange`` consumes it verbatim.
+
+    ``l_eid``/``r_eid`` map every per-device edge slot back to its row in the
+    partition layout's dst-sorted local/remote edge sets, so a per-program
+    edge-weight plane (``graph.program.VertexProgram.edge_plane``) can be
+    scattered into the padded per-device shape without rebuilding the layout.
+
+    The layout is also the single owner of the *state indexing* helpers
+    (``state_index_of_vertex`` / ``gather_global``) shared by the dense and
+    mesh engines.
     """
 
     n_devices: int
@@ -125,6 +137,7 @@ class MeshEdgeLayout:
     lw: np.ndarray  # [D, e_local_pad] float32
     lpart: np.ndarray  # [D, e_local_pad] int32 partition of each edge
     lvalid: np.ndarray  # [D, e_local_pad] bool
+    l_eid: np.ndarray  # [D, e_local_pad] int64 row in the dst-sorted local set
     # -- per-device remote out-edges, (dst_device, dst_vertex)-sorted --------
     e_remote_pad: int
     w_pad: int  # wire slots per (src_device, dst_device) block
@@ -133,6 +146,7 @@ class MeshEdgeLayout:
     rslot: np.ndarray  # [D, e_remote_pad] int32 in [0, D*w_pad), ascending
     rpart: np.ndarray  # [D, e_remote_pad] int32 src partition of each edge
     rvalid: np.ndarray  # [D, e_remote_pad] bool
+    r_eid: np.ndarray  # [D, e_remote_pad] int64 row in the dst-sorted remote set
     # -- receive side: wire slot -> device-local dst row ---------------------
     recv_idx: np.ndarray  # [D_recv, D_send, w_pad] int32 (0 on padding slots)
     # -- static exchange metadata (bench / diagnostics) ----------------------
@@ -143,6 +157,20 @@ class MeshEdgeLayout:
     def state_width(self) -> int:
         """Width of the sharded state axis: ``n_devices * n_pad``."""
         return self.n_devices * self.n_pad
+
+    # -- shared state indexing (one implementation for dense + mesh) ---------
+
+    @property
+    def state_index_of_vertex(self) -> np.ndarray:
+        """[n] position of each global vertex in the padded sharded state
+        axis -- the one source of truth for addressing carried traversal
+        state (the engine's dense path uses the identity instead)."""
+        return self.pos_of_vertex
+
+    def gather_global(self, state_rows: np.ndarray) -> np.ndarray:
+        """Map padded device-major state ``[..., D * n_pad]`` back to global
+        vertex order ``[..., n]``."""
+        return np.asarray(state_rows)[..., self.pos_of_vertex]
 
 
 def dst_sorted_layout(
@@ -163,6 +191,7 @@ def dst_sorted_layout(
         src=src[order].astype(np.int32),
         dst=dst[order].astype(np.int32),
         weights=w[order],
+        perm=order.astype(np.int64),
     )
 
 

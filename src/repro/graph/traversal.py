@@ -1,13 +1,23 @@
-"""Pure-JAX subgraph-centric BFS/SSSP traversal engines.
+"""Pure-JAX subgraph-centric BSP engines, parameterized by a VertexProgram.
 
 Semantics follow GoFFish (paper s3.1): within a BSP superstep, every *active*
 subgraph runs its local traversal to closure over **local** edges (a
 ``jax.lax.while_loop`` of frontier-masked edge relaxations); at the superstep
-boundary, remote edges deliver distance messages, and vertices improved by a
-remote message form the next superstep's frontier (their subgraphs become
-active).  The engine also accumulates the per-partition *work counters*
-(vertices processed, edges examined) that instantiate the paper's time
-function A.
+boundary, remote edges deliver messages, and vertices improved by a remote
+message form the next superstep's frontier (their subgraphs become active).
+The engine also accumulates the per-partition *work counters* (vertices
+processed, edges examined) that instantiate the paper's time function A.
+
+The per-edge/per-vertex math is no longer hard-coded BFS: both window
+programs route every relaxation, segment reduction, frontier predicate, and
+state-init through a ``graph.program.VertexProgram`` (default:
+``SsspProgram``, whose traced ops are exactly the old engine's -- BFS on
+unit-weight graphs stays bit-identical).  Monotone programs (BFS, weighted
+SSSP, WCC) keep the local-closure-then-exchange shape; stationary programs
+(PageRank) run one local gather pass per superstep, fold the accumulated
+messages with ``program.apply`` at the boundary, and drain the frontier when
+the iteration budget is exhausted -- same windowing, counters, and elastic
+seams either way.
 
 Execution modes sharing the same math:
 
@@ -80,6 +90,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.graph.partition import partitioned_edge_layout
+from repro.graph.program import (
+    SsspProgram,
+    VertexProgram,
+    resolve_edge_plane,
+    validate_program,
+)
 from repro.graph.structs import PartitionedGraph
 
 
@@ -124,6 +140,28 @@ def _device_arrays(pg: PartitionedGraph) -> _DeviceArrays:
         )
         pg.__dict__["_traversal_device_arrays"] = cached
     return cached
+
+
+def plane_arrays(pg: PartitionedGraph, program: VertexProgram):
+    """Per-program ``(local, remote)`` edge-plane device arrays in the static
+    layout's edge order, cached on the graph by ``program.plane_key``.
+
+    ``plane_key == "graph"`` reuses the layout's own weight arrays; anything
+    else asks the program for an ``[E]`` plane in original edge order and
+    permutes it through the layout's retained sort permutation.
+    """
+    if program.plane_key == "graph":
+        dev = _device_arrays(pg)
+        return dev.lw, dev.rw
+    cache = pg.__dict__.setdefault("_plane_device_arrays", {})
+    if program.plane_key not in cache:
+        plane = resolve_edge_plane(pg, program)  # O(E); only on cache miss
+        layout = partitioned_edge_layout(pg)
+        cache[program.plane_key] = (
+            jnp.asarray(plane[layout.local_eid]),
+            jnp.asarray(plane[layout.remote_eid]),
+        )
+    return cache[program.plane_key]
 
 
 def make_superstep_fn(pg: PartitionedGraph) -> Callable[[jax.Array, jax.Array], SuperstepResult]:
@@ -248,12 +286,14 @@ class TraversalEngine:
         self,
         pg: PartitionedGraph,
         *,
+        program: VertexProgram | None = None,
         m_max: int = 512,
         collect_subgraphs: bool = False,
         mesh=None,
         device_of_part: np.ndarray | None = None,
     ):
         self.pg = pg
+        self.program = validate_program(program or SsspProgram())
         self.m_max = int(m_max)
         self.collect_subgraphs = bool(collect_subgraphs)
         self.n = pg.graph.n_vertices
@@ -270,14 +310,18 @@ class TraversalEngine:
             from repro.graph.mesh_exchange import MeshTraversalProgram
 
             self._mesh_prog = MeshTraversalProgram(
-                pg, mesh, device_of_part=device_of_part
+                pg, mesh, device_of_part=device_of_part,
+                program=self.program,
             )
         dev = _device_arrays(pg)  # shared across engines on this graph
-        self._lsrc, self._ldst, self._lw, self._lpart = (
-            dev.lsrc, dev.ldst, dev.lw, dev.lpart,
-        )
-        self._rsrc, self._rdst, self._rw, self._rpart = (
-            dev.rsrc, dev.rdst, dev.rw, dev.rpart,
+        self._lsrc, self._ldst, self._lpart = dev.lsrc, dev.ldst, dev.lpart
+        self._rsrc, self._rdst, self._rpart = dev.rsrc, dev.rdst, dev.rpart
+        # mesh launches never trace the dense window, and the mesh program
+        # shards its own plane -- don't upload dense plane arrays it won't use
+        self._lw, self._rw = (
+            (None, None)
+            if self._mesh_prog is not None
+            else plane_arrays(pg, self.program)
         )
         self._vpart = dev.vpart
         self._sg = None
@@ -300,17 +344,20 @@ class TraversalEngine:
 
         The elastic executor uses this to address partition shards inside
         ``WindowState.dist`` without knowing whether the engine is dense
-        (identity) or mesh-sharded (padded device-major positions).
+        (identity) or mesh-sharded (padded device-major positions).  The
+        padded mapping itself lives in ONE place --
+        ``MeshEdgeLayout.state_index_of_vertex`` -- shared by both engines.
         """
         if self._mesh_prog is not None:
-            return self._mesh_prog.state_index_of_vertex
+            return self._mesh_prog.layout.state_index_of_vertex
         return np.arange(self.n, dtype=np.int64)
 
     def gather_global(self, state_rows: np.ndarray) -> np.ndarray:
         """Map host-side carried state ``[..., state_width]`` to global
-        vertex order ``[..., n]`` (identity on the dense path)."""
+        vertex order ``[..., n]`` (identity on the dense path; the padded
+        gather is ``MeshEdgeLayout.gather_global``)."""
         if self._mesh_prog is not None:
-            return self._mesh_prog.gather_global(state_rows)
+            return self._mesh_prog.layout.gather_global(state_rows)
         return np.asarray(state_rows)
 
     def _launch(self, dist, frontier, nst0, k: int):
@@ -327,14 +374,19 @@ class TraversalEngine:
     ):
         s_batch = dist.shape[0]
         n, p = self.n, self.n_parts
+        prog = self.program
+        ident = prog.identity
+        seg_red = (
+            jax.ops.segment_min if prog.reduce == "min" else jax.ops.segment_sum
+        )
 
-        seg_min_l = jax.vmap(
-            lambda c: jax.ops.segment_min(
+        seg_red_l = jax.vmap(
+            lambda c: seg_red(
                 c, self._ldst, num_segments=n, indices_are_sorted=True
             )
         )
-        seg_min_r = jax.vmap(
-            lambda c: jax.ops.segment_min(
+        seg_red_r = jax.vmap(
+            lambda c: seg_red(
                 c, self._rdst, num_segments=n, indices_are_sorted=True
             )
         )
@@ -356,7 +408,42 @@ class TraversalEngine:
                 > 0
             )
 
-        def superstep_body(carry):
+        def stationary_body(carry):
+            # one gather pass over local + remote edges, program.apply at the
+            # boundary, frontier drained by the iteration budget
+            s, d, fr, we, wv, ms, it, sg, nst = carry
+            if self.collect_subgraphs:
+                sg = jax.lax.dynamic_update_index_in_dim(
+                    sg, seg_any_sg(fr), s, axis=1
+                )
+            nst = nst + fr.any(axis=1).astype(jnp.int32)
+
+            active_le = fr[:, self._lsrc]
+            cand = jnp.where(
+                active_le, prog.relax(d[:, self._lsrc], self._lw), ident
+            )
+            acc = seg_red_l(cand)
+            we_s = seg_sum_lp(active_le.astype(jnp.int32))
+            wv_s = seg_sum_vp(fr.astype(jnp.int32))
+            it_s = fr.any(axis=1).astype(jnp.int32)  # one pass per superstep
+
+            active_re = fr[:, self._rsrc]
+            cand_r = jnp.where(
+                active_re, prog.relax(d[:, self._rsrc], self._rw), ident
+            )
+            acc = prog.combine(acc, seg_red_r(cand_r))
+            ms_s = seg_sum_rp(active_re.astype(jnp.int32))
+
+            new_d = prog.apply(d, acc, n)
+            next_fr = fr & prog.keep_running(nst)[:, None]
+
+            we = jax.lax.dynamic_update_index_in_dim(we, we_s, s, axis=1)
+            wv = jax.lax.dynamic_update_index_in_dim(wv, wv_s, s, axis=1)
+            ms = jax.lax.dynamic_update_index_in_dim(ms, ms_s, s, axis=1)
+            it = jax.lax.dynamic_update_index_in_dim(it, it_s, s, axis=1)
+            return s + 1, new_d, next_fr, we, wv, ms, it, sg, nst
+
+        def monotone_body(carry):
             s, d, fr, we, wv, ms, it, sg, nst = carry
 
             if self.collect_subgraphs:
@@ -372,9 +459,11 @@ class TraversalEngine:
             def ibody(c):
                 d_i, f_i, we_s, wv_s, it_s, touched = c
                 active_e = f_i[:, self._lsrc]
-                cand = jnp.where(active_e, d_i[:, self._lsrc] + self._lw, jnp.inf)
-                new_d = jnp.minimum(d_i, seg_min_l(cand))
-                improved = new_d < d_i
+                cand = jnp.where(
+                    active_e, prog.relax(d_i[:, self._lsrc], self._lw), ident
+                )
+                new_d = prog.combine(d_i, seg_red_l(cand))
+                improved = prog.is_active(new_d, d_i)
                 we_s = we_s + seg_sum_lp(active_e.astype(jnp.int32))
                 wv_s = wv_s + seg_sum_vp(f_i.astype(jnp.int32))
                 it_s = it_s + f_i.any(axis=1).astype(jnp.int32)
@@ -388,9 +477,11 @@ class TraversalEngine:
 
             # -- remote exchange at the superstep boundary --------------------
             active_re = touched[:, self._rsrc]
-            cand = jnp.where(active_re, d2[:, self._rsrc] + self._rw, jnp.inf)
-            new_d = jnp.minimum(d2, seg_min_r(cand))
-            next_fr = new_d < d2
+            cand = jnp.where(
+                active_re, prog.relax(d2[:, self._rsrc], self._rw), ident
+            )
+            new_d = prog.combine(d2, seg_red_r(cand))
+            next_fr = prog.is_active(new_d, d2)
             ms_s = seg_sum_rp(active_re.astype(jnp.int32))
 
             we = jax.lax.dynamic_update_index_in_dim(we, we_s, s, axis=1)
@@ -398,6 +489,8 @@ class TraversalEngine:
             ms = jax.lax.dynamic_update_index_in_dim(ms, ms_s, s, axis=1)
             it = jax.lax.dynamic_update_index_in_dim(it, it_s, s, axis=1)
             return s + 1, new_d, next_fr, we, wv, ms, it, sg, nst
+
+        superstep_body = stationary_body if prog.stationary else monotone_body
 
         def superstep_cond(carry):
             s, _, fr, *_ = carry
@@ -437,22 +530,21 @@ class TraversalEngine:
     def init_state(self, sources) -> WindowState:
         """Device-resident initial state for ``run_window`` (no host sync).
 
-        In mesh mode the state is the padded device-major layout, already
-        sharded over the partition axis.
+        The program defines the initial ``(state, frontier)`` in global
+        vertex order (``sources`` sizes the batch for source-free programs
+        like WCC/PageRank); in mesh mode the state is scattered into the
+        padded device-major layout, already sharded over the partition axis.
         """
         sources = np.atleast_1d(np.asarray(sources, dtype=np.int64))
         s_batch = sources.shape[0]
         if self._mesh_prog is not None:
             dist, frontier = self._mesh_prog.init_state(sources)
             return WindowState(dist, frontier, jnp.zeros((s_batch,), jnp.int32))
-        dist = jnp.full((s_batch, self.n), jnp.inf, dtype=jnp.float32)
-        dist = dist.at[jnp.arange(s_batch), jnp.asarray(sources)].set(0.0)
-        frontier = (
-            jnp.zeros((s_batch, self.n), bool)
-            .at[jnp.arange(s_batch), jnp.asarray(sources)]
-            .set(True)
+        state, frontier = self.program.init(self.pg, sources)
+        return WindowState(
+            jnp.asarray(state), jnp.asarray(frontier),
+            jnp.zeros((s_batch,), jnp.int32),
         )
-        return WindowState(dist, frontier, jnp.zeros((s_batch,), jnp.int32))
 
     def run_window(self, state: WindowState, k: int) -> WindowResult:
         """Run up to ``k`` more supersteps from ``state`` in one device launch.
@@ -510,7 +602,7 @@ class TraversalEngine:
                 dist=self.gather_global(res.dist),
                 frontier=self.gather_global(res.frontier),
             )
-        if res.frontier.any():
+        if not self.program.converged(bool(res.frontier.any())):
             raise TraversalNotConverged(self.m_max, res)
         return res
 
@@ -518,39 +610,96 @@ class TraversalEngine:
 def get_engine(
     pg: PartitionedGraph,
     *,
+    program: VertexProgram | None = None,
     m_max: int = 512,
     collect_subgraphs: bool = False,
     mesh=None,
 ) -> TraversalEngine:
     """Per-graph engine cache (keyed by the knobs, stored on the instance).
 
-    Mesh engines are keyed by the mesh's device ids; the default balanced
-    contiguous partition map is assumed (construct ``TraversalEngine``
-    directly for a custom ``device_of_part``).
+    Engines are keyed by ``program.key`` (default ``SsspProgram``) and, in
+    mesh mode, the mesh's device ids; the default balanced contiguous
+    partition map is assumed (construct ``TraversalEngine`` directly for a
+    custom ``device_of_part``).
     """
     engines = pg.__dict__.setdefault("_traversal_engines", {})
     mesh_key = (
         None if mesh is None else tuple(d.id for d in mesh.devices.flat)
     )
-    key = (m_max, collect_subgraphs, mesh_key)
+    prog_key = (program or SsspProgram()).key
+    key = (m_max, collect_subgraphs, mesh_key, prog_key)
     if key not in engines:
         engines[key] = TraversalEngine(
-            pg, m_max=m_max, collect_subgraphs=collect_subgraphs, mesh=mesh
+            pg, program=program, m_max=m_max,
+            collect_subgraphs=collect_subgraphs, mesh=mesh,
         )
     return engines[key]
 
 
-def reference_sssp(pg: PartitionedGraph, source: int) -> np.ndarray:
-    """Host-side Bellman-Ford oracle for tests (O(V*E) worst case, vectorized)."""
-    g = pg.graph
-    dist = np.full(g.n_vertices, np.inf, dtype=np.float64)
+# -- numpy reference implementations (test oracles) ---------------------------
+
+
+def _bellman_ford(
+    n: int, src: np.ndarray, dst: np.ndarray, w: np.ndarray, source: int
+) -> np.ndarray:
+    dist = np.full(n, np.inf, dtype=np.float64)
     dist[source] = 0.0
-    w = g.edge_weights.astype(np.float64)
-    for _ in range(g.n_vertices):
-        cand = dist[g.src] + w
+    for _ in range(n):
+        cand = dist[src] + w
         new = dist.copy()
-        np.minimum.at(new, g.dst, cand)
+        np.minimum.at(new, dst, cand)
         if np.array_equal(new, dist):
             break
         dist = new
     return dist
+
+
+def reference_bfs(pg: PartitionedGraph, source: int) -> np.ndarray:
+    """Hop-count oracle: BFS levels regardless of any edge weights."""
+    g = pg.graph
+    return _bellman_ford(
+        g.n_vertices, g.src, g.dst, np.ones(g.n_edges, dtype=np.float64), source
+    )
+
+
+def reference_sssp(pg: PartitionedGraph, source: int) -> np.ndarray:
+    """*Weighted* shortest-path oracle (Bellman-Ford over ``edge_weights``).
+
+    On a graph without a weight plane the unit default makes this coincide
+    with ``reference_bfs`` -- call that one when hop counts are what's meant.
+    """
+    g = pg.graph
+    return _bellman_ford(
+        g.n_vertices, g.src, g.dst, g.edge_weights.astype(np.float64), source
+    )
+
+
+def reference_wcc(pg: PartitionedGraph) -> np.ndarray:
+    """Min-label-propagation oracle: for each vertex, the smallest vertex id
+    reachable by repeatedly following directed edges under min -- on the
+    symmetrized graphs the generators produce, the smallest id in its
+    weakly-connected component (matches ``WccProgram`` exactly)."""
+    g = pg.graph
+    labels = np.arange(g.n_vertices, dtype=np.int64)
+    while True:
+        new = labels.copy()
+        np.minimum.at(new, g.dst, labels[g.src])
+        if np.array_equal(new, labels):
+            return labels
+        labels = new
+
+
+def reference_pagerank(
+    pg: PartitionedGraph, damping: float = 0.85, num_iters: int = 20
+) -> np.ndarray:
+    """Power-iteration oracle matching ``PageRankProgram``: fixed budget,
+    no dangling-mass redistribution (symmetrized graphs have none), float64."""
+    g = pg.graph
+    n = g.n_vertices
+    contrib_w = 1.0 / np.maximum(g.out_degree, 1).astype(np.float64)
+    rank = np.full(n, 1.0 / n, dtype=np.float64)
+    for _ in range(num_iters):
+        acc = np.zeros(n, dtype=np.float64)
+        np.add.at(acc, g.dst, rank[g.src] * contrib_w[g.src])
+        rank = (1.0 - damping) / n + damping * acc
+    return rank

@@ -6,8 +6,13 @@ Asserts, under real 8-device execution:
     bit-identical dist and ``[S, m_max, P]`` counters vs the dense engine
     for D in {1, 2, 8}, on an R-MAT and an Erdos-Renyi graph -- including
     the ragged case (P=5 partitions, not divisible by any D tested),
+  * cross-program equivalence on the ragged P=5 graph: weighted SSSP and
+    WCC through the VertexProgram API are bit-identical dense-vs-mesh for
+    D in {2, 8} (state AND counters) and match their numpy references;
+    stationary PageRank keeps exact counters with state equal to rounding
+    (float sums reassociate across shards) and matches its reference,
   * per-destination aggregation puts fewer messages on the wire than the
-    raw active-remote-edge count,
+    raw active-remote-edge count -- for every program,
   * windowed chaining on the mesh engine (k in {1, 8}) reproduces the
     single-launch results,
   * executor equivalence: ``ElasticBSPExecutor(mesh=...)`` yields
@@ -30,9 +35,17 @@ from repro.core import TimeFunction, ffd_placement
 from repro.core.elastic import ElasticBSPExecutor
 from repro.dist.sharding import partition_mesh
 from repro.graph.bsp import run_sssp
-from repro.graph.generators import erdos_renyi_graph, rmat_graph
+from repro.graph.generators import erdos_renyi_graph, rmat_graph, weighted
 from repro.graph.partition import bfs_grow_partition
-from repro.graph.traversal import TraversalEngine, get_engine
+from repro.graph.program import PageRankProgram, SsspProgram, WccProgram
+from repro.graph.structs import PartitionedGraph
+from repro.graph.traversal import (
+    TraversalEngine,
+    get_engine,
+    reference_pagerank,
+    reference_sssp,
+    reference_wcc,
+)
 
 M_MAX = 64
 MESH_SIZES = (1, 2, 8)
@@ -75,6 +88,100 @@ for name, pg in graphs.items():
                 f"(wire={wire}, raw active remote edges={pre_agg})"
             )
         print(f"engine {name} D={d_n}: bit-identical, wire={wire}/{pre_agg}")
+
+# -- cross-program equivalence on the ragged P=5 graph -----------------------
+COUNTERS = (
+    "n_supersteps", "edges_examined", "verts_processed", "msgs_sent",
+    "inner_iters",
+)
+pg5 = graphs["erdos_ragged_p5"]
+pg5w = PartitionedGraph(  # weighted twin, same ragged partition map
+    weighted(pg5.graph, seed=4), pg5.n_parts, pg5.part_of_vertex
+)
+n5 = pg5.graph.n_vertices
+
+
+def assert_state(actual, expect, exact, err_msg=""):
+    if exact:
+        np.testing.assert_array_equal(actual, expect, err_msg=err_msg)
+    else:  # float sums reassociate across shards: equal to rounding only
+        np.testing.assert_allclose(
+            actual, expect, rtol=1e-5, atol=1e-9, err_msg=err_msg
+        )
+
+
+def check_program(name, prog, pgx, srcs, refs, *, state_exact, mesh_sizes):
+    """Dense run vs numpy reference, then dense-vs-mesh equivalence: integer
+    counters always bit-identical; state bit-identical for min-programs and
+    rounding-tolerant for stationary sums.  Returns the dense result."""
+    dense = get_engine(pgx, program=prog, m_max=M_MAX).run(srcs)
+    for i, ref in enumerate(refs):
+        assert_state(
+            dense.dist[i], ref, state_exact and ref.dtype == dense.dist.dtype,
+            err_msg=f"{name} dense vs reference, source row {i}",
+        )
+    for d_n in mesh_sizes:
+        res = get_engine(
+            pgx, program=prog, m_max=M_MAX, mesh=partition_mesh(d_n)
+        ).run(srcs)
+        for field in COUNTERS:
+            np.testing.assert_array_equal(
+                getattr(res, field), getattr(dense, field),
+                err_msg=f"{name} D={d_n} field={field}",
+            )
+        assert_state(res.dist, dense.dist, state_exact, f"{name} D={d_n} dist")
+        wire, pre = int(res.wire_msgs.sum()), int(res.msgs_sent.sum())
+        assert 0 < wire < pre, f"{name} D={d_n}: wire={wire} pre={pre}"
+    print(f"program {name}: dense==mesh for D in {mesh_sizes}")
+    return dense
+
+
+srcs = [0, 17, n5 - 1]
+check_program(
+    # float64 reference stays float64: the f32 engine matches it to rounding
+    # (the dtype check in assert_state routes to allclose), while the
+    # dense-vs-mesh comparison below stays bit-exact
+    "sssp (weighted, ragged P=5)", SsspProgram(), pg5w, srcs,
+    [reference_sssp(pg5w, s) for s in srcs],
+    state_exact=True, mesh_sizes=(2, 8),
+)
+check_program(
+    "wcc (ragged P=5)", WccProgram(), pg5, [0],
+    [reference_wcc(pg5).astype(np.int32)],
+    state_exact=True, mesh_sizes=(2, 8),
+)
+pr = PageRankProgram(num_iters=12)
+check_program(
+    "pagerank (stationary)", pr, pg5, [0],
+    [reference_pagerank(pg5, 0.85, 12)],
+    state_exact=False, mesh_sizes=(8,),
+)
+
+# stationary windowed chaining on the mesh: the iteration budget and the
+# carried nst must survive window boundaries across 8 real devices
+eng = get_engine(pg5, program=pr, m_max=M_MAX, mesh=partition_mesh(8))
+full = eng.run([0])
+for k in (3, 8):
+    state = eng.init_state([0])
+    chunks = []
+    for _ in range(M_MAX):
+        w = eng.run_window(state, k)
+        state = w.state
+        chunks.append(w)
+        if w.done.all():
+            break
+    assert chunks[-1].done.all()
+    we = np.concatenate([c.edges_examined for c in chunks], axis=1)
+    m = we.shape[1]
+    np.testing.assert_array_equal(we, full.edges_examined[:, :m])
+    np.testing.assert_array_equal(
+        np.asarray(state.n_supersteps), full.n_supersteps
+    )
+    np.testing.assert_allclose(
+        eng.gather_global(np.asarray(state.dist)), full.dist,
+        rtol=1e-5, atol=1e-9,
+    )
+print("program pagerank: mesh windowed chaining k in (3, 8) keeps the budget")
 
 # -- windowed chaining on the mesh engine ------------------------------------
 pg = graphs["rmat"]

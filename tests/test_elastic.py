@@ -9,7 +9,7 @@ from repro.core import TimeFunction, ffd_placement, mfp_placement, default_place
 from repro.core.elastic import ElasticBSPExecutor
 from repro.graph import bfs_grow_partition, erdos_renyi_graph, road_grid_graph
 from repro.graph.bsp import run_sssp
-from repro.graph.traversal import reference_sssp
+from repro.graph.traversal import reference_bfs
 
 
 def _plan_from_trace(pg, source, strategy):
@@ -21,7 +21,7 @@ def _plan_from_trace(pg, source, strategy):
 def test_executor_distances_correct_under_any_plan():
     g = erdos_renyi_graph(300, 5.0, seed=21)
     pg = bfs_grow_partition(g, 4, seed=1)
-    ref = reference_sssp(pg, 0)
+    ref = reference_bfs(pg, 0)
     ex = ElasticBSPExecutor(pg)
     for strategy in (default_placement, ffd_placement, mfp_placement):
         plan, _ = _plan_from_trace(pg, 0, strategy)
@@ -58,7 +58,7 @@ def test_replan_recovers_from_bad_prediction():
     plan, _ = _plan_from_trace(pg, wrong_source, ffd_placement)
     ex = ElasticBSPExecutor(pg)
     rep = ex.run(real_source, plan, strategy_fn=ffd_placement, replan=True)
-    ref = reference_sssp(pg, real_source)
+    ref = reference_bfs(pg, real_source)
     np.testing.assert_allclose(rep.dist, ref)
     assert rep.replans >= 1
 
@@ -79,7 +79,7 @@ def test_single_divergence_triggers_exactly_one_replan():
             real_source, plan, strategy_fn=ffd_placement, replan=True,
             window=window,
         )
-        np.testing.assert_allclose(rep.dist, reference_sssp(pg, real_source))
+        np.testing.assert_allclose(rep.dist, reference_bfs(pg, real_source))
         assert rep.replans == 1, f"window={window}: {rep.replans} replans"
 
 

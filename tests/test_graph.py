@@ -15,7 +15,7 @@ from repro.graph.bsp import run_sssp
 from repro.graph.generators import weighted
 from repro.graph.sampler import NeighborSampler
 from repro.graph.structs import _label_propagation_components
-from repro.graph.traversal import reference_sssp
+from repro.graph.traversal import reference_bfs, reference_sssp
 
 
 def test_symmetrized_has_both_directions():
@@ -62,7 +62,7 @@ def test_bfs_matches_oracle(partitioner, source):
     g = erdos_renyi_graph(400, 5.0, seed=7)
     pg = partitioner(g, 5)
     dist, trace = run_sssp(pg, source)
-    ref = reference_sssp(pg, source)
+    ref = reference_bfs(pg, source)  # unweighted graph: hop counts
     np.testing.assert_allclose(dist, ref)
     assert trace.n_supersteps >= 1
     assert trace.active.shape == trace.edges_examined.shape

@@ -5,7 +5,8 @@ single-device fallback) run in-process; real multi-device execution runs in
 a subprocess with 8 forced host devices via the ``mesh_subprocess`` fixture
 (``tests/_mesh_child.py`` holds those assertions -- engine/executor
 equivalence for D in {1, 2, 8} x window {1, 8}, the ragged P=5 regression,
-and the wire-message reduction).
+cross-program dense-vs-mesh equivalence for weighted SSSP / WCC / PageRank
+through the VertexProgram API, and the wire-message reduction).
 """
 
 import os
@@ -63,6 +64,22 @@ def test_mesh_layout_invariants_ragged(n_parts, n_dev):
     # every local and remote edge appears exactly once
     assert int(ml.lvalid.sum()) == lay.local.n_edges
     assert int(ml.rvalid.sum()) == lay.remote.n_edges
+
+    # the retained edge ids reproduce the shard weight planes exactly (the
+    # seam per-program edge planes ride through)
+    assert np.array_equal(
+        ml.lw[ml.lvalid], lay.local.weights[ml.l_eid[ml.lvalid]]
+    )
+    assert np.array_equal(
+        ml.rw[ml.rvalid], lay.remote.weights[ml.r_eid[ml.rvalid]]
+    )
+    assert np.array_equal(np.sort(ml.l_eid[ml.lvalid]), np.arange(lay.local.n_edges))
+    assert np.array_equal(np.sort(ml.r_eid[ml.rvalid]), np.arange(lay.remote.n_edges))
+
+    # the layout owns the shared state-index helpers (dedup seam)
+    assert np.array_equal(ml.state_index_of_vertex, ml.pos_of_vertex)
+    probe = np.arange(ml.state_width, dtype=np.int64)
+    assert np.array_equal(ml.gather_global(probe), ml.pos_of_vertex)
 
     # segment indices stay ascending per device (indices_are_sorted contract)
     for d in range(n_dev):

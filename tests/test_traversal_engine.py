@@ -19,6 +19,7 @@ from repro.graph.traversal import (
     TraversalNotConverged,
     get_engine,
     make_superstep_fn,
+    reference_bfs,
     reference_sssp,
 )
 from repro.kernels.bfs_relax import bfs_relax, bfs_relax_csr, reference_bfs_relax
@@ -103,14 +104,14 @@ def test_bfs_relax_csr_batched_matches_per_source():
 
 @pytest.mark.parametrize("partitioner", [hash_partition, bfs_grow_partition])
 def test_batched_engine_bitmatches_oracle_every_source(partitioner):
-    """Acceptance: batched engine distances bit-match reference_sssp for
+    """Acceptance: batched engine distances bit-match reference_bfs for
     every source in the batch (unit-weight BFS distances are exact in f32)."""
     g = erdos_renyi_graph(300, 5.0, seed=11)
     pg = partitioner(g, 4)
     sources = [0, 17, 123, 299]
     res = get_engine(pg, m_max=256).run(sources)
     for i, s in enumerate(sources):
-        ref = reference_sssp(pg, s)
+        ref = reference_bfs(pg, s)
         np.testing.assert_array_equal(res.dist[i], ref.astype(np.float32))
 
 
