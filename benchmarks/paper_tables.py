@@ -6,11 +6,8 @@ cost_core_min,core_secs,under_util_core_min,peak_vms``.
 
 from __future__ import annotations
 
-import numpy as np
-
 from repro.core import (
     BillingModel,
-    TimeFunction,
     default_placement,
     evaluate,
     ffd_placement,

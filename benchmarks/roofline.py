@@ -21,7 +21,6 @@ import glob
 import json
 import os
 
-import numpy as np
 
 from repro.configs import ARCHS
 from repro.configs.base import LM_SHAPES, LMConfig

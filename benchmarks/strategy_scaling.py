@@ -12,7 +12,6 @@ import time
 import numpy as np
 
 from repro.core import TimeFunction, evaluate, STRATEGIES
-from repro.core.placement import opt_placement
 
 
 def _synthetic_tf(m: int, n: int, seed: int) -> TimeFunction:

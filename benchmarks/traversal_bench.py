@@ -34,6 +34,22 @@ harvest -- its ffd savings are pure load consolidation), versus the sweeping
 partial-activation profiles of the traversals.  ``--programs`` alone merges
 just this sweep into an existing ``BENCH_traversal.json``.
 
+The ``--relayout`` sweep (the paper's Table-style comparison for dynamic
+re-layout) runs the ffd-planned elastic executor twice per mesh size
+(D in {2, 8}, forced-device subprocess): static compute layout vs
+``relayout=True`` (compute follows the planner).  Recorded per D: billed
+cost/makespan/migration (asserted *identical* -- the economics must not
+depend on the compute layout), the physical device-move ledger (re-layout
+pays real remap bytes the static layout doesn't), re-layout count, and the
+residency-follows-plan check.  ``--relayout`` alone merges just this sweep
+into an existing ``BENCH_traversal.json``.
+
+``--smoke`` is the CI gate: on a tiny graph it asserts the wire-savings and
+elastic-vs-static invariants (plus relayout bit-identity) in a short
+forced-device child, and schema-checks the *committed*
+``BENCH_traversal.json`` (parses; has the ``mesh_sweep`` /
+``program_sweep`` / ``relayout`` sections) -- without rewriting the file.
+
 Writes ``BENCH_traversal.json`` so the perf trajectory is tracked per PR.
 """
 
@@ -64,9 +80,12 @@ SCALE, DEGREE = 12, 8  # R-MAT 2^12 vertices, avg degree 8
 N_PARTS = 8
 WINDOW_SIZES = (1, 4, 8, 16)
 MESH_SIZES = (1, 2, 4, 8)
+RELAYOUT_MESH_SIZES = (2, 8)
 MESH_FORCED_DEVICES = 8
 PAGERANK_ITERS = 20
 OUT_PATH = "BENCH_traversal.json"
+#: sections the committed JSON must carry (CI schema check)
+REQUIRED_SECTIONS = ("mesh_sweep", "program_sweep", "relayout")
 
 
 def _bench_programs():
@@ -296,6 +315,218 @@ def _program_sweep() -> dict:
     }
 
 
+def _relayout_run(pg, plan, mesh, *, relayout: bool, window: int = 8) -> dict:
+    """One warmed elastic run; returns its ledger row (plus dist for the
+    caller's bit-identity assert)."""
+    ex = ElasticBSPExecutor(pg, mesh=mesh)
+    ex.run(0, plan, window=window, relayout=relayout)  # warm (compile)
+    t0 = time.perf_counter()
+    rep = ex.run(0, plan, window=window, relayout=relayout)
+    wall = time.perf_counter() - t0
+    return {
+        "wall_s": wall,
+        "supersteps": int(rep.n_supersteps),
+        "makespan": float(rep.cost.makespan),
+        "cost_quanta": int(rep.cost.cost_quanta),
+        "migration_secs": float(rep.cost.migration_secs),
+        "n_migrations": int(rep.n_migrations),
+        "device_moves": int(rep.device_moves),
+        "device_move_bytes": int(rep.device_move_bytes),
+        "relayouts": int(rep.relayouts),
+        "_dist": rep.dist,
+        "_residency": rep.residency,
+    }
+
+
+def _relayout_pair(pg, plan, d_n: int, *, window: int = 8) -> dict:
+    """Static-layout vs dynamic-relayout elastic runs on a D-device mesh:
+    asserts bit-identical dist and identical *billed* economics, and that
+    re-layout actually computes on the planned devices."""
+    from repro.dist.sharding import partition_mesh
+
+    mesh = partition_mesh(d_n)
+    static = _relayout_run(pg, plan, mesh, relayout=False, window=window)
+    dynamic = _relayout_run(pg, plan, mesh, relayout=True, window=window)
+    assert (static.pop("_dist") == dynamic.pop("_dist")).all(), (
+        f"D={d_n}: dynamic re-layout changed the result"
+    )
+    static.pop("_residency")
+    res = dynamic.pop("_residency")
+    for key in ("makespan", "cost_quanta", "migration_secs", "n_migrations"):
+        assert static[key] == dynamic[key], (
+            f"D={d_n}: billed {key} must not depend on the compute layout "
+            f"({static[key]} vs {dynamic[key]})"
+        )
+    # residency follows the plan: at each window boundary every *placed*
+    # partition computes on its planned device
+    s = 0
+    for w in range(res.shape[0]):
+        if s >= plan.vm_of.shape[0]:
+            break
+        row = plan.vm_of[s]
+        placed = row >= 0
+        assert (res[w][placed] == row[placed] % d_n).all(), (
+            f"D={d_n} window {w}: partitions not computing on planned devices"
+        )
+        s += window
+    return {
+        "static": static,
+        "dynamic": dynamic,
+        "billing_identical": True,
+        "residency_follows_plan": True,
+    }
+
+
+def _relayout_child() -> dict:
+    """Forced-device subprocess body for the dynamic re-layout sweep."""
+    import jax
+
+    assert len(jax.devices()) >= max(RELAYOUT_MESH_SIZES)
+    g = rmat_graph(SCALE, DEGREE, seed=3)
+    pg = bfs_grow_partition(g, N_PARTS, seed=1)
+    _, trace = run_sssp(pg, 0)
+    plan = ffd_placement(TimeFunction.from_trace(trace))
+    # window=1 puts a placement point at every superstep (the paper's
+    # granularity) so the plan's consolidation actually exercises swaps
+    per_d = {
+        str(d_n): _relayout_pair(pg, plan, d_n, window=1)
+        for d_n in RELAYOUT_MESH_SIZES
+    }
+    assert any(r["dynamic"]["relayouts"] > 0 for r in per_d.values()), (
+        "relayout sweep never swapped a layout -- comparison is vacuous"
+    )
+    return {"n_parts": N_PARTS, "window": 1, "per_d": per_d}
+
+
+def _relayout_sweep_subprocess() -> dict:
+    from repro.testing.forced_devices import run_forced_devices
+
+    out = run_forced_devices(
+        os.path.abspath(__file__),
+        "--relayout-child",
+        n_devices=MESH_FORCED_DEVICES,
+        timeout=1800,
+    )
+    return json.loads(out)
+
+
+def _print_relayout_sweep(sweep: dict) -> None:
+    for d_n, row in sweep["per_d"].items():
+        st, dy = row["static"], row["dynamic"]
+        print(
+            f"relayout D={d_n}: billed cost {st['cost_quanta']} quanta / "
+            f"makespan {st['makespan']:.3g}s identical static vs dynamic; "
+            f"physical moves {st['device_moves']} -> {dy['device_moves']} "
+            f"({dy['device_move_bytes']} B, {dy['relayouts']} re-layouts), "
+            f"residency follows plan: {row['residency_follows_plan']}"
+        )
+
+
+def run_relayout_only(verbose: bool = True) -> dict:
+    """``--relayout``: compute just the re-layout sweep and merge it into an
+    existing ``BENCH_traversal.json`` (fresh file if none)."""
+    out = {}
+    if os.path.exists(OUT_PATH):
+        with open(OUT_PATH) as f:
+            out = json.load(f)
+    out["relayout"] = _relayout_sweep_subprocess()
+    with open(OUT_PATH, "w") as f:
+        json.dump(out, f, indent=2)
+    if verbose:
+        _print_relayout_sweep(out["relayout"])
+        print(f"-> {OUT_PATH}")
+    return out
+
+
+# -- CI smoke: invariants on a tiny graph + committed-JSON schema check -------
+
+SMOKE_SCALE, SMOKE_DEGREE, SMOKE_PARTS = 8, 4, 8
+SMOKE_DEVICES = 4
+
+
+def _smoke_child() -> dict:
+    """Tiny-graph invariant pass under forced devices (seconds, not minutes):
+    wire-savings, elastic-vs-static billing, and relayout bit-identity."""
+    import jax
+
+    from repro.dist.sharding import partition_mesh
+    from repro.graph.traversal import get_engine
+
+    assert len(jax.devices()) >= SMOKE_DEVICES
+    g = rmat_graph(SMOKE_SCALE, SMOKE_DEGREE, seed=3)
+    pg = bfs_grow_partition(g, SMOKE_PARTS, seed=1)
+
+    # wire-savings invariant: per-destination aggregation shrinks the wire
+    res = get_engine(pg, m_max=128, mesh=partition_mesh(SMOKE_DEVICES)).run([0])
+    wire, pre = int(res.wire_msgs.sum()), int(res.msgs_sent.sum())
+    assert 0 < wire < pre, f"wire-savings violated: {wire} vs {pre}"
+
+    # elastic-vs-static billing invariant: consolidation never costs more
+    _, trace = run_sssp(pg, 0)
+    tf = TimeFunction.from_trace(trace)
+    model = BillingModel()
+    elastic = evaluate(ffd_placement(tf), model)
+    static = evaluate(default_placement(tf), model)
+    assert elastic.cost_quanta <= static.cost_quanta, (
+        f"elastic {elastic.cost_quanta} > static {static.cost_quanta}"
+    )
+
+    # dynamic re-layout invariant: identical results + billed economics
+    # (window=1 makes every superstep a boundary so swaps actually happen)
+    relayout = _relayout_pair(pg, ffd_placement(tf), SMOKE_DEVICES, window=1)
+    assert relayout["dynamic"]["relayouts"] > 0, (
+        "smoke relayout pair never swapped a layout -- gate is vacuous"
+    )
+    return {
+        "wire_total": wire,
+        "pre_agg_total": pre,
+        "elastic_cost_quanta": int(elastic.cost_quanta),
+        "static_cost_quanta": int(static.cost_quanta),
+        "relayout": relayout,
+    }
+
+
+def check_bench_schema(path: str = OUT_PATH) -> dict:
+    """The committed bench JSON parses and carries every tracked section."""
+    with open(path) as f:
+        data = json.load(f)
+    missing = [s for s in REQUIRED_SECTIONS if s not in data]
+    assert not missing, f"{path} is missing sections: {missing}"
+    for d_n, row in data["mesh_sweep"]["per_d"].items():
+        if int(d_n) > 1:
+            assert row["wire_total"] < row["pre_agg_total"], d_n
+    assert data["program_sweep"]["per_program"], "empty program sweep"
+    assert data["relayout"]["per_d"], "empty relayout sweep"
+    return data
+
+
+def run_smoke(verbose: bool = True) -> None:
+    """``--smoke``: CI gate.  Asserts the bench invariants on a tiny graph
+    (forced-device child) and schema-checks the committed JSON; never writes
+    ``BENCH_traversal.json``."""
+    from repro.testing.forced_devices import run_forced_devices
+
+    data = check_bench_schema()
+    child = json.loads(
+        run_forced_devices(
+            os.path.abspath(__file__),
+            "--smoke-child",
+            n_devices=SMOKE_DEVICES,
+            timeout=900,
+        )
+    )
+    if verbose:
+        print(
+            f"smoke: schema OK ({', '.join(REQUIRED_SECTIONS)} present in "
+            f"{OUT_PATH}, {len(data['program_sweep']['per_program'])} "
+            f"programs); tiny-graph invariants OK (wire "
+            f"{child['wire_total']}/{child['pre_agg_total']}, elastic "
+            f"{child['elastic_cost_quanta']} <= static "
+            f"{child['static_cost_quanta']} quanta, relayout billing "
+            f"identical: {child['relayout']['billing_identical']})"
+        )
+
+
 def _print_program_sweep(sweep: dict) -> None:
     for name, row in sweep["per_program"].items():
         print(
@@ -373,6 +604,9 @@ def run(verbose: bool = True) -> dict:
     # VertexProgram sweep: algorithms x {dense rate, wire savings, elasticity}
     out["program_sweep"] = _program_sweep()
 
+    # dynamic re-layout: static vs compute-follows-the-planner elastic runs
+    out["relayout"] = _relayout_sweep_subprocess()
+
     with open(OUT_PATH, "w") as f:
         json.dump(out, f, indent=2)
     if verbose:
@@ -406,6 +640,7 @@ def run(verbose: bool = True) -> dict:
                 + (f" ({red:.0%} saved by aggregation)" if red else "")
             )
         _print_program_sweep(out["program_sweep"])
+        _print_relayout_sweep(out["relayout"])
     return out
 
 
@@ -414,7 +649,15 @@ if __name__ == "__main__":
         print(json.dumps(_mesh_child()))
     elif "--programs-child" in sys.argv:
         print(json.dumps(_programs_child()))
+    elif "--relayout-child" in sys.argv:
+        print(json.dumps(_relayout_child()))
+    elif "--smoke-child" in sys.argv:
+        print(json.dumps(_smoke_child()))
     elif "--programs" in sys.argv:
         run_programs_only()
+    elif "--relayout" in sys.argv:
+        run_relayout_only()
+    elif "--smoke" in sys.argv:
+        run_smoke()
     else:
         run()

@@ -27,6 +27,12 @@ Knobs:
                partition axis on an N-device mesh, real all-to-all exchange,
                and per-window *physical* shard migration.  Prints per-device
                shard residency at every window so the movement is visible.
+  --relayout   (with --mesh) dynamic re-layout: at every window boundary the
+               engine swaps its ``MeshEdgeLayout`` to the spliced placement
+               row, so partitions *compute* on their planned devices (not
+               just store their shards there).  Results are bit-identical;
+               the remap bytes show up in the physical device-move ledger
+               while billed migration stays plan-derived.
 
   PYTHONPATH=src python examples/elastic_bfs.py [--workloads LIVJ/8P ...]
 
@@ -148,6 +154,13 @@ def main():
         "physical per-window shard migration",
     )
     ap.add_argument(
+        "--relayout", action="store_true",
+        help="(with --mesh) dynamic re-layout: the compute layout follows "
+        "the planner at every window boundary -- partitions genuinely run "
+        "on their planned devices, results stay bit-identical, and the "
+        "residency print shows the planned map instead of the data plane",
+    )
+    ap.add_argument(
         "--bc", type=int, default=0, metavar="N",
         help="also run an N-source BC wave demo on the batched engine",
     )
@@ -192,14 +205,15 @@ def main():
         rep = ex.run(
             wl.source, plan, strategy_fn=strat, replan=not args.no_replan,
             sketch=None if args.no_replan else pred_tf,
+            relayout=args.relayout,
             window=args.window,
         )
         print(
             f"executed {rep.n_supersteps} supersteps in windows of "
             f"{rep.window} ({rep.host_syncs} host syncs, {rep.replans} "
             f"replans, {rep.n_migrations} migrations moving "
-            f"{rep.migration_bytes} B, wall {rep.wall_seconds:.1f}s on this "
-            f"host)"
+            f"{rep.migration_bytes} B, {rep.relayouts} compute re-layouts, "
+            f"wall {rep.wall_seconds:.1f}s on this host)"
         )
         if mesh is not None:
             _print_residency(rep, args.mesh)

@@ -52,8 +52,25 @@ deliberately separate:
     active VMs the VM -> device map is injective and the two ledgers
     coincide -- the billed migration is the physical one.
 
+Dynamic re-layout (``run(..., relayout=True)``, mesh mode) closes the loop
+the data-plane resharding left open: the *compute* layout follows the
+planner too.  At every window boundary the spliced placement row is bridged
+onto mesh devices (``Placement.device_row`` via ``device_of_vm``) and handed
+to ``TraversalEngine.run_window(device_of_part=...)`` -- the engine swaps to
+the matching ``MeshEdgeLayout`` (incrementally rebuilt, LRU-cached consts
+and jit) and remaps the carried state exactly, so ``dist``/counters stay
+bit-identical to the static-layout run while each partition's local closure
+genuinely executes on its planned device (``residency`` then records the
+engine's active map).  The remap's bytes land in the *physical* ledger
+(``device_moves``/``device_move_bytes``) -- real interconnect traffic -- and
+deliberately NOT in ``migration_secs``: the billed cloud migration prices
+the plan's VM moves only, so the paper's economics stay independent of how
+many local devices stand in for the VMs, with or without re-layout.
+Partitions the row leaves unplaced keep their previous compute device.
+
 ``residency`` records the per-window partition -> device map for inspection
-(the ``--mesh`` demo prints it).
+(the ``--mesh`` demo prints it): the planned data-plane placement under
+``relayout=False``, the engine's actual compute map under ``relayout=True``.
 
 Beyond the paper: ``replan=True`` complements the static a-priori plan with
 dynamic re-planning (their s7 future work) -- when the actually-active
@@ -71,8 +88,8 @@ and can be passed via ``replan_config``.
 from __future__ import annotations
 
 import dataclasses
-import math
 import time
+from collections import OrderedDict
 from typing import Callable
 
 import jax
@@ -105,6 +122,7 @@ class ExecutionReport:
     device_move_bytes: int = 0  # bytes physically transferred between devices
     residency: np.ndarray | None = None  # [n_windows, P] device per partition
     # (-1 = not yet placed), recorded at each window boundary
+    relayouts: int = 0  # windows whose compute layout was actually swapped
 
     @property
     def migration_secs(self) -> float:
@@ -142,17 +160,36 @@ class ElasticBSPExecutor:
         # per-partition index lists into the carried state's trailing axis
         # (identity layout on the dense engine, padded device-major positions
         # on the mesh engine) for shard gathers, and shard sizes in bytes
-        # (per the program's state dtype) for migration pricing
-        state_idx = self.engine.state_index_of_vertex
-        self._part_indices = [
-            jnp.asarray(state_idx[np.flatnonzero(pg.part_of_vertex == i)])
-            for i in range(pg.n_parts)
-        ]
+        # (per the program's state dtype) for migration pricing.  Dynamic
+        # re-layout changes the state layout mid-run, so the index lists are
+        # refreshed from the engine's active map (cached per layout key,
+        # LRU-bounded like the engine's layout caches so a long replanned
+        # relayout run cannot accrete index arrays per distinct placement).
+        self._part_indices_cache: OrderedDict = OrderedDict()
+        self._part_indices = self._state_part_indices()
         itemsize = np.dtype(self.program.dtype).itemsize
-        self.partition_bytes = np.array(
-            [itemsize * ix.shape[0] for ix in self._part_indices],
-            dtype=np.int64,
-        )
+        nv, _ = pg.partition_sizes
+        self.partition_bytes = (itemsize * nv).astype(np.int64)
+
+    _PART_INDICES_CACHE_MAX = 8
+
+    def _state_part_indices(self) -> list:
+        """Per-partition device-array indices into the carried state's
+        trailing axis, for the engine's *active* layout (LRU per map)."""
+        dop = self.engine.device_of_part
+        key = None if dop is None else dop.tobytes()
+        cached = self._part_indices_cache.get(key)
+        if cached is None:
+            state_idx = self.engine.state_index_of_vertex
+            cached = [
+                jnp.asarray(state_idx[np.flatnonzero(self.pg.part_of_vertex == i)])
+                for i in range(self.pg.n_parts)
+            ]
+            self._part_indices_cache[key] = cached
+        self._part_indices_cache.move_to_end(key)
+        while len(self._part_indices_cache) > self._PART_INDICES_CACHE_MAX:
+            self._part_indices_cache.popitem(last=False)
+        return cached
 
     def _device_of_vm(self, j: int):
         return self.devices[device_of_vm(j, len(self.devices))]
@@ -166,12 +203,24 @@ class ElasticBSPExecutor:
         replan: bool = False,
         replan_config: ReplanConfig | None = None,
         sketch: TimeFunction | None = None,
+        relayout: bool = False,
         window: int = 8,
         max_supersteps: int = 4096,
     ) -> ExecutionReport:
+        """Execute the program under ``plan``; see the module docstring.
+
+        ``relayout=True`` (mesh mode; a no-op dense, where one device does
+        all the work) makes the compute layout follow the planner: each
+        window's spliced placement row is applied as a
+        ``device_of_part`` override so partitions compute on their planned
+        devices, with remap bytes billed to the physical
+        ``device_moves``/``device_move_bytes`` ledger and results
+        bit-identical to the static-layout run.
+        """
         pg = self.pg
         t0 = time.perf_counter()
         window = max(1, int(window))
+        relayout = bool(relayout) and self.engine.device_of_part is not None
 
         state = self.engine.init_state([source])
         replanner = OnlineReplanner(
@@ -192,6 +241,7 @@ class ElasticBSPExecutor:
         device_move_bytes = 0
         mig_events: list[tuple[int, int, float]] = []  # (superstep, vm, secs)
         replans = 0
+        relayouts = 0
         host_syncs = 0
         taus: list[np.ndarray] = []
         vm_rows: list[np.ndarray] = []
@@ -231,8 +281,29 @@ class ElasticBSPExecutor:
             k = max(1, min(window, horizon - s, max_supersteps - s))
             rows = vm_of[s : s + k]
 
+            # -- dynamic re-layout: compute follows the plan -----------------
+            # the window's boundary row decides where placed partitions
+            # compute; unplaced ones keep their current device.  The remap is
+            # real interconnect traffic -> the physical ledger; the billed
+            # cloud migration (migration_secs) stays plan-derived below.
+            target_map = None
+            if relayout:
+                cur = self.engine.device_of_part
+                target_map = cur.copy()
+                placed = rows[0] >= 0
+                target_map[placed] = device_of_vm(rows[0][placed], n_dev)
+                if np.array_equal(target_map, cur):
+                    target_map = None
+                else:
+                    moved = np.flatnonzero(target_map != cur)
+                    relayouts += 1
+                    device_moves += int(moved.size)
+                    device_move_bytes += int(self.partition_bytes[moved].sum())
+
             # -- one device launch, one bulk counter pull --------------------
-            wres = self.engine.run_window(state, k)
+            wres = self.engine.run_window(state, k, device_of_part=target_map)
+            if target_map is not None:
+                self._part_indices = self._state_part_indices()
             host_syncs += 1
             state = wres.state
             steps = int(wres.n_supersteps[0]) - s
@@ -289,7 +360,13 @@ class ElasticBSPExecutor:
             s += steps
             active_next = wres.part_active_next[0]
             done = bool(wres.done[0])
-            residency.append(prev_dev.copy())
+            # residency: planned data-plane devices (static layout) or the
+            # engine's actual compute map (dynamic re-layout)
+            residency.append(
+                self.engine.device_of_part.astype(np.int64)
+                if relayout
+                else prev_dev.copy()
+            )
 
         # the final bulk pull; mesh state comes back in padded device-major
         # order and is gathered to global vertex order host-side
@@ -330,4 +407,5 @@ class ElasticBSPExecutor:
                 if residency
                 else np.zeros((0, pg.n_parts), dtype=np.int64)
             ),
+            relayouts=relayouts,
         )

@@ -239,7 +239,16 @@ class OnlineReplanner:
         """New full schedule: executed prefix ``vm_of[:s]`` + a re-planned
         remainder covering the whole extrapolated horizon (>= min_horizon
         rows -- THE fix for the old one-row splice that re-triggered a replan
-        at every subsequent superstep)."""
+        at every subsequent superstep).
+
+        The spliced rows are what the executor's *dynamic re-layout* consumes
+        (``core.elastic``, ``relayout=True``): each window-boundary row is
+        bridged onto mesh devices and becomes the engine's next
+        ``device_of_part``, so a replan here changes not just where shards
+        are billed but which device computes each partition.  Every active
+        partition carries the activation floor, so spliced rows keep all
+        reachable partitions placed -- the re-layout never has to invent a
+        device for a partition the plan forgot."""
         cfg = self.config
         observed = self.observed
         if observed.shape[0] != s:

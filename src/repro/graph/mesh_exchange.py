@@ -48,10 +48,28 @@ Physical shard placement for the elastic executor lives here too:
 ``place_shard`` moves a partition's state array onto a target device and
 reports whether bytes actually crossed devices -- the executor's per-window
 resharding seam.
+
+**Dynamic re-layout** (the compute plane following the planner): the program
+is no longer married to the ``device_of_part`` it was built with.
+``MeshTraversalProgram.ensure_layout(state, device_of_part)`` swaps the
+active ``MeshEdgeLayout`` between windows -- per-layout device constants are
+LRU-cached (``layout_cache_size``), the jitted window program is keyed by the
+layout's static shapes so a swap re-jits at most once per distinct layout
+shape (``window_cache_size`` LRU), and the carried state is remapped by
+``relayout_state``: a pure gather/scatter permutation between the two padded
+device-major layouts, so the *global* state is bit-identical across the swap
+(padding rows re-filled with the program identity; the replicated
+``n_supersteps`` budget rides along untouched).  The bytes such a remap
+moves between devices are the executor's *physical* ledger
+(``device_moves``/``device_move_bytes``); the *billed* cloud migration
+(``CostReport.migration_secs``) stays derived from the placement plan alone
+and is therefore device-count-independent -- see ``core.elastic`` for the
+two-ledger contract.
 """
 
 from __future__ import annotations
 
+from collections import OrderedDict
 from functools import partial
 
 import jax
@@ -103,12 +121,70 @@ def place_shard(
     )
 
 
+def relayout_rows(
+    old_layout: MeshEdgeLayout,
+    new_layout: MeshEdgeLayout,
+    rows,
+    fill,
+):
+    """Remap ``[..., old.state_width]`` padded device-major rows into
+    ``new_layout``'s ``[..., new.state_width]`` shape.
+
+    A pure permutation through global vertex order: real rows land exactly
+    once, padding rows carry ``fill`` (the program identity / an empty
+    frontier), so the represented global state is bit-identical.
+    """
+    if old_layout.n_vertices != new_layout.n_vertices:
+        raise ValueError(
+            f"layouts disagree on n_vertices: {old_layout.n_vertices} vs "
+            f"{new_layout.n_vertices}"
+        )
+    rows = jnp.asarray(rows)
+    out = jnp.full(
+        rows.shape[:-1] + (new_layout.state_width,), fill, dtype=rows.dtype
+    )
+    return out.at[..., new_layout.pos_of_vertex].set(
+        rows[..., old_layout.pos_of_vertex]
+    )
+
+
+def relayout_state(
+    old_layout: MeshEdgeLayout,
+    new_layout: MeshEdgeLayout,
+    state,
+    *,
+    identity,
+    mesh: Mesh | None = None,
+):
+    """Remap a carried window state (``dist``/``frontier`` padded shards plus
+    the replicated ``n_supersteps`` budget) from ``old_layout`` onto
+    ``new_layout``.
+
+    ``state`` is any NamedTuple with ``dist``/``frontier`` leaves in the old
+    padded layout (the engine's ``WindowState``); the returned state is the
+    same type with both remapped -- exact in global vertex order, see
+    ``relayout_rows`` -- and, when ``mesh`` is given, re-committed to the
+    partition-axis sharding so each device owns its new shard.  The
+    ``A -> B -> A`` round trip is bit-identical by construction.
+    """
+    dist = relayout_rows(old_layout, new_layout, state.dist, identity)
+    frontier = relayout_rows(old_layout, new_layout, state.frontier, False)
+    if mesh is not None:
+        sh = traversal_state_sharding(mesh)
+        dist = jax.device_put(dist, sh)
+        frontier = jax.device_put(frontier, sh)
+    return state._replace(dist=dist, frontier=frontier)
+
+
 class MeshTraversalProgram:
-    """The shard_map-ed window program for one (graph, mesh, device map).
+    """The shard_map-ed window program for one (graph, mesh) pair.
 
     Static per-device constant tables (edge shards, wire-slot maps) are
-    uploaded once with a leading device axis sharded over ``parts``; one
-    jitted program per window depth ``k`` serves every launch.
+    uploaded once *per layout* with a leading device axis sharded over
+    ``parts``; the active layout can be swapped between windows
+    (``ensure_layout``) and both the uploaded constants and the jitted window
+    programs are LRU-cached so revisiting a layout costs neither a re-upload
+    nor a re-jit.
     """
 
     def __init__(
@@ -117,6 +193,9 @@ class MeshTraversalProgram:
         mesh: Mesh,
         device_of_part: np.ndarray | None = None,
         program: VertexProgram | None = None,
+        *,
+        layout_cache_size: int = 4,
+        window_cache_size: int = 8,
     ):
         d_n = mesh_size(mesh)
         if d_n < 2:
@@ -130,28 +209,65 @@ class MeshTraversalProgram:
         self.pg = pg
         self.program = validate_program(program or SsspProgram())
         self.n_parts = pg.n_parts
-        self.layout: MeshEdgeLayout = mesh_edge_layout(pg, device_of_part, d_n)
-        ml = self.layout
-        lw, rw = self._plane_shards(pg, ml)
-        put = lambda a: jax.device_put(
-            jnp.asarray(a), per_device_sharding(mesh, np.ndim(a))
+        # layout key -> (layout, uploaded device consts); LRU so a replanned
+        # run cycling through placements holds a bounded device footprint
+        self._layout_cache_size = int(layout_cache_size)
+        self._layout_states: OrderedDict[tuple, tuple] = OrderedDict()
+        # (m_max, layout static shapes) -> jitted window fn; a swap between
+        # shape-identical layouts reuses the same program (consts are args)
+        self._window_cache_size = int(window_cache_size)
+        self._windows: OrderedDict[tuple, object] = OrderedDict()
+        self._activate(mesh_edge_layout(pg, device_of_part, d_n))
+
+    def _activate(self, ml: MeshEdgeLayout) -> None:
+        """Make ``ml`` the active layout, uploading its consts on first use."""
+        key = ml.layout_key
+        entry = self._layout_states.get(key)
+        if entry is None:
+            lw, rw = self._plane_shards(self.pg, ml)
+            put = lambda a: jax.device_put(
+                jnp.asarray(a), per_device_sharding(self.mesh, np.ndim(a))
+            )
+            consts = (
+                put(ml.lsrc),
+                put(ml.ldst),
+                put(lw),
+                put(ml.lpart),
+                put(ml.lvalid),
+                put(ml.part_of_pos),
+                put(ml.rsrc),
+                put(rw),
+                put(ml.rslot),
+                put(ml.rpart),
+                put(ml.rvalid),
+                put(ml.recv_idx),
+            )
+            entry = (ml, consts)
+            self._layout_states[key] = entry
+        self._layout_states.move_to_end(key)
+        while len(self._layout_states) > self._layout_cache_size:
+            self._layout_states.popitem(last=False)
+        self.layout, self._consts = entry
+        self._const_specs = tuple(
+            per_device_spec(c.ndim) for c in self._consts
         )
-        self._consts = (
-            put(ml.lsrc),
-            put(ml.ldst),
-            put(lw),
-            put(ml.lpart),
-            put(ml.lvalid),
-            put(ml.part_of_pos),
-            put(ml.rsrc),
-            put(rw),
-            put(ml.rslot),
-            put(ml.rpart),
-            put(ml.rvalid),
-            put(ml.recv_idx),
+
+    def ensure_layout(self, state, device_of_part) -> tuple:
+        """Swap to the layout for ``device_of_part`` (incrementally rebuilt
+        from the active one when possible) and remap the carried ``state``
+        into it.  Returns ``(state, swapped)``; a no-op when the map is
+        already active."""
+        old = self.layout
+        ml = mesh_edge_layout(
+            self.pg, device_of_part, old.n_devices, base=old
         )
-        self._const_specs = tuple(per_device_spec(c.ndim) for c in self._consts)
-        self._windows: dict[int, object] = {}  # window depth -> jitted fn
+        if ml is old:
+            return state, False
+        self._activate(ml)
+        state = relayout_state(
+            old, ml, state, identity=self.program.identity, mesh=self.mesh
+        )
+        return state, True
 
     def _plane_shards(self, pg: PartitionedGraph, ml: MeshEdgeLayout):
         """Per-device ``(lw, rw)`` edge planes for this program: the layout's
@@ -187,13 +303,22 @@ class MeshTraversalProgram:
     # -- the device program --------------------------------------------------
 
     def window(self, dist, frontier, nst0, m_max: int):
-        """Run up to ``m_max`` supersteps; mirrors ``_window_impl``'s output
-        tuple ``(dist, frontier, nst, we, wv, ms, it, sg, wire, pact, done)``
-        with ``dist``/``frontier`` in the padded sharded layout."""
-        fn = self._windows.get(m_max)
+        """Run up to ``m_max`` supersteps on the *active* layout; mirrors
+        ``_window_impl``'s output tuple ``(dist, frontier, nst, we, wv, ms,
+        it, sg, wire, pact, done)`` with ``dist``/``frontier`` in the padded
+        sharded layout."""
+        ml = self.layout
+        # the traced program depends on the layout only through these static
+        # shapes; shape-identical layouts (the common re-layout case) share
+        # one jitted fn, so a swap re-jits at most once per distinct shape
+        key = (m_max, ml.n_pad, ml.w_pad)
+        fn = self._windows.get(key)
         if fn is None:
             fn = self._build(m_max)
-            self._windows[m_max] = fn
+            self._windows[key] = fn
+        self._windows.move_to_end(key)
+        while len(self._windows) > self._window_cache_size:
+            self._windows.popitem(last=False)
         return fn(dist, frontier, nst0, *self._consts)
 
     def _build(self, m_max: int):

@@ -19,6 +19,7 @@ and cached on the ``PartitionedGraph`` instance.
 from __future__ import annotations
 
 import dataclasses
+from collections import OrderedDict
 
 import numpy as np
 
@@ -28,6 +29,7 @@ from repro.graph.structs import (
     MeshEdgeLayout,
     PartitionedGraph,
     dst_sorted_layout,
+    mesh_layout_key,
 )
 
 
@@ -89,21 +91,103 @@ def contiguous_device_map(n_parts: int, n_devices: int) -> np.ndarray:
     return np.arange(n_parts, dtype=np.int32)
 
 
+#: layouts retained per (PartitionedGraph, canonical key); replanned runs can
+#: visit many device maps, so the cache is LRU-bounded rather than unbounded
+_LAYOUT_CACHE_MAX = 16
+
+
+@dataclasses.dataclass(frozen=True)
+class _PartSlices:
+    """Per-partition views into the static partition layout, built once per
+    graph and reused by every mesh-layout (re)build.
+
+    All selections preserve the global dst-ascending order of the underlying
+    ``PartitionedEdgeLayout``, so a per-device edge list assembled as
+    ``sort(concat(slices of its partitions))`` is *identical* to the
+    ``flatnonzero`` scan over the full edge set -- incremental rebuilds
+    produce byte-identical layouts.
+    """
+
+    verts: list  # [P] ascending vertex ids per partition
+    lsel: list  # [P] indices into layout.local, dst-ascending
+    rsel: list  # [P] indices into layout.remote, dst-ascending
+    nv: np.ndarray  # [P] vertex counts
+    nl: np.ndarray  # [P] local-edge counts
+    nr: np.ndarray  # [P] remote out-edge counts
+    rdst_part: np.ndarray  # [E_remote] partition of each remote edge's dst
+    reach: np.ndarray  # [P, P] bool: partition i has a remote edge into j
+
+
+def _group_by(labels: np.ndarray, n_groups: int) -> list:
+    """[n_groups] ascending index arrays, one per label value (stable)."""
+    order = np.argsort(labels, kind="stable")
+    counts = np.bincount(labels, minlength=n_groups)
+    return np.split(order, np.cumsum(counts)[:-1])
+
+
+def _mesh_part_slices(pg: PartitionedGraph) -> _PartSlices:
+    cached = pg.__dict__.get("_mesh_part_slices")
+    if cached is not None:
+        return cached
+    layout = partitioned_edge_layout(pg)
+    p = pg.n_parts
+    part = pg.part_of_vertex.astype(np.int64)
+    rdst_part = part[layout.remote.dst].astype(np.int32)
+    reach = np.zeros((p, p), dtype=bool)
+    reach[layout.remote_src_part, rdst_part] = True
+    slices = _PartSlices(
+        verts=_group_by(part, p),
+        lsel=_group_by(layout.local_part.astype(np.int64), p),
+        rsel=_group_by(layout.remote_src_part.astype(np.int64), p),
+        nv=np.bincount(part, minlength=p),
+        nl=np.bincount(layout.local_part, minlength=p),
+        nr=np.bincount(layout.remote_src_part, minlength=p),
+        rdst_part=rdst_part,
+        reach=reach,
+    )
+    pg.__dict__["_mesh_part_slices"] = slices
+    return slices
+
+
+#: sentinel: pick the most recently built layout for this (pg, D) as the
+#: incremental base (None forces a from-scratch build)
+_AUTO_BASE = object()
+
+
 def mesh_edge_layout(
     pg: PartitionedGraph,
     device_of_part: np.ndarray,
     n_devices: int,
+    *,
+    base: MeshEdgeLayout | None | object = _AUTO_BASE,
 ) -> MeshEdgeLayout:
     """Build the static mesh-aware layout for a fixed partition -> device map.
 
-    Host-side numpy, built once per ``(pg, device_of_part)`` and cached on the
-    instance.  See ``structs.MeshEdgeLayout`` for the contract; the key
-    invariants preserved from the single-device layout are (a) per-device
-    local ``dst`` rows stay ascending (a device-filtered subsequence of the
-    globally dst-sorted local edges, renumbered by a per-device monotone map),
-    and (b) per-device remote edges are ``(dst_device, dst_vertex)``-sorted so
-    wire-slot ids ascend too -- every segment reduction keeps the
-    ``indices_are_sorted`` fast path.
+    Host-side numpy, cached per ``(pg, mesh_layout_key(...))`` (LRU-bounded:
+    dynamic re-layout visits a map per replan).  See ``structs.MeshEdgeLayout``
+    for the contract; the key invariants preserved from the single-device
+    layout are (a) per-device local ``dst`` rows stay ascending (a
+    device-filtered subsequence of the globally dst-sorted local edges,
+    renumbered by a per-device monotone map), and (b) per-device remote edges
+    are ``(dst_device, dst_vertex)``-sorted so wire-slot ids ascend too --
+    every segment reduction keeps the ``indices_are_sorted`` fast path.
+
+    **Incremental rebuild** (the dynamic re-layout hot path): when ``base`` is
+    a previously built layout for the same ``(pg, n_devices)`` (the default
+    picks the most recent one), only the per-device blocks the map change
+    actually touches are recomputed from the cached per-partition slices
+    (``_mesh_part_slices``):
+
+      * vertex/local-edge blocks of devices whose partition set changed,
+      * remote/wire blocks of src devices that are changed themselves OR send
+        into any partition hosted on a changed device (their
+        ``(dst_device, dst_vertex)`` sort and receive rows shift),
+
+    everything else is copied from ``base``.  If any pad shape
+    (``n_pad``/``e_local_pad``/``e_remote_pad``/``w_pad``) differs, the build
+    degrades to from-scratch -- reuse is only valid shape-stable.  Either
+    path produces the byte-identical canonical layout; the chosen path is
+    recorded in ``layout.__dict__['_build_info']``.
     """
     device_of_part = np.asarray(device_of_part, dtype=np.int32)
     if device_of_part.shape != (pg.n_parts,):
@@ -116,43 +200,123 @@ def mesh_edge_layout(
             f"device ids must lie in [0, {n_devices}), got "
             f"[{device_of_part.min()}, {device_of_part.max()}]"
         )
-    cache = pg.__dict__.setdefault("_mesh_layouts", {})
-    key = (n_devices, device_of_part.tobytes())
+    cache = pg.__dict__.setdefault("_mesh_layouts", OrderedDict())
+    key = mesh_layout_key(device_of_part, n_devices)
     if key in cache:
+        cache.move_to_end(key)
         return cache[key]
+    last = pg.__dict__.setdefault("_mesh_layout_last", {})
+    if base is _AUTO_BASE:
+        base = last.get(int(n_devices))
+    if base is not None and (
+        base.n_devices != int(n_devices) or base.n_parts != pg.n_parts
+    ):
+        base = None
 
+    out = _build_mesh_layout(pg, device_of_part, int(n_devices), base)
+    cache[key] = out
+    cache.move_to_end(key)
+    while len(cache) > _LAYOUT_CACHE_MAX:
+        cache.popitem(last=False)
+    last[int(n_devices)] = out
+    return out
+
+
+def _build_mesh_layout(
+    pg: PartitionedGraph,
+    device_of_part: np.ndarray,
+    d_n: int,
+    base: MeshEdgeLayout | None,
+) -> MeshEdgeLayout:
     layout = partitioned_edge_layout(pg)
-    n, d_n = pg.graph.n_vertices, int(n_devices)
+    slices = _mesh_part_slices(pg)
+    n = pg.graph.n_vertices
+    parts_of_dev = _group_by(device_of_part.astype(np.int64), d_n)
     dev_of_vertex = device_of_part[pg.part_of_vertex]
-    counts = np.bincount(dev_of_vertex, minlength=d_n)
-    n_pad = max(1, int(counts.max()))
 
-    # device-major vertex permutation (vertex ids ascending within a device)
-    pos_of_vertex = np.empty(n, dtype=np.int64)
-    vertex_of_pos = np.full(d_n * n_pad, -1, dtype=np.int64)
-    part_of_pos = np.zeros((d_n, n_pad), dtype=np.int32)
-    pos_valid = np.zeros((d_n, n_pad), dtype=bool)
-    for d in range(d_n):
-        verts = np.flatnonzero(dev_of_vertex == d)
+    # pad shapes from the cached per-partition counts (O(P), no edge scans)
+    nv_dev = np.array([slices.nv[q].sum() for q in parts_of_dev])
+    nl_dev = np.array([slices.nl[q].sum() for q in parts_of_dev])
+    nr_dev = np.array([slices.nr[q].sum() for q in parts_of_dev])
+    n_pad = max(1, int(nv_dev.max()))
+    e_local_pad = max(1, int(nl_dev.max()))
+    e_remote_pad = max(1, int(nr_dev.max()))
+
+    # -- which devices must be rebuilt ---------------------------------------
+    all_devs = np.ones(d_n, dtype=bool)
+    if base is None or (n_pad, e_local_pad, e_remote_pad) != (
+        base.n_pad, base.e_local_pad, base.e_remote_pad
+    ):
+        vert_aff = src_aff = all_devs
+        base = None
+    else:
+        moved = np.flatnonzero(base.device_of_part != device_of_part)
+        changed = np.zeros(d_n, dtype=bool)
+        changed[base.device_of_part[moved]] = True
+        changed[device_of_part[moved]] = True
+        vert_aff = changed
+        # parts whose device-local rows may have shifted = parts hosted on a
+        # changed device; src devices reaching any of them re-sort and re-slot
+        j_shift = changed[device_of_part]  # [P] bool
+        sends_into_shifted = slices.reach[:, j_shift].any(axis=1)  # [P]
+        src_aff = changed.copy()
+        for d in range(d_n):
+            if not src_aff[d] and sends_into_shifted[parts_of_dev[d]].any():
+                src_aff[d] = True
+
+    # -- vertex plane: device-major permutation ------------------------------
+    if base is None:
+        pos_of_vertex = np.empty(n, dtype=np.int64)
+        vertex_of_pos = np.full(d_n * n_pad, -1, dtype=np.int64)
+        part_of_pos = np.zeros((d_n, n_pad), dtype=np.int32)
+        pos_valid = np.zeros((d_n, n_pad), dtype=bool)
+    else:
+        pos_of_vertex = base.pos_of_vertex.copy()
+        vertex_of_pos = base.vertex_of_pos.copy()
+        part_of_pos = base.part_of_pos.copy()
+        pos_valid = base.pos_valid.copy()
+    def _dev_sel(groups: list, d: int) -> np.ndarray:
+        """Ascending union of the device's per-partition index slices --
+        identical to the full ``flatnonzero`` scan of the scratch build."""
+        if not parts_of_dev[d].size:
+            return np.empty(0, np.int64)
+        return np.sort(np.concatenate([groups[i] for i in parts_of_dev[d]]))
+
+    for d in np.flatnonzero(vert_aff):
+        verts = _dev_sel(slices.verts, d)
         pos_of_vertex[verts] = d * n_pad + np.arange(verts.size)
         vertex_of_pos[d * n_pad : d * n_pad + verts.size] = verts
+        vertex_of_pos[d * n_pad + verts.size : (d + 1) * n_pad] = -1
+        part_of_pos[d] = 0
         part_of_pos[d, : verts.size] = pg.part_of_vertex[verts]
+        pos_valid[d] = False
         pos_valid[d, : verts.size] = True
 
     # -- local edges: filter per device, renumber to device-local rows -------
     loc = layout.local
-    ldev = dev_of_vertex[loc.dst]  # == dev_of_vertex[loc.src] (same partition)
-    lcounts = np.bincount(ldev, minlength=d_n) if loc.n_edges else np.zeros(d_n, int)
-    e_local_pad = max(1, int(lcounts.max()) if loc.n_edges else 1)
-    lsrc = np.zeros((d_n, e_local_pad), dtype=np.int32)
-    ldst = np.full((d_n, e_local_pad), n_pad - 1, dtype=np.int32)
-    lw = np.zeros((d_n, e_local_pad), dtype=np.float32)
-    lpart = np.zeros((d_n, e_local_pad), dtype=np.int32)
-    lvalid = np.zeros((d_n, e_local_pad), dtype=bool)
-    l_eid = np.zeros((d_n, e_local_pad), dtype=np.int64)
-    for d in range(d_n):
-        sel = np.flatnonzero(ldev == d)  # preserves global dst-ascending order
+    if base is None:
+        lsrc = np.zeros((d_n, e_local_pad), dtype=np.int32)
+        ldst = np.full((d_n, e_local_pad), n_pad - 1, dtype=np.int32)
+        lw = np.zeros((d_n, e_local_pad), dtype=np.float32)
+        lpart = np.zeros((d_n, e_local_pad), dtype=np.int32)
+        lvalid = np.zeros((d_n, e_local_pad), dtype=bool)
+        l_eid = np.zeros((d_n, e_local_pad), dtype=np.int64)
+    else:
+        lsrc = base.lsrc.copy()
+        ldst = base.ldst.copy()
+        lw = base.lw.copy()
+        lpart = base.lpart.copy()
+        lvalid = base.lvalid.copy()
+        l_eid = base.l_eid.copy()
+    for d in np.flatnonzero(vert_aff):
+        sel = _dev_sel(slices.lsel, d)  # ascending rows == global dst order
         m = sel.size
+        lsrc[d] = 0
+        ldst[d] = n_pad - 1
+        lw[d] = 0.0
+        lpart[d] = 0
+        lvalid[d] = False
+        l_eid[d] = 0
         lsrc[d, :m] = pos_of_vertex[loc.src[sel]] - d * n_pad
         ldst[d, :m] = pos_of_vertex[loc.dst[sel]] - d * n_pad
         lw[d, :m] = loc.weights[sel]
@@ -164,41 +328,72 @@ def mesh_edge_layout(
 
     # -- remote edges: (src_device, dst_device) blocks + wire slots ----------
     rem = layout.remote
-    sdev = dev_of_vertex[rem.src]
     ddev = dev_of_vertex[rem.dst]
     remote_block_edges = np.zeros((d_n, d_n), dtype=np.int64)
     wire_slots = np.zeros((d_n, d_n), dtype=np.int64)
+    if base is not None:
+        keep = ~src_aff
+        remote_block_edges[keep] = base.remote_block_edges[keep]
+        wire_slots[keep] = base.wire_slots[keep]
     # first pass: per-block raw and distinct-dst counts fix the pad shapes
-    per_dev: list[tuple[np.ndarray, np.ndarray, np.ndarray]] = []
-    for d in range(d_n):
-        sel = np.flatnonzero(sdev == d)
-        order = np.lexsort((rem.dst[sel], ddev[sel]))
-        sel = sel[order]  # (dst_device, dst_vertex)-sorted
-        bd = ddev[sel]
-        key_dd = bd.astype(np.int64) * n + rem.dst[sel]
-        uniq, inv = (
-            np.unique(key_dd, return_inverse=True)
-            if sel.size
-            else (np.empty(0, np.int64), np.empty(0, np.int64))
-        )
-        np.add.at(remote_block_edges[d], bd, 1)
-        u_dd = (uniq // n).astype(np.int64)
-        np.add.at(wire_slots[d], u_dd, 1)
-        per_dev.append((sel, uniq, inv))
-    e_remote_pad = max(1, int(remote_block_edges.sum(axis=1).max()))
-    w_pad = max(1, int(wire_slots.max()))
+    per_dev: dict[int, tuple[np.ndarray, np.ndarray, np.ndarray]] = {}
 
-    rsrc = np.zeros((d_n, e_remote_pad), dtype=np.int32)
-    rw = np.zeros((d_n, e_remote_pad), dtype=np.float32)
-    rslot = np.full((d_n, e_remote_pad), d_n * w_pad - 1, dtype=np.int32)
-    rpart = np.zeros((d_n, e_remote_pad), dtype=np.int32)
-    rvalid = np.zeros((d_n, e_remote_pad), dtype=bool)
-    r_eid = np.zeros((d_n, e_remote_pad), dtype=np.int64)
-    recv_idx = np.zeros((d_n, d_n, w_pad), dtype=np.int32)
+    def _first_pass(devs: np.ndarray) -> None:
+        for d in devs:
+            sel = _dev_sel(slices.rsel, d)
+            order = np.lexsort((rem.dst[sel], ddev[sel]))
+            sel = sel[order]  # (dst_device, dst_vertex)-sorted
+            bd = ddev[sel]
+            key_dd = bd.astype(np.int64) * n + rem.dst[sel]
+            uniq, inv = (
+                np.unique(key_dd, return_inverse=True)
+                if sel.size
+                else (np.empty(0, np.int64), np.empty(0, np.int64))
+            )
+            remote_block_edges[d] = 0
+            np.add.at(remote_block_edges[d], bd, 1)
+            u_dd = (uniq // n).astype(np.int64)
+            wire_slots[d] = 0
+            np.add.at(wire_slots[d], u_dd, 1)
+            per_dev[int(d)] = (sel, uniq, inv)
+
+    _first_pass(np.flatnonzero(src_aff))
+    w_pad = max(1, int(wire_slots.max()))
+    if base is not None and w_pad != base.w_pad:
+        # slot encoding (dd * w_pad + rank) is global: a w_pad change
+        # invalidates every block -- degrade to the from-scratch path
+        base = None
+        vert_aff = src_aff = all_devs
+        _first_pass(np.flatnonzero(~np.isin(np.arange(d_n), list(per_dev))))
+
+    rebuilt = np.flatnonzero(src_aff | vert_aff)
+    if base is None:
+        rsrc = np.zeros((d_n, e_remote_pad), dtype=np.int32)
+        rw = np.zeros((d_n, e_remote_pad), dtype=np.float32)
+        rslot = np.full((d_n, e_remote_pad), d_n * w_pad - 1, dtype=np.int32)
+        rpart = np.zeros((d_n, e_remote_pad), dtype=np.int32)
+        rvalid = np.zeros((d_n, e_remote_pad), dtype=bool)
+        r_eid = np.zeros((d_n, e_remote_pad), dtype=np.int64)
+        recv_idx = np.zeros((d_n, d_n, w_pad), dtype=np.int32)
+    else:
+        rsrc = base.rsrc.copy()
+        rw = base.rw.copy()
+        rslot = base.rslot.copy()
+        rpart = base.rpart.copy()
+        rvalid = base.rvalid.copy()
+        r_eid = base.r_eid.copy()
+        recv_idx = base.recv_idx.copy()
     part32 = pg.part_of_vertex.astype(np.int32)
-    for d in range(d_n):
-        sel, uniq, inv = per_dev[d]
+    for d in np.flatnonzero(src_aff):
+        sel, uniq, inv = per_dev[int(d)]
         m = sel.size
+        rsrc[d] = 0
+        rw[d] = 0.0
+        rslot[d] = d_n * w_pad - 1
+        rpart[d] = 0
+        rvalid[d] = False
+        r_eid[d] = 0
+        recv_idx[:, d, :] = 0
         if m:
             u_dd = (uniq // n).astype(np.int64)
             u_dst = (uniq % n).astype(np.int64)
@@ -246,7 +441,11 @@ def mesh_edge_layout(
         wire_slots=wire_slots,
         remote_block_edges=remote_block_edges,
     )
-    cache[key] = out
+    out.__dict__["_build_info"] = {
+        "incremental": base is not None,
+        "devices_rebuilt": int(rebuilt.size),
+        "devices_total": d_n,
+    }
     return out
 
 

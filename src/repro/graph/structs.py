@@ -80,6 +80,20 @@ class CsrEdgeLayout:
         return cached[key]
 
 
+def mesh_layout_key(device_of_part: np.ndarray, n_devices: int) -> tuple:
+    """Canonical cache key of a mesh layout: ``n_devices`` plus the *coerced*
+    partition -> device map's shape, dtype, and bytes.
+
+    Computed after the int32 coercion every consumer goes through, so callers
+    passing the same placement with different dtypes (an int64 plan row vs an
+    int32 stored map) hit one entry -- while ``tobytes()`` of the uncoerced
+    array (the dtype/shape-blind key this replaces) would let two different
+    maps alias one buffer and serve a stale layout under dynamic re-layout.
+    """
+    coerced = np.ascontiguousarray(device_of_part, dtype=np.int32)
+    return (int(n_devices), coerced.shape, coerced.dtype.str, coerced.tobytes())
+
+
 @dataclasses.dataclass(frozen=True)
 class MeshEdgeLayout:
     """Static mesh-aware extension of ``CsrEdgeLayout`` (one per device map).
@@ -157,6 +171,12 @@ class MeshEdgeLayout:
     def state_width(self) -> int:
         """Width of the sharded state axis: ``n_devices * n_pad``."""
         return self.n_devices * self.n_pad
+
+    @property
+    def layout_key(self) -> tuple:
+        """This layout's canonical cache key (``mesh_layout_key`` of its own
+        map) -- what the mesh program's per-layout const/jit caches hash."""
+        return mesh_layout_key(self.device_of_part, self.n_devices)
 
     # -- shared state indexing (one implementation for dense + mesh) ---------
 

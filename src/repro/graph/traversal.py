@@ -546,17 +546,44 @@ class TraversalEngine:
             jnp.zeros((s_batch,), jnp.int32),
         )
 
-    def run_window(self, state: WindowState, k: int) -> WindowResult:
+    @property
+    def device_of_part(self) -> np.ndarray | None:
+        """The *active* partition -> device map (mesh mode; None dense).
+
+        This is the compute placement the next window will run on -- dynamic
+        re-layout (``run_window(..., device_of_part=...)``) changes it
+        between windows."""
+        if self._mesh_prog is not None:
+            return self._mesh_prog.layout.device_of_part
+        return None
+
+    def run_window(
+        self,
+        state: WindowState,
+        k: int,
+        *,
+        device_of_part: np.ndarray | None = None,
+    ) -> WindowResult:
         """Run up to ``k`` more supersteps from ``state`` in one device launch.
 
         Sources whose frontier empties mid-window simply stop contributing
         counter rows (no convergence raise -- check ``done``).  The returned
         counters are the window's ONE bulk host transfer; carried
         dist/frontier stay on device in ``.state``.
+
+        ``device_of_part`` (mesh mode) re-lays the *compute* out before the
+        launch: the engine swaps to the matching ``MeshEdgeLayout``
+        (incrementally rebuilt, consts/jit LRU-cached) and the carried state
+        is remapped exactly (``mesh_exchange.relayout_state``), so results
+        stay bit-identical to a static-layout run while the work executes on
+        the requested devices.  The dense path has a single device and
+        ignores the override.
         """
         k = int(k)
         if k < 1:
             raise ValueError(f"window size must be >= 1, got {k}")
+        if device_of_part is not None and self._mesh_prog is not None:
+            state, _ = self._mesh_prog.ensure_layout(state, device_of_part)
         res, pact, done = self._launch(
             state.dist, state.frontier, state.n_supersteps, k
         )

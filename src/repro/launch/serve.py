@@ -23,7 +23,6 @@ from repro.models.transformer import (
     init_lm_cache,
     init_lm_params,
     lm_decode_step,
-    lm_forward,
 )
 
 

@@ -14,7 +14,6 @@ of 512 so every sharded axis divides the mesh (runtime pads identically).
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable
 
 import jax
@@ -35,8 +34,6 @@ from repro.models.transformer import (
     init_lm_cache,
     init_lm_params,
     lm_decode_step,
-    lm_forward,
-    lm_loss,
 )
 from repro.optim import AdamWConfig, adamw_init, adamw_update
 

@@ -18,8 +18,6 @@ implementations).  Router options: softmax-over-top-k renormalization
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 

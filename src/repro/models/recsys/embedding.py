@@ -11,7 +11,6 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.models.common import init_dense
 
 
 def init_embedding_tables(key, n_fields: int, vocab: int, dim: int, dtype=jnp.float32):

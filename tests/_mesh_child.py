@@ -2,6 +2,14 @@
 ``mesh_subprocess`` fixture with XLA_FLAGS forcing 8 host devices).
 
 Asserts, under real 8-device execution:
+  * dynamic re-layout equivalence: runs with forced mid-traversal
+    ``device_of_part`` swaps (ragged P=5, D in {2, 8}) keep counters
+    bit-identical to the static-layout run for BFS *and* PageRank shapes,
+    with state bit-identical for the monotone program and rounding-equal for
+    the stationary one (float sums reassociate across layouts, same
+    convention as the dense-vs-mesh checks), and the executor's
+    ``relayout=True`` reproduces the static run's dist / executed tau /
+    billed economics exactly while residency tracks the planned devices,
   * engine equivalence: ``TraversalEngine(mesh=partition_mesh(D))`` produces
     bit-identical dist and ``[S, m_max, P]`` counters vs the dense engine
     for D in {1, 2, 8}, on an R-MAT and an Erdos-Renyi graph -- including
@@ -210,6 +218,91 @@ for k in WINDOWS:
         np.asarray(state.n_supersteps), dense.n_supersteps
     )
     print(f"mesh windowed chaining k={k}: OK")
+
+# -- dynamic re-layout: forced mid-traversal device_of_part swaps ------------
+# the compute layout changes every window; dist/counters must not notice.
+
+
+def run_with_swaps(pgx, prog, srcs, d_n, swap_seq, k=2):
+    """Windowed run forcing a different device_of_part each window."""
+    eng = TraversalEngine(
+        pgx, program=prog, m_max=M_MAX, mesh=partition_mesh(d_n)
+    )
+    state = eng.init_state(srcs)
+    chunks = []
+    for i in range(M_MAX):
+        w = eng.run_window(state, k, device_of_part=swap_seq[i % len(swap_seq)])
+        state = w.state
+        chunks.append(w)
+        if w.done.all():
+            break
+    assert chunks[-1].done.all()
+    we = np.concatenate([c.edges_examined for c in chunks], axis=1)
+    wv = np.concatenate([c.verts_processed for c in chunks], axis=1)
+    ms = np.concatenate([c.msgs_sent for c in chunks], axis=1)
+    return eng, state, we, wv, ms
+
+
+rng = np.random.default_rng(11)
+for prog_name, prog, state_exact in (
+    ("bfs-shape", SsspProgram(), True),
+    ("pagerank-shape", PageRankProgram(num_iters=12), False),
+):
+    sources = [0] if prog.stationary else srcs
+    for d_n in (2, 8):
+        base = get_engine(
+            pg5, program=prog, m_max=M_MAX, mesh=partition_mesh(d_n)
+        ).run(sources)
+        swap_seq = [
+            np.arange(5, dtype=np.int32) % d_n,
+            (np.arange(5, dtype=np.int32)[::-1] % d_n).copy(),
+            rng.integers(0, d_n, size=5).astype(np.int32),
+        ]
+        eng, state, we, wv, ms = run_with_swaps(
+            pg5, prog, sources, d_n, swap_seq
+        )
+        m = we.shape[1]
+        np.testing.assert_array_equal(we, base.edges_examined[:, :m])
+        np.testing.assert_array_equal(wv, base.verts_processed[:, :m])
+        np.testing.assert_array_equal(ms, base.msgs_sent[:, :m])
+        np.testing.assert_array_equal(
+            np.asarray(state.n_supersteps), base.n_supersteps
+        )
+        assert_state(
+            eng.gather_global(np.asarray(state.dist)), base.dist, state_exact,
+            err_msg=f"relayout {prog_name} D={d_n} dist",
+        )
+        print(f"relayout {prog_name} D={d_n}: swapped layouts, same results")
+
+# -- executor dynamic re-layout: identical economics, planned residency ------
+for name, pg_x in graphs.items():
+    _, trace = run_sssp(pg_x, 0)
+    plan = ffd_placement(TimeFunction.from_trace(trace))
+    swapped_any = 0
+    for d_n in (2, 8):
+        mesh = partition_mesh(d_n)
+        rep_s = ElasticBSPExecutor(pg_x, mesh=mesh).run(0, plan, window=1)
+        rep_d = ElasticBSPExecutor(pg_x, mesh=mesh).run(
+            0, plan, window=1, relayout=True
+        )
+        np.testing.assert_array_equal(rep_d.dist, rep_s.dist)
+        np.testing.assert_array_equal(rep_d.actual_tau.tau, rep_s.actual_tau.tau)
+        assert rep_d.cost.migration_secs == rep_s.cost.migration_secs
+        assert rep_d.cost.cost_quanta == rep_s.cost.cost_quanta
+        assert rep_d.cost.makespan == rep_s.cost.makespan
+        assert rep_d.n_migrations == rep_s.n_migrations
+        # every placed partition computes on its planned device, every window
+        for w in range(min(rep_d.residency.shape[0], plan.vm_of.shape[0])):
+            row = plan.vm_of[w]
+            placed = row >= 0
+            np.testing.assert_array_equal(
+                rep_d.residency[w][placed],
+                row[placed] % d_n,
+                err_msg=f"{name} D={d_n} window {w}: residency off-plan",
+            )
+        swapped_any += rep_d.relayouts
+    assert swapped_any > 0, f"{name}: relayout executor never swapped a layout"
+    print(f"executor relayout {name}: billing identical, residency on-plan")
 
 # -- executor equivalence across mesh sizes ----------------------------------
 for name, pg in graphs.items():

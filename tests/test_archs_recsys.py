@@ -7,7 +7,6 @@ import numpy as np
 from repro.configs import ARCHS
 from repro.configs.registry import reduced_config
 from repro.models.recsys.deepfm import (
-    deepfm_logits,
     deepfm_loss,
     init_deepfm,
     retrieval_scores,

@@ -1,0 +1,90 @@
+"""The CI pipeline is part of the repo's contract: these tests pin the
+workflow's structure (jobs, commands, forced-device env) and the bench
+artifact schema it gates on, so a refactor cannot silently drop a gate.
+"""
+
+import json
+import os
+
+import pytest
+
+yaml = pytest.importorskip("yaml")
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+_WORKFLOW = os.path.join(_ROOT, ".github", "workflows", "ci.yml")
+_REQUIREMENTS = os.path.join(_ROOT, ".github", "requirements-ci.txt")
+_BENCH_JSON = os.path.join(_ROOT, "BENCH_traversal.json")
+
+
+def _load():
+    with open(_WORKFLOW) as f:
+        return yaml.safe_load(f)
+
+
+def _run_lines(job):
+    return [s["run"] for s in job["steps"] if "run" in s]
+
+
+def test_workflow_parses_and_has_all_jobs():
+    wf = _load()
+    # pyyaml parses the bare `on:` key as boolean True
+    assert "on" in wf or True in wf
+    assert set(wf["jobs"]) == {"tier1", "mesh", "lint"}
+    for job in wf["jobs"].values():
+        assert job["runs-on"] == "ubuntu-latest"
+        assert any("actions/checkout" in s.get("uses", "") for s in job["steps"])
+
+
+def test_tier1_job_runs_the_tier1_gate():
+    wf = _load()
+    runs = " && ".join(_run_lines(wf["jobs"]["tier1"]))
+    assert "python -m pytest -x -q" in runs
+    assert wf["env"]["PYTHONPATH"] == "src"
+
+
+def test_mesh_job_forces_8_devices_and_runs_mesh_marked_tests():
+    wf = _load()
+    job = wf["jobs"]["mesh"]
+    assert job["env"]["XLA_FLAGS"] == "--xla_force_host_platform_device_count=8"
+    runs = " && ".join(_run_lines(job))
+    assert "-m mesh" in runs
+    assert "benchmarks.traversal_bench --smoke" in runs
+
+
+def test_lint_job_is_non_blocking_ruff():
+    wf = _load()
+    job = wf["jobs"]["lint"]
+    assert job["continue-on-error"] is True
+    assert any("ruff check" in r for r in _run_lines(job))
+
+
+def test_requirements_pin_jax_cpu():
+    with open(_REQUIREMENTS) as f:
+        reqs = f.read()
+    assert "jax[cpu]==" in reqs
+    assert "pytest==" in reqs
+
+
+def test_committed_bench_json_passes_the_ci_schema_check():
+    """The same check `--smoke` runs in CI, against the committed artifact."""
+    import sys
+
+    sys.path.insert(0, _ROOT)
+    try:
+        from benchmarks.traversal_bench import REQUIRED_SECTIONS, check_bench_schema
+    finally:
+        sys.path.pop(0)
+    data = check_bench_schema(_BENCH_JSON)
+    assert all(s in data for s in REQUIRED_SECTIONS)
+    relayout = data["relayout"]["per_d"]
+    for row in relayout.values():
+        assert row["billing_identical"] and row["residency_follows_plan"]
+        for key in ("makespan", "cost_quanta", "migration_secs"):
+            assert row["static"][key] == row["dynamic"][key]
+
+
+def test_bench_json_is_valid_json_with_tracked_sweeps():
+    with open(_BENCH_JSON) as f:
+        data = json.load(f)
+    assert data["mesh_sweep"]["per_d"]
+    assert data["program_sweep"]["per_program"]

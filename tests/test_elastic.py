@@ -168,3 +168,20 @@ def test_moves_scheduled_past_convergence_are_not_counted():
     assert rep.cost.migration_secs == pytest.approx(
         rep.migration_bytes / ex.billing.move_bandwidth
     )
+
+
+def test_relayout_is_noop_on_the_dense_path():
+    """relayout=True without a mesh engine must change nothing: one device
+    does all the work, so there is no compute layout to follow the plan."""
+    g = erdos_renyi_graph(300, 4.0, seed=6)
+    pg = bfs_grow_partition(g, 4, seed=1)
+    _, trace = run_sssp(pg, 0)
+    plan = ffd_placement(TimeFunction.from_trace(trace))
+    ex = ElasticBSPExecutor(pg)
+    base = ex.run(0, plan, window=2)
+    rep = ex.run(0, plan, window=2, relayout=True)
+    np.testing.assert_array_equal(rep.dist, base.dist)
+    np.testing.assert_array_equal(rep.actual_tau.tau, base.actual_tau.tau)
+    assert rep.relayouts == 0
+    assert rep.device_moves == base.device_moves
+    assert rep.cost.migration_secs == base.cost.migration_secs

@@ -8,9 +8,8 @@ import subprocess
 import sys
 
 import numpy as np
-import pytest
 
-from repro.dist.halo import build_halo_plan, scatter_nodes
+from repro.dist.halo import build_halo_plan
 from repro.graph import bfs_grow_partition, erdos_renyi_graph
 
 _MULTI_DEVICE_SCRIPT = r"""

@@ -9,6 +9,7 @@ cross-program dense-vs-mesh equivalence for weighted SSSP / WCC / PageRank
 through the VertexProgram API, and the wire-message reduction).
 """
 
+import dataclasses
 import os
 
 import numpy as np
@@ -17,15 +18,22 @@ import pytest
 from repro.core.placement import Placement
 from repro.dist.sharding import partition_mesh
 from repro.graph.generators import erdos_renyi_graph
+from repro.graph.mesh_exchange import relayout_rows, relayout_state
 from repro.graph.partition import (
     bfs_grow_partition,
     contiguous_device_map,
     mesh_edge_layout,
     partitioned_edge_layout,
 )
-from repro.graph.traversal import TraversalEngine, get_engine
+from repro.graph.structs import PartitionedGraph, mesh_layout_key
+from repro.graph.traversal import TraversalEngine, WindowState, get_engine
 
 _CHILD = os.path.join(os.path.dirname(__file__), "_mesh_child.py")
+
+
+def _fresh_pg(pg: PartitionedGraph) -> PartitionedGraph:
+    """Same graph/partition, no instance caches (forces from-scratch builds)."""
+    return PartitionedGraph(pg.graph, pg.n_parts, pg.part_of_vertex)
 
 
 # -- host-side layout invariants (no devices needed) -------------------------
@@ -113,6 +121,144 @@ def test_placement_device_row_bridges_vms_to_mesh():
     p = Placement("x", np.ones((1, 4)), vm_of)
     np.testing.assert_array_equal(p.device_row(0, 4), [0, 3, -1, 1])
     np.testing.assert_array_equal(p.device_row(0, 1), [0, 0, -1, 0])
+
+
+# -- dynamic re-layout: host-side pieces --------------------------------------
+
+
+def test_layout_cache_key_covers_dtype_shape_and_devices():
+    """The canonical key must unify dtype variants of the same map and
+    separate maps whose raw buffers coincide."""
+    m32 = np.array([0, 1, 0, 1], dtype=np.int32)
+    assert mesh_layout_key(m32, 2) == mesh_layout_key(m32.astype(np.int64), 2)
+    assert mesh_layout_key(m32, 2) != mesh_layout_key(m32, 4)
+    # an int64 map and the different int32 map sharing its buffer must get
+    # distinct keys (the pre-coercion tobytes() aliasing the fix closes)
+    m64 = np.array([1, 1], dtype=np.int64)
+    aliased = np.frombuffer(m64.tobytes(), dtype=np.int32)
+    assert m64.tobytes() == aliased.tobytes()
+    assert mesh_layout_key(m64, 2) != mesh_layout_key(aliased, 2)
+
+    g = erdos_renyi_graph(200, 3.0, seed=3)
+    pg = bfs_grow_partition(g, 4, seed=1)
+    a = mesh_edge_layout(pg, np.array([0, 1, 0, 1], np.int64), 2)
+    b = mesh_edge_layout(pg, np.array([0, 1, 0, 1], np.int32), 2)
+    assert a is b  # dtype-canonicalized hit
+    c = mesh_edge_layout(pg, np.array([0, 1, 1, 0], np.int32), 2)
+    assert c is not a  # different map, different layout
+
+
+@pytest.mark.parametrize("n_parts,n_dev", [(5, 2), (5, 8), (8, 4)])
+def test_incremental_rebuild_matches_from_scratch(n_parts, n_dev):
+    """Every field of an incrementally rebuilt layout is byte-identical to
+    the canonical from-scratch build of the same map."""
+    g = erdos_renyi_graph(350, 4.0, seed=9)
+    pg = bfs_grow_partition(g, n_parts, seed=2)
+    rng = np.random.default_rng(4)
+    base = contiguous_device_map(n_parts, n_dev)
+    mesh_edge_layout(pg, base, n_dev)  # seed the incremental base
+    saw_incremental = False
+    for _ in range(8):
+        m = base.copy()
+        idx = rng.choice(n_parts, size=int(rng.integers(1, 3)), replace=False)
+        m[idx] = rng.integers(0, n_dev, size=idx.size)
+        inc = mesh_edge_layout(pg, m, n_dev)  # auto-incremental
+        scratch = mesh_edge_layout(_fresh_pg(pg), m, n_dev)
+        for f in dataclasses.fields(scratch):
+            a, b = getattr(inc, f.name), getattr(scratch, f.name)
+            if isinstance(a, np.ndarray):
+                np.testing.assert_array_equal(a, b, err_msg=f.name)
+            else:
+                assert a == b, f.name
+        saw_incremental |= inc.__dict__["_build_info"]["incremental"]
+    # the incremental path may legitimately degrade to from-scratch when pad
+    # shapes move; equality above is the contract either way.  Reuse under
+    # guaranteed-stable pads is asserted separately below.
+
+
+def _ring_of_partitions(p: int = 8, per: int = 10) -> PartitionedGraph:
+    """p partitions of ``per`` vertices each: a chain inside every partition
+    plus one remote edge to the next partition -- banded partition
+    reachability, one partition per device, every pad shape permutation-
+    stable (the guaranteed-incremental regime)."""
+    import numpy as np
+
+    from repro.graph.structs import Graph
+
+    n = p * per
+    src, dst = [], []
+    for i in range(p):
+        lo = i * per
+        src += list(range(lo, lo + per - 1))
+        dst += list(range(lo + 1, lo + per))
+        src.append(lo + per - 1)
+        dst.append(((i + 1) % p) * per)
+    g = Graph(n, np.array(src, np.int32), np.array(dst, np.int32))
+    return PartitionedGraph(g, p, np.repeat(np.arange(p, dtype=np.int32), per))
+
+
+def test_incremental_rebuild_reuses_untouched_devices():
+    """Swapping two partitions between two devices must not rebuild devices
+    no moved/shifted partition touches (ring reachability: only the swapped
+    devices and their ring predecessors are affected)."""
+    pg = _ring_of_partitions()
+    base = contiguous_device_map(8, 8)
+    l0 = mesh_edge_layout(pg, base, 8)
+    m = base.copy()
+    m[0], m[1] = base[1], base[0]
+    lay = mesh_edge_layout(pg, m, 8)
+    info = lay.__dict__["_build_info"]
+    assert info["incremental"], "pad-stable swap must take the incremental path"
+    assert info["devices_rebuilt"] < info["devices_total"]
+    # and still byte-identical to the canonical build
+    scratch = mesh_edge_layout(_fresh_pg(pg), m, 8)
+    for f in dataclasses.fields(scratch):
+        a, b = getattr(lay, f.name), getattr(scratch, f.name)
+        if isinstance(a, np.ndarray):
+            np.testing.assert_array_equal(a, b, err_msg=f.name)
+    assert l0 is mesh_edge_layout(pg, base, 8)  # base still cached
+
+
+def test_relayout_state_round_trips_exactly():
+    """A -> B -> A remap of padded dist/frontier shards is bit-identical,
+    and the represented global state is preserved through B."""
+    g = erdos_renyi_graph(300, 4.0, seed=5)
+    pg = bfs_grow_partition(g, 5, seed=2)
+    lay_a = mesh_edge_layout(pg, np.array([0, 1, 0, 1, 1], np.int32), 2)
+    lay_b = mesh_edge_layout(pg, np.array([1, 0, 0, 1, 0], np.int32), 2)
+    rng = np.random.default_rng(0)
+    n = g.n_vertices
+    dist_g = rng.random((3, n)).astype(np.float32)
+    fr_g = rng.random((3, n)) < 0.3
+
+    dist_a = np.full((3, lay_a.state_width), np.inf, np.float32)
+    dist_a[:, lay_a.pos_of_vertex] = dist_g
+    fr_a = np.zeros((3, lay_a.state_width), bool)
+    fr_a[:, lay_a.pos_of_vertex] = fr_g
+    state_a = WindowState(dist_a, fr_a, np.zeros(3, np.int32))
+
+    state_b = relayout_state(lay_a, lay_b, state_a, identity=np.float32(np.inf))
+    # global content preserved through B (padding rows carry the identity)
+    np.testing.assert_array_equal(lay_b.gather_global(state_b.dist), dist_g)
+    np.testing.assert_array_equal(lay_b.gather_global(state_b.frontier), fr_g)
+    assert np.isinf(np.asarray(state_b.dist)[:, ~lay_b.pos_valid.reshape(-1)]).all()
+    assert not np.asarray(state_b.frontier)[:, ~lay_b.pos_valid.reshape(-1)].any()
+
+    back = relayout_state(lay_b, lay_a, state_b, identity=np.float32(np.inf))
+    np.testing.assert_array_equal(np.asarray(back.dist), dist_a)
+    np.testing.assert_array_equal(np.asarray(back.frontier), fr_a)
+    np.testing.assert_array_equal(
+        np.asarray(back.n_supersteps), state_a.n_supersteps
+    )
+
+
+def test_relayout_rows_rejects_mismatched_graphs():
+    g1 = erdos_renyi_graph(100, 3.0, seed=1)
+    g2 = erdos_renyi_graph(120, 3.0, seed=1)
+    la = mesh_edge_layout(bfs_grow_partition(g1, 3, seed=1), np.array([0, 1, 0], np.int32), 2)
+    lb = mesh_edge_layout(bfs_grow_partition(g2, 3, seed=1), np.array([0, 1, 0], np.int32), 2)
+    with pytest.raises(ValueError, match="n_vertices"):
+        relayout_rows(la, lb, np.zeros((1, la.state_width), np.float32), 0.0)
 
 
 # -- single-device fallback (runs on the real 1-CPU pytest process) ----------

@@ -4,7 +4,6 @@ import numpy as np
 
 from repro.core.metagraph import (
     build_metagraph,
-    meta_bfs_levels,
     predict_schedule,
     predict_time_function,
 )

@@ -6,7 +6,6 @@ sizes -- including the ``presorted=True`` legacy path and n/e odd with
 respect to the block sizes.
 """
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
