@@ -44,11 +44,21 @@ pays real remap bytes the static layout doesn't), re-layout count, and the
 residency-follows-plan check.  ``--relayout`` alone merges just this sweep
 into an existing ``BENCH_traversal.json``.
 
+The ``--kernel-path`` sweep (also part of the full run) times the dense
+engine per program under ``backend="xla"`` vs ``backend="pallas-interpret"``
+(the block-skipping relax kernels through the Pallas interpreter -- the CPU
+parity mode, expected slower than XLA here) and asserts backend parity per
+row; projected TPU per-call cost comes from ``benchmarks.kernel_bench``'s
+roofline model and is attached to the section.  ``--kernel-path`` alone
+merges just this sweep into an existing ``BENCH_traversal.json``.
+
 ``--smoke`` is the CI gate: on a tiny graph it asserts the wire-savings and
-elastic-vs-static invariants (plus relayout bit-identity) in a short
-forced-device child, and schema-checks the *committed*
-``BENCH_traversal.json`` (parses; has the ``mesh_sweep`` /
-``program_sweep`` / ``relayout`` sections) -- without rewriting the file.
+elastic-vs-static invariants (plus relayout bit-identity and xla vs
+pallas-interpret mesh parity) in a short forced-device child, and
+schema-checks the *committed* ``BENCH_traversal.json`` (parses; has the
+``mesh_sweep`` / ``program_sweep`` / ``relayout`` / ``kernel_path``
+sections, with every kernel-path row recording ``parity_ok``) -- without
+rewriting the file.
 
 Writes ``BENCH_traversal.json`` so the perf trajectory is tracked per PR.
 """
@@ -85,7 +95,7 @@ MESH_FORCED_DEVICES = 8
 PAGERANK_ITERS = 20
 OUT_PATH = "BENCH_traversal.json"
 #: sections the committed JSON must carry (CI schema check)
-REQUIRED_SECTIONS = ("mesh_sweep", "program_sweep", "relayout")
+REQUIRED_SECTIONS = ("mesh_sweep", "program_sweep", "relayout", "kernel_path")
 
 
 def _bench_programs():
@@ -315,6 +325,105 @@ def _program_sweep() -> dict:
     }
 
 
+def _kernel_path_sweep() -> dict:
+    """Compute-backend sweep on the dense engine: per builtin program, wall
+    time and parity of ``backend="pallas-interpret"`` (the block-skipping
+    relax kernels through the Pallas interpreter) against ``backend="xla"``
+    (the segment-op default).
+
+    The interpreter is a semantics check, not a speed path -- on CPU it is
+    expected to be *slower* than XLA; what a TPU run would pay is captured
+    by the roofline projections from ``benchmarks.kernel_bench`` attached as
+    ``roofline``.  ``parity_ok`` per row asserts bit-identical counters for
+    every program plus bit-identical state for min-programs (rounding-equal
+    for the float sum path).
+    """
+    from benchmarks.kernel_bench import run as kernel_bench_run
+    from repro.graph.traversal import get_engine
+
+    pg = _weighted_bench_pg()
+    rows = {}
+    for name, prog_proto in _bench_programs().items():
+        per_backend = {}
+        results = {}
+        for backend in ("xla", "pallas-interpret"):
+            prog = (
+                PageRankProgram(num_iters=PAGERANK_ITERS)
+                if name == "pagerank"
+                else BUILTIN_PROGRAMS[name]()
+            )
+            eng = get_engine(pg, program=prog, m_max=512, backend=backend)
+            eng.run([0])  # warm (compile)
+            t0 = time.perf_counter()
+            res = eng.run([0])
+            per_backend[backend] = time.perf_counter() - t0
+            results[backend] = res
+        rx, rk = results["xla"], results["pallas-interpret"]
+        counters_ok = all(
+            np.array_equal(np.asarray(getattr(rx, f)), np.asarray(getattr(rk, f)))
+            for f in (
+                "edges_examined", "verts_processed", "msgs_sent",
+                "inner_iters", "wire_msgs", "n_supersteps",
+            )
+        )
+        if prog_proto.reduce == "min":
+            state_ok = np.array_equal(np.asarray(rx.dist), np.asarray(rk.dist))
+        else:
+            state_ok = bool(
+                np.allclose(
+                    np.asarray(rk.dist), np.asarray(rx.dist),
+                    rtol=1e-5, atol=1e-9,
+                )
+            )
+        rows[name] = {
+            "xla_wall_s": per_backend["xla"],
+            "pallas_interpret_wall_s": per_backend["pallas-interpret"],
+            "supersteps": int(rx.n_supersteps.max()),
+            "parity_ok": bool(counters_ok and state_ok),
+        }
+        assert rows[name]["parity_ok"], f"kernel path parity broken: {name}"
+    return {
+        "graph": "weighted rmat",
+        "note": (
+            "pallas-interpret is the CPU parity mode (interpreter overhead "
+            "included); projected TPU cost per kernel call is in roofline"
+        ),
+        "per_program": rows,
+        "roofline": kernel_bench_run(verbose=False),
+    }
+
+
+def run_kernel_path_only(verbose: bool = True) -> dict:
+    """``--kernel-path``: compute just the backend sweep and merge it into an
+    existing ``BENCH_traversal.json`` (fresh file if none)."""
+    out = {}
+    if os.path.exists(OUT_PATH):
+        with open(OUT_PATH) as f:
+            out = json.load(f)
+    out["kernel_path"] = _kernel_path_sweep()
+    with open(OUT_PATH, "w") as f:
+        json.dump(out, f, indent=2)
+    if verbose:
+        _print_kernel_path_sweep(out["kernel_path"])
+        print(f"-> {OUT_PATH}")
+    return out
+
+
+def _print_kernel_path_sweep(sweep: dict) -> None:
+    for name, row in sweep["per_program"].items():
+        print(
+            f"kernel path {name}: xla {row['xla_wall_s']*1e3:.0f} ms vs "
+            f"pallas-interpret {row['pallas_interpret_wall_s']*1e3:.0f} ms "
+            f"over {row['supersteps']} supersteps, parity "
+            f"{'OK' if row['parity_ok'] else 'BROKEN'}"
+        )
+    for r in sweep["roofline"]:
+        print(
+            f"  roofline {r['name']}: {r['roofline_us']:.1f} us/call "
+            f"({r['bound']}-bound, {r['vmem_mib']:.2f} MiB VMEM)"
+        )
+
+
 def _relayout_run(pg, plan, mesh, *, relayout: bool, window: int = 8) -> dict:
     """One warmed elastic run; returns its ledger row (plus dist for the
     caller's bit-identity assert)."""
@@ -461,6 +570,19 @@ def _smoke_child() -> dict:
     wire, pre = int(res.wire_msgs.sum()), int(res.msgs_sent.sum())
     assert 0 < wire < pre, f"wire-savings violated: {wire} vs {pre}"
 
+    # kernel-backend parity invariant: the Pallas relax path (interpret
+    # mode) reproduces the XLA mesh run bit-for-bit on the tiny graph
+    res_k = get_engine(
+        pg, m_max=128, mesh=partition_mesh(SMOKE_DEVICES),
+        backend="pallas-interpret",
+    ).run([0])
+    assert np.array_equal(np.asarray(res_k.dist), np.asarray(res.dist)), (
+        "pallas-interpret mesh dist diverged from xla"
+    )
+    assert np.array_equal(
+        np.asarray(res_k.wire_msgs), np.asarray(res.wire_msgs)
+    ), "pallas-interpret mesh wire counters diverged from xla"
+
     # elastic-vs-static billing invariant: consolidation never costs more
     _, trace = run_sssp(pg, 0)
     tf = TimeFunction.from_trace(trace)
@@ -497,6 +619,12 @@ def check_bench_schema(path: str = OUT_PATH) -> dict:
             assert row["wire_total"] < row["pre_agg_total"], d_n
     assert data["program_sweep"]["per_program"], "empty program sweep"
     assert data["relayout"]["per_d"], "empty relayout sweep"
+    kp = data["kernel_path"]["per_program"]
+    assert kp, "empty kernel-path sweep"
+    for name, row in kp.items():
+        assert row.get("parity_ok") is True, (
+            f"kernel_path[{name}]: backend parity not recorded as OK"
+        )
     return data
 
 
@@ -607,6 +735,9 @@ def run(verbose: bool = True) -> dict:
     # dynamic re-layout: static vs compute-follows-the-planner elastic runs
     out["relayout"] = _relayout_sweep_subprocess()
 
+    # compute-backend sweep: xla vs pallas-interpret parity + TPU roofline
+    out["kernel_path"] = _kernel_path_sweep()
+
     with open(OUT_PATH, "w") as f:
         json.dump(out, f, indent=2)
     if verbose:
@@ -641,6 +772,7 @@ def run(verbose: bool = True) -> dict:
             )
         _print_program_sweep(out["program_sweep"])
         _print_relayout_sweep(out["relayout"])
+        _print_kernel_path_sweep(out["kernel_path"])
     return out
 
 
@@ -657,6 +789,8 @@ if __name__ == "__main__":
         run_programs_only()
     elif "--relayout" in sys.argv:
         run_relayout_only()
+    elif "--kernel-path" in sys.argv:
+        run_kernel_path_only()
     elif "--smoke" in sys.argv:
         run_smoke()
     else:

@@ -33,6 +33,13 @@ Knobs:
                just store their shards there).  Results are bit-identical;
                the remap bytes show up in the physical device-move ledger
                while billed migration stays plan-derived.
+  --backend B  compute backend for the superstep hot path: ``xla`` (default,
+               segment reductions), ``pallas`` (block-skipping Pallas relax
+               kernels -- needs a real accelerator), or ``pallas-interpret``
+               (same kernels through the Pallas interpreter; runs anywhere,
+               for parity checking, not speed).  Counters and collectives
+               stay on XLA, so every backend reports bit-identical counters;
+               min-programs also produce bit-identical state.
 
   PYTHONPATH=src python examples/elastic_bfs.py [--workloads LIVJ/8P ...]
 
@@ -161,6 +168,12 @@ def main():
         "residency print shows the planned map instead of the data plane",
     )
     ap.add_argument(
+        "--backend", default="xla",
+        choices=["xla", "pallas", "pallas-interpret"],
+        help="superstep compute backend (see module docstring); "
+        "pallas-interpret runs the kernels anywhere for parity checking",
+    )
+    ap.add_argument(
         "--bc", type=int, default=0, metavar="N",
         help="also run an N-source BC wave demo on the batched engine",
     )
@@ -200,7 +213,7 @@ def main():
         )
         ex = ElasticBSPExecutor(
             wl.pg, program=program, tau_scale=tau_scale, billing=model,
-            mesh=mesh,
+            mesh=mesh, backend=args.backend,
         )
         rep = ex.run(
             wl.source, plan, strategy_fn=strat, replan=not args.no_replan,

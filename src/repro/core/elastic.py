@@ -145,6 +145,7 @@ class ElasticBSPExecutor:
         tau_scale: float = 1.0,
         billing: BillingModel | None = None,
         mesh=None,
+        backend: str = "xla",
     ):
         self.pg = pg
         self.program = program or SsspProgram()
@@ -153,7 +154,10 @@ class ElasticBSPExecutor:
         self.tau_scale = tau_scale
         self.billing = billing or BillingModel()
         self.mesh = mesh
-        self.engine = get_engine(pg, program=self.program, mesh=mesh)
+        self.backend = backend
+        self.engine = get_engine(
+            pg, program=self.program, mesh=mesh, backend=backend
+        )
         self.devices = (
             list(mesh.devices.flat) if mesh is not None else jax.devices()
         )

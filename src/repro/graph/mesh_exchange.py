@@ -65,6 +65,23 @@ moves between devices are the executor's *physical* ledger
 (``CostReport.migration_secs``) stays derived from the placement plan alone
 and is therefore device-count-independent -- see ``core.elastic`` for the
 two-ledger contract.
+
+**Compute backend** (``backend`` kwarg, threaded from ``TraversalEngine``):
+with ``backend="pallas"`` / ``"pallas-interpret"`` the two per-device value
+reductions on the superstep hot path -- the local-edge reduction over
+``n_pad`` rows and the pre-all-to-all wire-slot aggregation over
+``n_devices * w_pad`` slots -- run through the block-skipping Pallas relax
+kernel (``kernels.bfs_relax``) instead of XLA segment ops.  Each device
+shard's problem is exactly the kernel's shape: ``ldst[d]`` and ``rslot[d]``
+are ascending (padding rows carry ``n_pad - 1`` / ``D * w_pad - 1`` -- real
+rows fed identity candidates), so the per-device static block maps
+(``MeshEdgeLayout.local_block_map`` / ``wire_block_map``, carried through
+the incremental rebuild) bound each row block's edge-block span.  The maps
+ride along as four extra sharded constants keyed into the same per-layout
+const cache; counters, ``seg_any_wire``, receive scatters, and the
+collective stay on XLA, so counters and superstep counts are bit-identical
+across backends (monotone state bit-identical; stationary sums reassociate
+across tile order, so state matches to rounding).
 """
 
 from __future__ import annotations
@@ -97,6 +114,11 @@ from repro.graph.program import (
     validate_program,
 )
 from repro.graph.structs import MeshEdgeLayout, PartitionedGraph
+from repro.kernels.bfs_relax.ops import (
+    _block_dims,
+    relax_blockmap_call,
+    validate_backend,
+)
 from jax.sharding import PartitionSpec as P
 
 
@@ -196,6 +218,9 @@ class MeshTraversalProgram:
         *,
         layout_cache_size: int = 4,
         window_cache_size: int = 8,
+        backend: str = "xla",
+        block_n: int = 512,
+        block_e: int = 512,
     ):
         d_n = mesh_size(mesh)
         if d_n < 2:
@@ -209,6 +234,9 @@ class MeshTraversalProgram:
         self.pg = pg
         self.program = validate_program(program or SsspProgram())
         self.n_parts = pg.n_parts
+        validate_backend(backend)
+        self.backend = backend
+        self._block_n, self._block_e = int(block_n), int(block_e)
         # layout key -> (layout, uploaded device consts); LRU so a replanned
         # run cycling through placements holds a bounded device footprint
         self._layout_cache_size = int(layout_cache_size)
@@ -242,12 +270,29 @@ class MeshTraversalProgram:
                 put(ml.rvalid),
                 put(ml.recv_idx),
             )
-            entry = (ml, consts)
+            statics = None
+            if self.backend != "xla":
+                # per-device static block maps for the kernel backend: one
+                # geometry per reduction plane (local rows vs wire slots),
+                # clamped exactly as relax_blockmap_call will re-derive them
+                d_n = ml.n_devices
+                bn_l, be_l, _, _ = _block_dims(
+                    ml.n_pad, ml.e_local_pad, self._block_n, self._block_e
+                )
+                bn_w, be_w, _, _ = _block_dims(
+                    d_n * ml.w_pad, ml.e_remote_pad,
+                    self._block_n, self._block_e,
+                )
+                ls, lc, lt = ml.local_block_map(bn_l, be_l)
+                ws, wc, wt = ml.wire_block_map(bn_w, be_w)
+                consts = consts + (put(ls), put(lc), put(ws), put(wc))
+                statics = (bn_l, be_l, lt, bn_w, be_w, wt)
+            entry = (ml, consts, statics)
             self._layout_states[key] = entry
         self._layout_states.move_to_end(key)
         while len(self._layout_states) > self._layout_cache_size:
             self._layout_states.popitem(last=False)
-        self.layout, self._consts = entry
+        self.layout, self._consts, self._statics = entry
         self._const_specs = tuple(
             per_device_spec(c.ndim) for c in self._consts
         )
@@ -311,7 +356,10 @@ class MeshTraversalProgram:
         # the traced program depends on the layout only through these static
         # shapes; shape-identical layouts (the common re-layout case) share
         # one jitted fn, so a swap re-jits at most once per distinct shape
-        key = (m_max, ml.n_pad, ml.w_pad)
+        key = (
+            m_max, ml.n_pad, ml.w_pad, ml.e_local_pad, ml.e_remote_pad,
+            self.backend, self._statics,
+        )
         fn = self._windows.get(key)
         if fn is None:
             fn = self._build(m_max)
@@ -328,6 +376,7 @@ class MeshTraversalProgram:
             self._body, m_max=m_max, n_parts=n_parts, n_pad=n_pad,
             w_pad=w_pad, d_n=d_n, prog=self.program,
             n_global=self.pg.graph.n_vertices,
+            backend=self.backend, statics=self._statics,
         )
         state = traversal_state_spec()
         rep = P()
@@ -345,8 +394,10 @@ class MeshTraversalProgram:
         dist, frontier, nst0,
         lsrc, ldst, lw, lpart, lvalid, part_of_pos,
         rsrc, rw, rslot, rpart, rvalid, recv_idx,
-        *, m_max: int, n_parts: int, n_pad: int, w_pad: int, d_n: int,
+        *blockmaps,
+        m_max: int, n_parts: int, n_pad: int, w_pad: int, d_n: int,
         prog: VertexProgram, n_global: int,
+        backend: str = "xla", statics=None,
     ):
         # per-device blocks arrive with a leading length-1 device axis
         lsrc, ldst, lw = lsrc[0], ldst[0], lw[0]
@@ -369,6 +420,40 @@ class MeshTraversalProgram:
                 c, rslot, num_segments=d_n * w_pad, indices_are_sorted=True
             )
         )
+
+        # kernel backend: the two sharded reductions above run as Pallas
+        # block-skipping kernels over the per-device static block maps; every
+        # other op (counters, scatters, the collective) stays on XLA
+        use_kernel = backend != "xla"
+        if use_kernel:
+            lbs, lbc = blockmaps[0][0], blockmaps[1][0]
+            wbs, wbc = blockmaps[2][0], blockmaps[3][0]
+            bn_l, be_l, lt_max, bn_w, be_w, wt_max = statics
+            interp = backend == "pallas-interpret"
+
+        def relax_l(cand, base=None):
+            if use_kernel:
+                if base is None:
+                    base = jnp.full((cand.shape[0], n_pad), ident, cand.dtype)
+                return relax_blockmap_call(
+                    lbs, lbc, ldst, cand, base,
+                    reduce=prog.reduce, block_n=bn_l, block_e=be_l,
+                    t_max=lt_max, interpret=interp,
+                )
+            r = seg_red_l(cand)
+            return r if base is None else prog.combine(base, r)
+
+        def red_wire(cand):
+            if use_kernel:
+                base = jnp.full(
+                    (cand.shape[0], d_n * w_pad), ident, cand.dtype
+                )
+                return relax_blockmap_call(
+                    wbs, wbc, rslot, cand, base,
+                    reduce=prog.reduce, block_n=bn_w, block_e=be_w,
+                    t_max=wt_max, interpret=interp,
+                )
+            return seg_red_wire(cand)
         seg_any_wire = jax.vmap(
             lambda v: jax.ops.segment_max(
                 v, rslot, num_segments=d_n * w_pad, indices_are_sorted=True
@@ -394,7 +479,7 @@ class MeshTraversalProgram:
             D*w_pad], wire count [S]).  ``combine``-aggregates per
             destination slot BEFORE the collective for any program."""
             cand = jnp.where(active_re, prog.relax(src_vals, rw), ident)
-            send = seg_red_wire(cand)
+            send = red_wire(cand)
             if prog.reduce == "min":
                 # a slot is on the wire iff some active edge fed it, which
                 # for min-programs is exactly "the aggregate is not identity"
@@ -419,7 +504,7 @@ class MeshTraversalProgram:
 
             active_le = fr[:, lsrc] & lvalid
             cand = jnp.where(active_le, prog.relax(d[:, lsrc], lw), ident)
-            acc = seg_red_l(cand)
+            acc = relax_l(cand)
             we_s = seg_sum_lp(active_le.astype(jnp.int32))
             wv_s = seg_sum_vp(fr.astype(jnp.int32))
             it_s = g_any(fr.any(axis=1)).astype(jnp.int32)
@@ -458,7 +543,7 @@ class MeshTraversalProgram:
                 cand = jnp.where(
                     active_e, prog.relax(d_i[:, lsrc], lw), ident
                 )
-                new_d = prog.combine(d_i, seg_red_l(cand))
+                new_d = relax_l(cand, d_i)
                 improved = prog.is_active(new_d, d_i)
                 we_s = we_s + seg_sum_lp(active_e.astype(jnp.int32))
                 wv_s = wv_s + seg_sum_vp(f_i.astype(jnp.int32))

@@ -28,6 +28,7 @@ from repro.graph.structs import (
     Graph,
     MeshEdgeLayout,
     PartitionedGraph,
+    block_ranges_for,
     dst_sorted_layout,
     mesh_layout_key,
 )
@@ -446,6 +447,25 @@ def _build_mesh_layout(
         "devices_rebuilt": int(rebuilt.size),
         "devices_total": d_n,
     }
+    if base is not None:
+        # carry the Pallas kernel block maps (structs.MeshEdgeLayout.
+        # local_block_map / wire_block_map) the same way the edge arrays are
+        # carried: recompute only the rows of devices whose edges were
+        # rebuilt, copy the rest.  Shapes are stable here by construction
+        # (any pad change degraded to base=None above).
+        carried = {}
+        for key, (bstart, bcnt, _) in base.__dict__.get("_block_maps", {}).items():
+            kind, bn, be = key
+            aff = vert_aff if kind == "local" else src_aff
+            edge_rows = ldst if kind == "local" else rslot
+            nseg = n_pad if kind == "local" else d_n * w_pad
+            start = bstart.copy()
+            cnt = bcnt.copy()
+            for d in np.flatnonzero(aff):
+                start[d], cnt[d], _ = block_ranges_for(edge_rows[d], nseg, bn, be)
+            carried[key] = (start, cnt, max(1, int(cnt.max())))
+        if carried:
+            out.__dict__["_block_maps"] = carried
     return out
 
 

@@ -19,6 +19,38 @@ import numpy as np
 INF_DIST = np.float32(np.inf)
 
 
+def block_ranges_for(
+    dst: np.ndarray, n: int, block_n: int, block_e: int
+) -> tuple[np.ndarray, np.ndarray, int]:
+    """Per-row-block contiguous edge-block span for an ascending ``dst``
+    array: (start [NB], count [NB], t_max).
+
+    Because ``dst`` is sorted, the set of edge blocks intersecting a row
+    block ``[ob*block_n, (ob+1)*block_n)`` is a contiguous range of edge
+    blocks -- representable as a start index and a count, which is what the
+    block-skipping relax kernel scalar-prefetches.  ``t_max = max(count)``
+    bounds the kernel's inner grid dimension (vs ``ceil(E/block_e)`` for a
+    dense grid that tests intersection per tile).  Shared by
+    ``CsrEdgeLayout.block_ranges`` (dense engine) and
+    ``MeshEdgeLayout.local_block_map``/``wire_block_map`` (per-device maps).
+    """
+    dst = np.asarray(dst)
+    e = int(dst.shape[0])
+    nb = max(1, -(-n // block_n))
+    if e == 0:
+        return np.zeros(nb, np.int32), np.zeros(nb, np.int32), 1
+    neb = -(-e // block_e)
+    firsts = dst[np.arange(neb) * block_e]
+    lasts = dst[np.minimum(np.arange(1, neb + 1) * block_e, e) - 1]
+    lo = firsts // block_n  # first row block each edge block touches
+    hi = lasts // block_n  # last row block each edge block touches
+    rows = np.arange(nb)
+    start = np.searchsorted(hi, rows, side="left").astype(np.int32)
+    end = np.searchsorted(lo, rows, side="right").astype(np.int32)
+    count = np.maximum(end - start, 0).astype(np.int32)
+    return start, count, max(1, int(count.max()))
+
+
 @dataclasses.dataclass(frozen=True)
 class CsrEdgeLayout:
     """Static destination-sorted edge layout, built once per (sub)edge-set.
@@ -60,23 +92,9 @@ class CsrEdgeLayout:
         key = ("block_ranges", block_n, block_e)
         cached = self.__dict__.setdefault("_block_cache", {})
         if key not in cached:
-            e, n = self.n_edges, self.n_vertices
-            nb = max(1, -(-n // block_n))
-            if e == 0:
-                start = np.zeros(nb, np.int32)
-                count = np.zeros(nb, np.int32)
-                cached[key] = (start, count, 1)
-            else:
-                neb = -(-e // block_e)
-                firsts = self.dst[np.arange(neb) * block_e]
-                lasts = self.dst[np.minimum(np.arange(1, neb + 1) * block_e, e) - 1]
-                lo = firsts // block_n  # first row block each edge block touches
-                hi = lasts // block_n  # last row block each edge block touches
-                rows = np.arange(nb)
-                start = np.searchsorted(hi, rows, side="left").astype(np.int32)
-                end = np.searchsorted(lo, rows, side="right").astype(np.int32)
-                count = np.maximum(end - start, 0).astype(np.int32)
-                cached[key] = (start, count, max(1, int(count.max())))
+            cached[key] = block_ranges_for(
+                self.dst, self.n_vertices, block_n, block_e
+            )
         return cached[key]
 
 
@@ -191,6 +209,46 @@ class MeshEdgeLayout:
         """Map padded device-major state ``[..., D * n_pad]`` back to global
         vertex order ``[..., n]``."""
         return np.asarray(state_rows)[..., self.pos_of_vertex]
+
+    # -- per-device static block maps (Pallas relax-kernel backend) ----------
+    #
+    # Each device's reduction problem is exactly the block-skipping kernel's
+    # shape: ``ldst[d]`` is ascending over ``n_pad`` device-local rows (pad
+    # value ``n_pad - 1``) and ``rslot[d]`` is ascending over
+    # ``n_devices * w_pad`` wire slots (pad value ``D * w_pad - 1``), so both
+    # admit the contiguous edge-block span representation of
+    # ``block_ranges_for``.  Padded edges point at *real* rows but carry
+    # identity candidates, so they are reduction no-ops.  Maps are cached per
+    # geometry in ``__dict__['_block_maps']`` (the frozen-dataclass side cache
+    # shared with ``_build_info``); the incremental mesh rebuild in
+    # ``partition._build_mesh_layout`` carries unchanged device rows forward.
+
+    def _block_map(self, kind: str, block_n: int, block_e: int):
+        key = (kind, int(block_n), int(block_e))
+        cache = self.__dict__.setdefault("_block_maps", {})
+        if key not in cache:
+            if kind == "local":
+                rows, nseg = self.ldst, self.n_pad
+            else:
+                rows, nseg = self.rslot, self.n_devices * self.w_pad
+            per_dev = [
+                block_ranges_for(rows[d], nseg, block_n, block_e)
+                for d in range(self.n_devices)
+            ]
+            start = np.stack([p[0] for p in per_dev])
+            count = np.stack([p[1] for p in per_dev])
+            cache[key] = (start, count, max(1, int(count.max())))
+        return cache[key]
+
+    def local_block_map(self, block_n: int, block_e: int):
+        """(start [D, NB], count [D, NB], t_max) over per-device local edges
+        (``ldst`` rows, ``n_pad`` segments)."""
+        return self._block_map("local", block_n, block_e)
+
+    def wire_block_map(self, block_n: int, block_e: int):
+        """(start [D, NBw], count [D, NBw], t_max) over per-device remote
+        edges (``rslot`` rows, ``n_devices * w_pad`` wire-slot segments)."""
+        return self._block_map("wire", block_n, block_e)
 
 
 def dst_sorted_layout(

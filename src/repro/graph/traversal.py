@@ -97,6 +97,7 @@ from repro.graph.program import (
     validate_program,
 )
 from repro.graph.structs import PartitionedGraph
+from repro.kernels.bfs_relax.ops import make_relax_fn, validate_backend
 
 
 class SuperstepResult(NamedTuple):
@@ -291,6 +292,9 @@ class TraversalEngine:
         collect_subgraphs: bool = False,
         mesh=None,
         device_of_part: np.ndarray | None = None,
+        backend: str = "xla",
+        block_n: int = 512,
+        block_e: int = 512,
     ):
         self.pg = pg
         self.program = validate_program(program or SsspProgram())
@@ -300,6 +304,15 @@ class TraversalEngine:
         self.n_parts = pg.n_parts
         self.n_subgraphs = pg.n_subgraphs if collect_subgraphs else 0
         self.mesh = mesh
+        # backend selects the segment-reduction implementation on the
+        # superstep hot path: "xla" (segment ops; the default and the right
+        # choice on CPU), "pallas" (the block-skipping relax kernels, TPU),
+        # or "pallas-interpret" (kernel semantics on CPU -- CI parity mode).
+        # Candidate gathers, counters, frontier logic, and collectives stay
+        # on XLA under every backend, so counters and superstep counts are
+        # bit-identical across backends.
+        interpret = validate_backend(backend)
+        self.backend = backend
         self._mesh_prog = None
         if mesh is not None and int(mesh.devices.size) > 1:
             if collect_subgraphs:
@@ -311,7 +324,19 @@ class TraversalEngine:
 
             self._mesh_prog = MeshTraversalProgram(
                 pg, mesh, device_of_part=device_of_part,
-                program=self.program,
+                program=self.program, backend=backend,
+                block_n=block_n, block_e=block_e,
+            )
+        self._relax_l_kern = self._relax_r_kern = None
+        if backend != "xla" and self._mesh_prog is None:
+            layout = partitioned_edge_layout(pg)
+            self._relax_l_kern = make_relax_fn(
+                layout.local.dst, self.n, reduce=self.program.reduce,
+                block_n=block_n, block_e=block_e, interpret=interpret,
+            )
+            self._relax_r_kern = make_relax_fn(
+                layout.remote.dst, self.n, reduce=self.program.reduce,
+                block_n=block_n, block_e=block_e, interpret=interpret,
             )
         dev = _device_arrays(pg)  # shared across engines on this graph
         self._lsrc, self._ldst, self._lpart = dev.lsrc, dev.ldst, dev.lpart
@@ -390,6 +415,27 @@ class TraversalEngine:
                 c, self._rdst, num_segments=n, indices_are_sorted=True
             )
         )
+
+        # every value reduction funnels through these two: base=None is the
+        # bare segment reduce (stationary accumulate), base=state fuses the
+        # program combine.  The pallas backends run both forms as one
+        # block-skipping kernel pass (base <- identity when None); the xla
+        # forms below are the exact pre-backend expressions.
+        def relax_l(cand, base=None):
+            if self._relax_l_kern is not None:
+                if base is None:
+                    base = jnp.full((cand.shape[0], n), ident, dist.dtype)
+                return self._relax_l_kern(cand, base)
+            r = seg_red_l(cand)
+            return r if base is None else prog.combine(base, r)
+
+        def relax_r(cand, base=None):
+            if self._relax_r_kern is not None:
+                if base is None:
+                    base = jnp.full((cand.shape[0], n), ident, dist.dtype)
+                return self._relax_r_kern(cand, base)
+            r = seg_red_r(cand)
+            return r if base is None else prog.combine(base, r)
         seg_sum_lp = jax.vmap(
             lambda v: jax.ops.segment_sum(v, self._lpart, num_segments=p)
         )
@@ -422,7 +468,7 @@ class TraversalEngine:
             cand = jnp.where(
                 active_le, prog.relax(d[:, self._lsrc], self._lw), ident
             )
-            acc = seg_red_l(cand)
+            acc = relax_l(cand)
             we_s = seg_sum_lp(active_le.astype(jnp.int32))
             wv_s = seg_sum_vp(fr.astype(jnp.int32))
             it_s = fr.any(axis=1).astype(jnp.int32)  # one pass per superstep
@@ -431,7 +477,7 @@ class TraversalEngine:
             cand_r = jnp.where(
                 active_re, prog.relax(d[:, self._rsrc], self._rw), ident
             )
-            acc = prog.combine(acc, seg_red_r(cand_r))
+            acc = relax_r(cand_r, acc)
             ms_s = seg_sum_rp(active_re.astype(jnp.int32))
 
             new_d = prog.apply(d, acc, n)
@@ -462,7 +508,7 @@ class TraversalEngine:
                 cand = jnp.where(
                     active_e, prog.relax(d_i[:, self._lsrc], self._lw), ident
                 )
-                new_d = prog.combine(d_i, seg_red_l(cand))
+                new_d = relax_l(cand, d_i)
                 improved = prog.is_active(new_d, d_i)
                 we_s = we_s + seg_sum_lp(active_e.astype(jnp.int32))
                 wv_s = wv_s + seg_sum_vp(f_i.astype(jnp.int32))
@@ -480,7 +526,7 @@ class TraversalEngine:
             cand = jnp.where(
                 active_re, prog.relax(d2[:, self._rsrc], self._rw), ident
             )
-            new_d = prog.combine(d2, seg_red_r(cand))
+            new_d = relax_r(cand, d2)
             next_fr = prog.is_active(new_d, d2)
             ms_s = seg_sum_rp(active_re.astype(jnp.int32))
 
@@ -641,24 +687,26 @@ def get_engine(
     m_max: int = 512,
     collect_subgraphs: bool = False,
     mesh=None,
+    backend: str = "xla",
 ) -> TraversalEngine:
     """Per-graph engine cache (keyed by the knobs, stored on the instance).
 
-    Engines are keyed by ``program.key`` (default ``SsspProgram``) and, in
-    mesh mode, the mesh's device ids; the default balanced contiguous
-    partition map is assumed (construct ``TraversalEngine`` directly for a
-    custom ``device_of_part``).
+    Engines are keyed by ``program.key`` (default ``SsspProgram``), the
+    compute ``backend`` (``"xla"`` | ``"pallas"`` | ``"pallas-interpret"``,
+    see ``TraversalEngine``) and, in mesh mode, the mesh's device ids; the
+    default balanced contiguous partition map is assumed (construct
+    ``TraversalEngine`` directly for a custom ``device_of_part``).
     """
     engines = pg.__dict__.setdefault("_traversal_engines", {})
     mesh_key = (
         None if mesh is None else tuple(d.id for d in mesh.devices.flat)
     )
     prog_key = (program or SsspProgram()).key
-    key = (m_max, collect_subgraphs, mesh_key, prog_key)
+    key = (m_max, collect_subgraphs, mesh_key, prog_key, backend)
     if key not in engines:
         engines[key] = TraversalEngine(
             pg, program=program, m_max=m_max,
-            collect_subgraphs=collect_subgraphs, mesh=mesh,
+            collect_subgraphs=collect_subgraphs, mesh=mesh, backend=backend,
         )
     return engines[key]
 

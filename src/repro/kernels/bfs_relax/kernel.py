@@ -1,23 +1,34 @@
-"""Min-plus frontier relaxation Pallas TPU kernels -- the paper's per-superstep
-local-BFS hot spot (GoFFish compute() = repeated edge relaxations).
+"""Program-generic frontier relaxation Pallas TPU kernels -- the paper's
+per-superstep hot spot (GoFFish compute() = repeated edge relaxations).
 
-Same TPU adaptation as segment_sum: candidate distances (dist[src] + w,
-masked by the frontier -- the gather runs outside the kernel where XLA
-schedules it) arrive sorted by destination; each (row-block x edge-block)
-cell selects matching candidates into a dense [bE, bN] matrix and takes a
-columnwise min.  The output tile initializes from the current distances, so
-the kernel computes ``new_dist = min(dist, segment_min(cand, dst))`` in one
-pass.
+Same TPU adaptation as segment_sum: candidate messages (program.relax of the
+gathered source state, masked by the frontier -- the gather runs outside the
+kernel where XLA schedules it) arrive sorted by destination; each
+(row-block x edge-block) cell selects matching candidates into a dense
+[bE, bN] matrix and reduces it columnwise.  The output tile initializes from
+a caller-supplied base state, so one pass computes
+``combine(base, segment_reduce(cand, dst))`` for the whole VertexProgram
+algebra:
 
-Two variants:
+  * ``reduce="min"`` -- monotone programs (BFS / SSSP / WCC).  The tile op
+    is a masked columnwise min against an identity fill (+inf for floats,
+    iinfo.max for WCC's int32 labels); combine(base, .) is a second min, so
+    the base doubles as the running output accumulator.
+  * ``reduce="sum"`` -- stationary programs (PageRank).  The tile op reuses
+    the ``sorted_segment_sum`` accumulate idiom (+= of the masked block)
+    with a zero identity; the base (normally all-zero) seeds the
+    accumulator, which lets callers chain local- and remote-plane passes.
+
+Variants:
   * ``bfs_relax_kernel`` -- dense (row_block, edge_block) grid; every tile
     runs and tests ``intersects`` itself.  Kept for ad-hoc edge orders.
-  * ``bfs_relax_kernel_blockmap`` -- the static-layout fast path.  A
-    precomputed block map (``CsrEdgeLayout.block_ranges``: per row block, the
-    contiguous span of edge blocks that can hit it) is scalar-prefetched, so
-    the grid enumerates only tiles that provably contain in-range edges, and
-    a leading grid dimension batches multiple BFS sources over the same edge
+  * ``relax_kernel_blockmap`` -- the static-layout fast path.  A precomputed
+    block map (``block_ranges_for``: per row block, the contiguous span of
+    edge blocks that can hit it) is scalar-prefetched, so the grid
+    enumerates only tiles that provably contain in-range edges, and a
+    leading grid dimension batches multiple sources over the same edge
     blocks (the dst tile is fetched once per (row, t) regardless of S).
+  * ``bfs_relax_kernel_blockmap`` -- backcompat min-reduce wrapper.
 """
 
 from __future__ import annotations
@@ -92,19 +103,21 @@ def _kernel_blockmap(
     start_ref,  # [NB] int32 scalar-prefetch: first edge block per row block
     cnt_ref,  # [NB] int32 scalar-prefetch: edge blocks per row block
     dst_ref,  # (1, bE) int32 sorted, padded with n_pad
-    cand_ref,  # (1, bE) f32 candidates for source s (inf where inactive)
-    dist_ref,  # (1, bN) f32 current distances for (source s, row block)
-    o_ref,  # (1, bN) f32, persists across the t dimension
+    cand_ref,  # (1, bE) candidates for source s (identity where inactive)
+    base_ref,  # (1, bN) base state for (source s, row block)
+    o_ref,  # (1, bN), persists across the t dimension
     *,
     block_n: int,
     block_e: int,
+    reduce: str,
+    identity,
 ):
     oi = pl.program_id(1)
     t = pl.program_id(2)
 
     @pl.when(t == 0)
     def _init():
-        o_ref[...] = dist_ref[...]
+        o_ref[...] = base_ref[...]
 
     # the block map guarantees blocks [start, start+cnt) intersect this row
     # block; tiles beyond cnt are clamped duplicates -- skip their compute
@@ -115,27 +128,46 @@ def _kernel_blockmap(
             jnp.int32, (block_e, block_n), 1
         )
         hit = dst[:, None] == rows
-        m = jnp.where(hit, cand_ref[0, :][:, None], INF)
-        o_ref[0, :] = jnp.minimum(o_ref[0, :], m.min(axis=0))
+        m = jnp.where(hit, cand_ref[0, :][:, None], identity)
+        if reduce == "min":
+            o_ref[0, :] = jnp.minimum(o_ref[0, :], m.min(axis=0))
+        else:  # "sum": segment_sum accumulate idiom (identity == 0)
+            o_ref[0, :] = o_ref[0, :] + m.sum(axis=0)
 
 
-def bfs_relax_kernel_blockmap(
-    start: jax.Array,  # [NB] int32 block map (see CsrEdgeLayout.block_ranges)
+def relax_kernel_blockmap(
+    start: jax.Array,  # [NB] int32 block map (see structs.block_ranges_for)
     cnt: jax.Array,  # [NB] int32
     dst_sorted: jax.Array,  # [Ep] int32 ascending, padded with n_pad
-    cand: jax.Array,  # [S, Ep] f32 candidates aligned with dst_sorted
-    dist: jax.Array,  # [S, Np] f32
+    cand: jax.Array,  # [S, Ep] candidates aligned with dst_sorted
+    base: jax.Array,  # [S, Np] base state, combined into the output
     *,
     block_n: int,
     block_e: int,
     t_max: int,
+    reduce: str = "min",
     interpret: bool = False,
 ) -> jax.Array:
-    """Batched block-skipping relaxation over the static dst-sorted layout."""
+    """Batched block-skipping ``combine(base, segment_reduce(cand, dst))``.
+
+    ``reduce`` is "min" (monotone programs; identity follows the candidate
+    dtype: +inf for floats, iinfo.max for ints) or "sum" (stationary
+    programs; identity 0).  Padded dst entries must point past the last real
+    row; padded candidates must carry the identity.  Output dtype follows
+    ``base``.
+    """
     s, e_pad = cand.shape
-    n_pad = dist.shape[1]
+    n_pad = base.shape[1]
     assert e_pad % block_e == 0 and n_pad % block_n == 0
+    assert reduce in ("min", "sum")
     n_eb = e_pad // block_e
+    dt = jnp.dtype(base.dtype)
+    if reduce == "sum":
+        identity = dt.type(0)
+    elif jnp.issubdtype(dt, jnp.floating):
+        identity = dt.type(INF)
+    else:
+        identity = dt.type(jnp.iinfo(dt).max)
 
     def _edge_block(s_i, oi, t, start, cnt):
         del s_i, cnt
@@ -159,10 +191,43 @@ def bfs_relax_kernel_blockmap(
         ],
         out_specs=pl.BlockSpec((1, block_n), _row_block),
     )
-    kern = functools.partial(_kernel_blockmap, block_n=block_n, block_e=block_e)
+    kern = functools.partial(
+        _kernel_blockmap,
+        block_n=block_n,
+        block_e=block_e,
+        reduce=reduce,
+        identity=identity,
+    )
     return pl.pallas_call(
         kern,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((s, n_pad), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((s, n_pad), dt),
         interpret=interpret,
-    )(start, cnt, dst_sorted.reshape(1, e_pad), cand, dist)
+    )(start, cnt, dst_sorted.reshape(1, e_pad), cand, base)
+
+
+def bfs_relax_kernel_blockmap(
+    start: jax.Array,
+    cnt: jax.Array,
+    dst_sorted: jax.Array,
+    cand: jax.Array,
+    dist: jax.Array,
+    *,
+    block_n: int,
+    block_e: int,
+    t_max: int,
+    interpret: bool = False,
+) -> jax.Array:
+    """Backcompat wrapper: min-reduce blockmap relaxation (BFS/SSSP)."""
+    return relax_kernel_blockmap(
+        start,
+        cnt,
+        dst_sorted,
+        cand,
+        dist,
+        block_n=block_n,
+        block_e=block_e,
+        t_max=t_max,
+        reduce="min",
+        interpret=interpret,
+    )

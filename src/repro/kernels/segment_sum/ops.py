@@ -30,8 +30,11 @@ def sorted_segment_sum(
         ids, vals = ids[order], vals[order]
     block_e = min(block_e, max(8, e))
     block_n = min(block_n, max(8, n_segments))
-    e_pad = (e + block_e - 1) // block_e * block_e
-    n_pad = (n_segments + block_n - 1) // block_n * block_n
+    # pads must round up to at least one full block: with e == 0 the clamp
+    # gives block_e = 8 > e_pad = 0, a zero-size grid dimension whose output
+    # (flushed at the last edge block) would never be written
+    e_pad = max(block_e, (e + block_e - 1) // block_e * block_e)
+    n_pad = max(block_n, (n_segments + block_n - 1) // block_n * block_n)
     d_pad = (d + 127) // 128 * 128 if d % 128 else d
     ids = jnp.pad(ids, (0, e_pad - e), constant_values=n_pad)  # pad -> no row
     vals = jnp.pad(vals, ((0, e_pad - e), (0, d_pad - d)))

@@ -42,6 +42,14 @@ def test_tier1_job_runs_the_tier1_gate():
     assert wf["env"]["PYTHONPATH"] == "src"
 
 
+def test_tier1_job_runs_the_kernel_digest():
+    """The Pallas kernel digest (interpret-mode correctness + roofline) is a
+    pinned tier-1 step: dropping it would un-gate the kernel backend."""
+    wf = _load()
+    runs = " && ".join(_run_lines(wf["jobs"]["tier1"]))
+    assert "python -m benchmarks.kernel_bench" in runs
+
+
 def test_mesh_job_forces_8_devices_and_runs_mesh_marked_tests():
     wf = _load()
     job = wf["jobs"]["mesh"]
@@ -88,3 +96,8 @@ def test_bench_json_is_valid_json_with_tracked_sweeps():
         data = json.load(f)
     assert data["mesh_sweep"]["per_d"]
     assert data["program_sweep"]["per_program"]
+    # kernel-path rows must carry both backend walls and an explicit parity
+    # verdict (check_bench_schema asserts every verdict is True)
+    for row in data["kernel_path"]["per_program"].values():
+        assert {"xla_wall_s", "pallas_interpret_wall_s", "parity_ok"} <= set(row)
+    assert data["kernel_path"]["roofline"]

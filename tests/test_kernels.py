@@ -179,3 +179,168 @@ def test_bfs_relax_empty_frontier_is_identity():
         interpret=True,
     )
     np.testing.assert_array_equal(np.asarray(out), np.asarray(dist))
+
+
+# ---------------------------------------------------------------------------
+# program-generic relax (the engine backend)
+# ---------------------------------------------------------------------------
+
+
+def _program_pg(n=200, avg_deg=4.0, seed=7):
+    from repro.graph.generators import erdos_renyi_graph, weighted
+    from repro.graph.partition import hash_partition
+
+    g = weighted(erdos_renyi_graph(n, avg_deg, seed=seed), seed=seed + 1)
+    return hash_partition(g, 3)
+
+
+def _program_layout(pg, prog):
+    """dst-sorted layout carrying the program's edge plane as weights."""
+    from repro.graph.program import resolve_edge_plane
+    from repro.graph.structs import dst_sorted_layout
+
+    g = pg.graph
+    plane = resolve_edge_plane(pg, prog)
+    w = g.weights if plane is None else plane
+    return dst_sorted_layout(g.n_vertices, g.src, g.dst, w)
+
+
+@pytest.mark.parametrize("name", ["bfs", "sssp", "wcc", "pagerank"])
+def test_relax_csr_matches_xla_per_program(name):
+    """One relax pass: kernel (interpret) vs the engine's XLA segment ops,
+    exact for min programs (WCC's int32 labels included), allclose for the
+    float sum path."""
+    from repro.graph.program import BUILTIN_PROGRAMS
+
+    prog = BUILTIN_PROGRAMS[name]()
+    pg = _program_pg()
+    lay = _program_layout(pg, prog)
+    from repro.kernels.bfs_relax import relax_csr
+
+    rng = np.random.default_rng(42)
+    n = pg.graph.n_vertices
+    state0, frontier0 = prog.init(pg, np.array([0, 17]))
+    # perturb so the pass is non-trivial for min programs
+    state = jnp.asarray(state0)
+    if name in ("bfs", "sssp"):
+        state = state.at[:, ::3].set(
+            jnp.asarray(rng.uniform(0, 4, state[:, ::3].shape), state.dtype)
+        )
+        frontier0 = rng.random(frontier0.shape) < 0.4
+    frontier = jnp.asarray(frontier0)
+    out = relax_csr(prog, state, frontier, lay, interpret=True)
+
+    src, dst, w = map(jnp.asarray, (lay.src, lay.dst, lay.weights))
+    ident = prog.identity
+    cand = jnp.where(frontier[:, src], prog.relax(state[:, src], w), ident)
+    if prog.reduce == "min":
+        red = jax.vmap(
+            lambda c: jax.ops.segment_min(
+                c, dst, num_segments=n, indices_are_sorted=True
+            )
+        )(cand)
+        ref = prog.combine(state, red)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    else:
+        ref = jax.vmap(
+            lambda c: jax.ops.segment_sum(
+                c, dst, num_segments=n, indices_are_sorted=True
+            )
+        )(cand)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-9
+        )
+
+
+def test_relax_sum_combine_vs_reference_segment_sum():
+    """The kernel's sum path is the segment-sum accumulate idiom: against
+    the segment_sum oracle on the transposed [E, S] view."""
+    from repro.kernels.bfs_relax.ops import _block_dims, relax_blockmap_call
+    from repro.graph.structs import block_ranges_for
+
+    rng = np.random.default_rng(3)
+    n, e, s = 130, 700, 4
+    dst = np.sort(rng.integers(0, n, e)).astype(np.int32)
+    cand = jnp.asarray(rng.normal(size=(s, e)), jnp.float32)
+    bn, be, _, _ = _block_dims(n, e, 64, 64)
+    start, cnt, t_max = block_ranges_for(dst, n, bn, be)
+    out = relax_blockmap_call(
+        jnp.asarray(start), jnp.asarray(cnt), jnp.asarray(dst),
+        cand, jnp.zeros((s, n), jnp.float32),
+        reduce="sum", block_n=bn, block_e=be, t_max=t_max, interpret=True,
+    )
+    ref = reference_segment_sum(jnp.asarray(dst), cand.T, n).T
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-6
+    )
+
+
+def test_block_dims_degenerate():
+    """Sub-block problems (``e < 8``/``n < 8``, including ``e == 0``) must
+    round pads up to at least one full block -- a zero-size grid dimension
+    would never initialize the output tile."""
+    from repro.kernels.bfs_relax.ops import _block_dims
+
+    for n, e in [(1, 0), (1, 1), (5, 3), (7, 0), (300, 1), (1, 300)]:
+        bn, be, n_pad, e_pad = _block_dims(n, e, 512, 512)
+        assert e_pad >= be > 0 and e_pad % be == 0, (n, e)
+        assert n_pad >= bn > 0 and n_pad % bn == 0, (n, e)
+        assert n_pad >= n and e_pad >= e, (n, e)
+
+
+def test_relax_csr_single_edge_graph():
+    from repro.graph.program import SsspProgram
+    from repro.graph.structs import dst_sorted_layout
+    from repro.kernels.bfs_relax import relax_csr
+
+    prog = SsspProgram()
+    lay = dst_sorted_layout(
+        3, np.array([0], np.int32), np.array([2], np.int32),
+        np.array([1.5], np.float32),
+    )
+    state = jnp.asarray([[0.0, np.inf, np.inf]], jnp.float32)
+    frontier = jnp.asarray([[True, False, False]])
+    out = relax_csr(prog, state, frontier, lay, interpret=True)
+    np.testing.assert_array_equal(
+        np.asarray(out), np.asarray([[0.0, np.inf, 1.5]], np.float32)
+    )
+
+
+def test_relax_csr_empty_edge_set_and_frontier():
+    """e == 0 returns the combine identity without launching a kernel; an
+    empty frontier feeds all-identity candidates and must be a no-op for
+    min programs."""
+    from repro.graph.program import PageRankProgram, SsspProgram
+    from repro.graph.structs import dst_sorted_layout
+    from repro.kernels.bfs_relax import make_relax_fn, relax_csr
+
+    empty = dst_sorted_layout(
+        4, np.zeros(0, np.int32), np.zeros(0, np.int32), np.zeros(0, np.float32)
+    )
+    state = jnp.asarray([[1.0, 2.0, 3.0, 4.0]], jnp.float32)
+    fr = jnp.ones((1, 4), bool)
+    np.testing.assert_array_equal(
+        np.asarray(relax_csr(SsspProgram(), state, fr, empty, interpret=True)),
+        np.asarray(state),
+    )
+    np.testing.assert_array_equal(
+        np.asarray(
+            relax_csr(PageRankProgram(), state, fr, empty, interpret=True)
+        ),
+        np.zeros((1, 4), np.float32),
+    )
+    # make_relax_fn's e == 0 closure is the combine identity too
+    fn = make_relax_fn(np.zeros(0, np.int32), 4, reduce="min")
+    np.testing.assert_array_equal(
+        np.asarray(fn(jnp.zeros((1, 0)), state)), np.asarray(state)
+    )
+
+    # non-empty edges, empty frontier: min pass returns state unchanged
+    lay = dst_sorted_layout(
+        4, np.array([0, 1], np.int32), np.array([1, 2], np.int32),
+        np.ones(2, np.float32),
+    )
+    out = relax_csr(
+        SsspProgram(), state, jnp.zeros((1, 4), bool), lay, interpret=True
+    )
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(state))

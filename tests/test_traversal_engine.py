@@ -255,3 +255,37 @@ def test_active_subgraph_sets_from_device_counters():
         assert {
             int(pg.part_of_subgraph[sg]) for sg in trace.active_subgraphs[s]
         } == parts
+
+
+@pytest.mark.parametrize("name", ["bfs", "sssp", "wcc", "pagerank"])
+def test_dense_engine_backend_parity(name):
+    """pallas-interpret == xla on the dense engine: counters bit-identical
+    for every program (they stay on XLA), state bit-identical for min
+    programs and allclose for the float sum path."""
+    from repro.graph.program import BUILTIN_PROGRAMS
+
+    g = weighted(erdos_renyi_graph(250, 4.0, seed=3), seed=1)
+    pg = bfs_grow_partition(g, 4)
+    srcs = [0, 100]
+    ctor = BUILTIN_PROGRAMS[name]
+    rx = get_engine(pg, program=ctor(), m_max=64, backend="xla").run(srcs)
+    rk = get_engine(
+        pg, program=ctor(), m_max=64, backend="pallas-interpret"
+    ).run(srcs)
+    for f in ("edges_examined", "verts_processed", "msgs_sent",
+              "inner_iters", "wire_msgs", "n_supersteps"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(rx, f)), np.asarray(getattr(rk, f)), err_msg=f
+        )
+    if ctor().reduce == "min":
+        np.testing.assert_array_equal(np.asarray(rx.dist), np.asarray(rk.dist))
+    else:
+        np.testing.assert_allclose(
+            np.asarray(rk.dist), np.asarray(rx.dist), rtol=1e-5, atol=1e-9
+        )
+
+
+def test_engine_rejects_unknown_backend():
+    pg = hash_partition(erdos_renyi_graph(50, 3.0, seed=0), 2)
+    with pytest.raises(ValueError, match="backend"):
+        get_engine(pg, backend="cuda")
