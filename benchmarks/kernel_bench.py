@@ -87,6 +87,27 @@ def bench_bfs_relax() -> dict:
     layout = dst_sorted_layout(n, src, dst, w)
     dist = jnp.full((n,), jnp.inf).at[0].set(0.0)
     frontier = jnp.zeros((n,), bool).at[0].set(True)
+    # the digest also audits the exact jitted hot path it benchmarks (consts
+    # staged on device outside the trace, as in production): a degenerate
+    # grid or a host callback here fails the bench, not just CI lint
+    import functools
+
+    from repro.analysis.jaxpr_audit import check_hot_path, check_pallas_grids
+    from repro.kernels.bfs_relax import ops as relax_ops
+
+    bn, be, _, _ = relax_ops._block_dims(n, e, 512, 512)
+    src_d, dst_d, w_d = relax_ops._layout_edges_on_device(layout)
+    start_d, cnt_d, t_max = relax_ops._layout_blockmap_on_device(layout, bn, be)
+    closed = jax.make_jaxpr(
+        functools.partial(
+            relax_ops._bfs_relax_csr_jit,
+            n=n, block_n=bn, block_e=be, t_max=t_max, interpret=True,
+        )
+    )(dist[None], frontier[None], src_d, dst_d, w_d, start_d, cnt_d)
+    findings = check_hot_path(closed, "bench/bfs_relax")
+    findings += check_pallas_grids(closed, "bench/bfs_relax", expect_kernel=True)
+    assert not findings, "\n".join(str(f) for f in findings)
+
     out = bfs_relax_csr(dist, frontier, layout, interpret=True)
     ref = reference_bfs_relax(
         dist, frontier, jnp.asarray(src), jnp.asarray(dst), jnp.asarray(w)

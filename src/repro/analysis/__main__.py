@@ -1,0 +1,72 @@
+"""CLI for the static-analysis layer.
+
+Modes::
+
+    python -m repro.analysis                  # lint src/repro + full jaxpr audit
+    python -m repro.analysis --lint [PATH..]  # AST lint only (default src/repro)
+    python -m repro.analysis --fixtures       # known-bad corpus: all must flag
+
+Exit status is 0 iff the run is clean (or, for ``--fixtures``, iff every
+fixture is flagged), which is what the CI steps gate on.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main(argv: list[str] | None = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="jaxpr hot-path auditor + repo-specific AST lint",
+    )
+    parser.add_argument(
+        "--fixtures",
+        action="store_true",
+        help="run the seeded known-bad corpus; fail unless 100%% is flagged",
+    )
+    parser.add_argument(
+        "--lint",
+        nargs="*",
+        metavar="PATH",
+        help="AST lint only, over the given paths (default: src/repro)",
+    )
+    args = parser.parse_args(argv)
+
+    if args.fixtures:
+        from repro.analysis.fixtures import run_fixtures
+
+        results = run_fixtures()
+        missed = [r for r in results if not r.flagged]
+        for r in results:
+            tick = "flagged" if r.flagged else "MISSED"
+            print(f"[{tick}] {r.fixture.rule} {r.fixture.name}: "
+                  f"{r.fixture.description}")
+        print(f"{len(results) - len(missed)}/{len(results)} fixtures flagged")
+        return 1 if missed else 0
+
+    from repro.analysis.findings import render
+    from repro.analysis.lint import lint_paths
+
+    if args.lint is not None:
+        findings = lint_paths(args.lint or ["src/repro"])
+        out = render(findings)
+        if out:
+            print(out)
+        print(f"lint: {len(findings)} finding(s)")
+        return 1 if findings else 0
+
+    findings = lint_paths(["src/repro"])
+    from repro.analysis.jaxpr_audit import audit_tree
+
+    findings += audit_tree()
+    out = render(findings)
+    if out:
+        print(out)
+    print(f"analysis: {len(findings)} finding(s)")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

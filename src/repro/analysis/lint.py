@@ -1,0 +1,461 @@
+"""Layer 2: repo-specific AST lint over ``src/``.
+
+Rules (ids in ``findings.RULES``):
+
+  AL01  traced purity: inside functions registered as traced
+        (``registry.TRACED_FUNCTIONS`` plus any def directly decorated with
+        ``jax.jit`` / ``functools.partial(jax.jit, ...)``), no ``np.``/
+        ``numpy.`` attribute use, no ``.item()``, no ``float()``/``int()``/
+        ``bool()`` over a traced parameter, and no Python ``if``/``while``
+        whose test reads a traced parameter -- each is a silent host
+        round-trip or a trace-time constant where a runtime value was meant.
+  AL02  cache discipline: long-lived dict caches (module-level dicts mutated
+        by module functions, or dicts installed via ``__dict__``) must be
+        ``structs.BoundedCache`` (or visibly bounded via ``popitem``).
+  AL03  Pallas kernels (functions taking ``*_ref`` params and calling
+        ``pl.program_id``) must base-initialize their output tile: a store
+        to the last ``_ref`` param either unconditionally or under a
+        ``pl.when(<first-step> == 0)`` guard.  A kernel whose only output
+        stores sit under data-dependent guards returns garbage tiles
+        whenever a grid step skips them (the PR 6 bug class, source level).
+  AL04  no ``tobytes()``-keyed caches without shape/dtype context: inside a
+        ``*key*`` function or expression, a ``.tobytes()`` call must sit in
+        a tuple that also carries ``.shape`` and a dtype component.
+  AL05  unused module-level imports (the repo-local stand-in for ruff F401,
+        so the blocking CI lint job and the offline audit agree).
+
+``lint_paths`` walks real files; ``lint_source`` takes a source string --
+the seam the known-bad fixture corpus goes through.
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+
+from repro.analysis.findings import Finding
+from repro.analysis.registry import TRACED_FUNCTIONS
+
+#: constructors the cache rule trusts to be bounded
+_BOUNDED_CTORS = {"BoundedCache"}
+
+
+def _loc(path: str, node: ast.AST) -> str:
+    return f"{path}:{getattr(node, 'lineno', 0)}"
+
+
+def _call_name(node: ast.expr) -> str:
+    """Dotted name of a call target ('jax.jit', 'pl.when', ...)."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+    return ".".join(reversed(parts))
+
+
+def _names_in(node: ast.AST) -> set:
+    return {n.id for n in ast.walk(node) if isinstance(n, ast.Name)}
+
+
+def _is_jit_decorated(fn: ast.FunctionDef) -> tuple:
+    """(is_jitted, static_param_names) from the def's own decorators."""
+    statics = set()
+    for dec in fn.decorator_list:
+        target = dec.func if isinstance(dec, ast.Call) else dec
+        name = _call_name(target)
+        if name.endswith("jit"):
+            pass
+        elif name.endswith("partial") and isinstance(dec, ast.Call) and any(
+            _call_name(a).endswith("jit") for a in dec.args
+        ):
+            pass
+        else:
+            continue
+        if isinstance(dec, ast.Call):
+            for kw in dec.keywords:
+                if kw.arg in ("static_argnames", "static_argnums") and isinstance(
+                    kw.value, (ast.Tuple, ast.List)
+                ):
+                    for el in kw.value.elts:
+                        if isinstance(el, ast.Constant):
+                            statics.add(el.value)
+        return True, statics
+    return False, statics
+
+
+def _positional_params(fn: ast.FunctionDef) -> list:
+    args = fn.args
+    return [a.arg for a in args.posonlyargs + args.args] + (
+        [args.vararg.arg] if args.vararg else []
+    )
+
+
+# -- AL01 ---------------------------------------------------------------------
+
+
+def _traced_fn_findings(path: str, fn: ast.FunctionDef, array_params: set) -> list:
+    findings = []
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Attribute) and isinstance(node.value, ast.Name):
+            if node.value.id in ("np", "numpy"):
+                findings.append(Finding(
+                    "AL01", _loc(path, node),
+                    f"'{node.value.id}.{node.attr}' inside traced "
+                    f"'{fn.name}': numpy ops force a host round-trip "
+                    "(use jnp)",
+                ))
+        if isinstance(node, ast.Call):
+            cname = _call_name(node.func)
+            if cname.endswith(".item") or cname == "item":
+                findings.append(Finding(
+                    "AL01", _loc(path, node),
+                    f".item() inside traced '{fn.name}' blocks on device "
+                    "transfer",
+                ))
+            if cname in ("float", "int", "bool") and node.args and (
+                _names_in(node.args[0]) & array_params
+            ):
+                findings.append(Finding(
+                    "AL01", _loc(path, node),
+                    f"{cname}() over traced value "
+                    f"'{ast.unparse(node.args[0])}' inside '{fn.name}' "
+                    "forces concretization",
+                ))
+        if isinstance(node, (ast.If, ast.While)) and (
+            _names_in(node.test) & array_params
+        ):
+            kind = "if" if isinstance(node, ast.If) else "while"
+            findings.append(Finding(
+                "AL01", _loc(path, node),
+                f"Python {kind} on traced value "
+                f"'{ast.unparse(node.test)}' inside '{fn.name}': branch "
+                "on tracers with lax.cond/jnp.where",
+            ))
+    return findings
+
+
+def _check_traced_purity(path: str, tree: ast.Module, traced_overrides=None) -> list:
+    registry = {
+        t.name: set(t.array_params)
+        for t in TRACED_FUNCTIONS
+        if path.replace(os.sep, "/").endswith(t.file_suffix)
+    }
+    for name, params in (traced_overrides or ()):
+        registry[name] = set(params)
+    findings = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.FunctionDef):
+            continue
+        if node.name in registry:
+            arrays = registry[node.name]
+        else:
+            jitted, statics = _is_jit_decorated(node)
+            if not jitted:
+                continue
+            arrays = {p for p in _positional_params(node) if p not in statics}
+        findings += _traced_fn_findings(path, node, arrays)
+    return findings
+
+
+# -- AL02 ---------------------------------------------------------------------
+
+
+def _is_dict_ctor(node: ast.expr) -> bool:
+    if isinstance(node, ast.Dict):
+        return True
+    if isinstance(node, ast.Call):
+        return _call_name(node.func) in ("dict", "OrderedDict", "defaultdict")
+    return False
+
+
+def _is_empty_dict_seed(node: ast.expr) -> bool:
+    """``{}`` / ``dict()`` / ``OrderedDict()`` with no entries -- the cache
+    seed shape, as opposed to a literal metadata dict."""
+    if isinstance(node, ast.Dict):
+        return not node.keys
+    if isinstance(node, ast.Call):
+        return _call_name(node.func) in ("dict", "OrderedDict", "defaultdict") and not (
+            node.args or node.keywords
+        )
+    return False
+
+
+def _is_bounded_ctor(node: ast.expr) -> bool:
+    return isinstance(node, ast.Call) and _call_name(node.func).split(".")[-1] in _BOUNDED_CTORS
+
+
+def _check_caches(path: str, tree: ast.Module) -> list:
+    findings = []
+    src_names = set()
+    # module-level dicts...
+    module_dicts = {}
+    for node in tree.body:
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 and isinstance(
+            node.targets[0], ast.Name
+        ):
+            if _is_dict_ctor(node.value):
+                module_dicts[node.targets[0].id] = node
+    # ...mutated by any function in the module (a long-lived growing cache)
+    mutated, bounded = set(), set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, ast.Subscript) and isinstance(t.value, ast.Name):
+                    mutated.add(t.value.id)
+        if isinstance(node, ast.Call):
+            cname = _call_name(node.func)
+            head, _, tail = cname.rpartition(".")
+            if tail == "setdefault" and head in module_dicts:
+                mutated.add(head)
+            if tail == "popitem":
+                bounded.add(head)
+    for name, node in module_dicts.items():
+        if name in mutated and name not in bounded:
+            src_names.add(name)
+            findings.append(Finding(
+                "AL02", _loc(path, node),
+                f"module-level dict '{name}' grows without a bound: use "
+                "structs.BoundedCache (LRU + coerced keys)",
+            ))
+    # __dict__-installed side caches: x.__dict__.setdefault('name', {}) or
+    # x.__dict__['name'] = {} seeding a plain dict
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            cname = _call_name(node.func)
+            if cname.endswith("__dict__.setdefault") and len(node.args) == 2:
+                if _is_empty_dict_seed(node.args[1]) and not _is_bounded_ctor(node.args[1]):
+                    findings.append(Finding(
+                        "AL02", _loc(path, node),
+                        "__dict__.setdefault side cache seeds a plain dict: "
+                        "instance-lifetime caches must be BoundedCache",
+                    ))
+        if isinstance(node, ast.Assign) and len(node.targets) == 1:
+            t = node.targets[0]
+            if (
+                isinstance(t, ast.Subscript)
+                and isinstance(t.value, ast.Attribute)
+                and t.value.attr == "__dict__"
+                and _is_empty_dict_seed(node.value)
+                and not _is_bounded_ctor(node.value)
+            ):
+                findings.append(Finding(
+                    "AL02", _loc(path, node),
+                    "__dict__-installed side cache is a plain dict: "
+                    "instance-lifetime caches must be BoundedCache",
+                ))
+    return findings
+
+
+# -- AL03 ---------------------------------------------------------------------
+
+
+def _program_id_names(fn: ast.FunctionDef) -> set:
+    """Names bound to pl.program_id(...) results within the kernel."""
+    out = set()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+            if _call_name(node.value.func).endswith("program_id"):
+                for t in node.targets:
+                    if isinstance(t, ast.Name):
+                        out.add(t.id)
+    return out
+
+
+def _is_covering_guard(test: ast.expr, pid_names: set, ref_params: set) -> bool:
+    """True for ``<program_id-ish> == <static>`` (either side).
+
+    An equality between a grid index and a trace-static value (``ki == 0``,
+    ``ki == n_k - 1``) fires exactly once per output tile, so a store under
+    it covers the tile.  A guard reading kernel refs (``t < cnt_ref[oi]``)
+    is data-dependent: it can be skipped for a whole tile, which is exactly
+    the uninitialized-tile bug this rule exists for.
+    """
+    if not (isinstance(test, ast.Compare) and len(test.ops) == 1
+            and isinstance(test.ops[0], ast.Eq)):
+        return False
+    sides = (test.left, test.comparators[0])
+
+    def is_pid(n):
+        return (isinstance(n, ast.Name) and n.id in pid_names) or (
+            isinstance(n, ast.Call) and _call_name(n.func).endswith("program_id")
+        )
+
+    def is_static(n):
+        return not (_names_in(n) & (ref_params | pid_names))
+
+    return (is_pid(sides[0]) and is_static(sides[1])) or (
+        is_static(sides[0]) and is_pid(sides[1])
+    )
+
+
+def _check_kernels(path: str, tree: ast.Module) -> list:
+    findings = []
+    for fn in ast.walk(tree):
+        if not isinstance(fn, ast.FunctionDef):
+            continue
+        refs = [p for p in _positional_params(fn) if p.endswith("_ref")]
+        calls_pid = any(
+            isinstance(n, ast.Call) and _call_name(n.func).endswith("program_id")
+            for n in ast.walk(fn)
+        )
+        if len(refs) < 2 or not calls_pid:
+            continue
+        out_ref = refs[-1]
+        pid_names = _program_id_names(fn)
+
+        def stores_out(node):
+            return any(
+                isinstance(n, ast.Assign)
+                and any(
+                    isinstance(t, ast.Subscript)
+                    and isinstance(t.value, ast.Name)
+                    and t.value.id == out_ref
+                    for t in n.targets
+                )
+                for n in ast.walk(node)
+            )
+
+        initialized = False
+        for stmt in fn.body:
+            if isinstance(stmt, ast.Assign) and stores_out(stmt):
+                initialized = True  # unconditional top-level store
+            if isinstance(stmt, ast.FunctionDef):
+                for dec in stmt.decorator_list:
+                    if (
+                        isinstance(dec, ast.Call)
+                        and _call_name(dec.func).endswith("when")
+                        and dec.args
+                        and _is_covering_guard(dec.args[0], pid_names, set(refs))
+                        and stores_out(stmt)
+                    ):
+                        initialized = True
+        if not initialized:
+            findings.append(Finding(
+                "AL03", _loc(path, fn),
+                f"Pallas kernel '{fn.name}' never base-initializes its "
+                f"output tile '{out_ref}' (no unconditional or "
+                "first-grid-step store): skipped guards leave garbage "
+                "tiles",
+            ))
+    return findings
+
+
+# -- AL04 ---------------------------------------------------------------------
+
+
+def _check_bytes_keys(path: str, tree: ast.Module) -> list:
+    findings = []
+    for fn in ast.walk(tree):
+        if not isinstance(fn, ast.FunctionDef) or "key" not in fn.name:
+            continue
+        if fn.name.startswith("test_"):
+            continue  # tests construct aliasing probes on purpose
+        has_tobytes = any(
+            isinstance(n, ast.Call) and _call_name(n.func).endswith("tobytes")
+            for n in ast.walk(fn)
+        )
+        if not has_tobytes:
+            continue
+        attrs = {
+            n.attr
+            for n in ast.walk(fn)
+            if isinstance(n, (ast.Attribute,))
+        }
+        if "shape" not in attrs or "dtype" not in attrs:
+            findings.append(Finding(
+                "AL04", _loc(path, fn),
+                f"cache-key function '{fn.name}' keys on tobytes() without "
+                "shape/dtype context: different arrays can alias one "
+                "buffer (the PR 5 stale-layout bug)",
+            ))
+    return findings
+
+
+# -- AL05 ---------------------------------------------------------------------
+
+
+def _check_unused_imports(path: str, tree: ast.Module, source: str) -> list:
+    if os.path.basename(path) == "__init__.py":
+        return []
+    lines = source.splitlines()
+    imported = {}  # bound name -> node
+    for node in tree.body:
+        nodes = [node]
+        if isinstance(node, ast.Try):
+            nodes = node.body
+        for n in nodes:
+            if isinstance(n, ast.Import):
+                for alias in n.names:
+                    bound = alias.asname or alias.name.split(".")[0]
+                    imported[bound] = n
+            elif isinstance(n, ast.ImportFrom) and n.module != "__future__":
+                for alias in n.names:
+                    if alias.name == "*":
+                        continue
+                    imported[alias.asname or alias.name] = n
+    used = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Name):
+            used.add(node.id)
+        elif isinstance(node, ast.Attribute):
+            root = node
+            while isinstance(root, ast.Attribute):
+                root = root.value
+            if isinstance(root, ast.Name):
+                used.add(root.id)
+    # names re-exported via __all__ count as used
+    for node in tree.body:
+        if isinstance(node, ast.Assign) and any(
+            isinstance(t, ast.Name) and t.id == "__all__" for t in node.targets
+        ):
+            for el in getattr(node.value, "elts", ()):
+                if isinstance(el, ast.Constant):
+                    used.add(el.value)
+    findings = []
+    for name, node in sorted(imported.items()):
+        if name in used or name.startswith("_"):
+            continue
+        line = lines[node.lineno - 1] if node.lineno <= len(lines) else ""
+        if "noqa" in line:
+            continue
+        findings.append(Finding(
+            "AL05", _loc(path, node), f"unused import '{name}'"
+        ))
+    return findings
+
+
+# -- entry points -------------------------------------------------------------
+
+
+def lint_source(source: str, path: str, *, traced_overrides=None) -> list:
+    """Lint one source string (the fixture seam). ``traced_overrides`` is an
+    iterable of ``(function_name, array_param_names)`` added to the traced
+    registry for this file."""
+    tree = ast.parse(source, filename=path)
+    findings = []
+    findings += _check_traced_purity(path, tree, traced_overrides)
+    findings += _check_caches(path, tree)
+    findings += _check_kernels(path, tree)
+    findings += _check_bytes_keys(path, tree)
+    findings += _check_unused_imports(path, tree, source)
+    return findings
+
+
+def lint_paths(paths) -> list:
+    """Lint every ``.py`` file under the given files/directories."""
+    files = []
+    for p in paths:
+        if os.path.isdir(p):
+            for root, _, names in os.walk(p):
+                files += [
+                    os.path.join(root, n) for n in names if n.endswith(".py")
+                ]
+        elif p.endswith(".py"):
+            files.append(p)
+    findings = []
+    for f in sorted(files):
+        with open(f, encoding="utf-8") as fh:
+            findings += lint_source(fh.read(), os.path.relpath(f))
+    return findings

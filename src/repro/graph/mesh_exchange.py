@@ -86,7 +86,6 @@ across tile order, so state matches to rounding).
 
 from __future__ import annotations
 
-from collections import OrderedDict
 from functools import partial
 
 import jax
@@ -111,9 +110,10 @@ from repro.graph.program import (
     SsspProgram,
     VertexProgram,
     resolve_edge_plane,
+    validate_collective_signature,
     validate_program,
 )
-from repro.graph.structs import MeshEdgeLayout, PartitionedGraph
+from repro.graph.structs import BoundedCache, MeshEdgeLayout, PartitionedGraph
 from repro.kernels.bfs_relax.ops import (
     _block_dims,
     relax_blockmap_call,
@@ -121,9 +121,170 @@ from repro.kernels.bfs_relax.ops import (
 )
 from jax.sharding import PartitionSpec as P
 
+#: collectives ``_body`` contributes OUTSIDE the superstep loop -- the
+#: counter-reconstruction epilogue: five counter/flag psums (we, wv, ms,
+#: wire, pact) plus the final ``done`` pmax.  The per-superstep collectives
+#: are declared by ``VertexProgram.collective_signature()``; together they
+#: are the full expected collective footprint the jaxpr auditor
+#: (``repro.analysis.jaxpr_audit``, rule JX02) checks the trace against.
+MESH_WINDOW_EPILOGUE = {"psum": 5, "pmax": 1}
+
+#: the outer superstep loop's condition syncs the global any-active bit once
+#: per evaluation -- a device-local cond would let iteration counts diverge
+MESH_SUPERSTEP_COND = {"pmax": 1}
+
+#: default LRU bounds for the per-layout const uploads and jitted windows
+#: (the PR 5 cache policy the recompile-budget audit, rule JX04, holds
+#: scripted relayout/window sweeps to)
+DEFAULT_LAYOUT_CACHE_SIZE = 4
+DEFAULT_WINDOW_CACHE_SIZE = 8
+
 
 def mesh_size(mesh: Mesh) -> int:
     return int(mesh.devices.size)
+
+
+def plane_shards(pg: PartitionedGraph, program: VertexProgram, ml: MeshEdgeLayout):
+    """Per-device ``(lw, rw)`` edge planes for a program: the layout's own
+    weights for ``plane_key == "graph"``, else the program's ``[E]`` plane
+    permuted through the retained layout/shard edge ids."""
+    plane = resolve_edge_plane(pg, program)
+    if plane is None:
+        return ml.lw, ml.rw
+    pel = partitioned_edge_layout(pg)
+    plane_l = plane[pel.local_eid]  # dst-sorted local order
+    plane_r = plane[pel.remote_eid]  # dst-sorted remote order
+    lw = np.where(ml.lvalid, plane_l[ml.l_eid], 0.0).astype(np.float32)
+    rw = np.where(ml.rvalid, plane_r[ml.r_eid], 0.0).astype(np.float32)
+    return lw, rw
+
+
+def build_window_consts(
+    pg: PartitionedGraph,
+    program: VertexProgram,
+    ml: MeshEdgeLayout,
+    *,
+    backend: str = "xla",
+    block_n: int = 512,
+    block_e: int = 512,
+):
+    """Host-side ``(consts, statics)`` of one window program: the sharded
+    constant tables ``_body`` consumes (in its positional order) plus the
+    static block geometry for the kernel backend.
+
+    The single source of truth for the window's constant signature, shared
+    by ``MeshTraversalProgram._activate`` (which uploads the arrays) and the
+    jaxpr auditor's abstract trace (which only needs their shapes/dtypes) --
+    so the audited program is the deployed program by construction.
+    """
+    lw, rw = plane_shards(pg, program, ml)
+    consts = (
+        ml.lsrc, ml.ldst, lw, ml.lpart, ml.lvalid, ml.part_of_pos,
+        ml.rsrc, rw, ml.rslot, ml.rpart, ml.rvalid, ml.recv_idx,
+    )
+    statics = None
+    if backend != "xla":
+        # per-device static block maps for the kernel backend: one geometry
+        # per reduction plane (local rows vs wire slots), clamped exactly as
+        # relax_blockmap_call will re-derive them
+        d_n = ml.n_devices
+        bn_l, be_l, _, _ = _block_dims(
+            ml.n_pad, ml.e_local_pad, block_n, block_e
+        )
+        bn_w, be_w, _, _ = _block_dims(
+            d_n * ml.w_pad, ml.e_remote_pad, block_n, block_e
+        )
+        ls, lc, lt = ml.local_block_map(bn_l, be_l)
+        ws, wc, wt = ml.wire_block_map(bn_w, be_w)
+        consts = consts + (ls, lc, ws, wc)
+        statics = (bn_l, be_l, lt, bn_w, be_w, wt)
+    return consts, statics
+
+
+def window_cache_key(ml: MeshEdgeLayout, m_max: int, backend: str, statics) -> tuple:
+    """Canonical jit-cache key of one window program.
+
+    The traced fn depends on the layout only through these static shapes
+    (constants are arguments), so shape-identical layouts -- the common
+    re-layout case -- share one compiled program.  Shared by
+    ``MeshTraversalProgram.window`` and the recompile-budget audit (rule
+    JX04), which asserts a scripted relayout/window sweep stays within
+    ``DEFAULT_WINDOW_CACHE_SIZE`` distinct keys.
+    """
+    return (
+        int(m_max), ml.n_pad, ml.w_pad, ml.e_local_pad, ml.e_remote_pad,
+        str(backend), statics,
+    )
+
+
+def window_body(
+    pg: PartitionedGraph,
+    program: VertexProgram,
+    ml: MeshEdgeLayout,
+    m_max: int,
+    *,
+    backend: str = "xla",
+    statics=None,
+):
+    """``_body`` closed over its static parameters for one (layout, m_max) --
+    what ``shard_map`` maps, shared by ``MeshTraversalProgram._build`` and
+    ``abstract_window_jaxpr``."""
+    return partial(
+        MeshTraversalProgram._body,
+        m_max=int(m_max), n_parts=pg.n_parts, n_pad=ml.n_pad,
+        w_pad=ml.w_pad, d_n=ml.n_devices, prog=program,
+        n_global=pg.graph.n_vertices, backend=backend, statics=statics,
+    )
+
+
+def abstract_window_jaxpr(
+    pg: PartitionedGraph,
+    program: VertexProgram | None = None,
+    *,
+    d_n: int,
+    m_max: int = 3,
+    s_batch: int = 2,
+    backend: str = "xla",
+    device_of_part: np.ndarray | None = None,
+    block_n: int = 512,
+    block_e: int = 512,
+):
+    """Abstractly trace the mesh window over ``d_n`` *abstract* devices.
+
+    Builds the exact ``shard_map`` program ``MeshTraversalProgram._build``
+    would compile -- same body, same constant signature via
+    ``build_window_consts`` -- but over ``jax.sharding.AbstractMesh``, so the
+    jaxpr auditor can walk the real SPMD trace (collectives, Pallas grids,
+    host callbacks) in a single-device CI job with zero mesh devices.
+    """
+    from jax.sharding import AbstractMesh
+
+    program = validate_program(program or SsspProgram())
+    validate_backend(backend)
+    if device_of_part is None:
+        device_of_part = contiguous_device_map(pg.n_parts, d_n)
+    ml = mesh_edge_layout(pg, device_of_part, d_n)
+    consts, statics = build_window_consts(
+        pg, program, ml, backend=backend, block_n=block_n, block_e=block_e
+    )
+    body = window_body(pg, program, ml, m_max, backend=backend, statics=statics)
+    state = traversal_state_spec()
+    rep = P()
+    mapped = shard_map(
+        body,
+        mesh=AbstractMesh(((PARTS, int(d_n)),)),
+        in_specs=(state, state, rep)
+        + tuple(per_device_spec(np.ndim(c)) for c in consts),
+        out_specs=(state, state) + (rep,) * 9,
+        check_rep=False,
+    )
+    sds = jax.ShapeDtypeStruct
+    args = (
+        sds((s_batch, ml.state_width), program.dtype),
+        sds((s_batch, ml.state_width), np.bool_),
+        sds((s_batch,), np.int32),
+    ) + tuple(sds(np.shape(c), np.asarray(c).dtype) for c in consts)
+    return jax.make_jaxpr(mapped)(*args)
 
 
 def place_shard(
@@ -216,8 +377,8 @@ class MeshTraversalProgram:
         device_of_part: np.ndarray | None = None,
         program: VertexProgram | None = None,
         *,
-        layout_cache_size: int = 4,
-        window_cache_size: int = 8,
+        layout_cache_size: int = DEFAULT_LAYOUT_CACHE_SIZE,
+        window_cache_size: int = DEFAULT_WINDOW_CACHE_SIZE,
         backend: str = "xla",
         block_n: int = 512,
         block_e: int = 512,
@@ -233,65 +394,48 @@ class MeshTraversalProgram:
         self.mesh = mesh
         self.pg = pg
         self.program = validate_program(program or SsspProgram())
+        # the engine shape runs exactly ONE pre-aggregated all_to_all per
+        # superstep and defers every counter psum to the window epilogue
+        # (MESH_WINDOW_EPILOGUE); the declared signature is the same source
+        # of truth the jaxpr auditor checks the trace against, so a program
+        # declaring a different exchange shape is rejected up front
+        self.signature = validate_collective_signature(self.program)
+        if self.signature["all_to_all"] != 1 or self.signature["psum"] != 0:
+            raise NotImplementedError(
+                f"{self.program.name}: collective_signature() declares "
+                f"{self.signature}, but this engine's exchange shape is one "
+                "all_to_all per superstep with psums only in the epilogue"
+            )
         self.n_parts = pg.n_parts
         validate_backend(backend)
         self.backend = backend
         self._block_n, self._block_e = int(block_n), int(block_e)
         # layout key -> (layout, uploaded device consts); LRU so a replanned
         # run cycling through placements holds a bounded device footprint
-        self._layout_cache_size = int(layout_cache_size)
-        self._layout_states: OrderedDict[tuple, tuple] = OrderedDict()
-        # (m_max, layout static shapes) -> jitted window fn; a swap between
-        # shape-identical layouts reuses the same program (consts are args)
-        self._window_cache_size = int(window_cache_size)
-        self._windows: OrderedDict[tuple, object] = OrderedDict()
+        self._layout_states = BoundedCache(layout_cache_size)
+        # window_cache_key -> jitted window fn; a swap between shape-identical
+        # layouts reuses the same program (consts are args)
+        self._windows = BoundedCache(window_cache_size)
         self._activate(mesh_edge_layout(pg, device_of_part, d_n))
 
     def _activate(self, ml: MeshEdgeLayout) -> None:
         """Make ``ml`` the active layout, uploading its consts on first use."""
-        key = ml.layout_key
-        entry = self._layout_states.get(key)
-        if entry is None:
-            lw, rw = self._plane_shards(self.pg, ml)
-            put = lambda a: jax.device_put(
-                jnp.asarray(a), per_device_sharding(self.mesh, np.ndim(a))
+
+        def build():
+            consts_np, statics = build_window_consts(
+                self.pg, self.program, ml,
+                backend=self.backend,
+                block_n=self._block_n, block_e=self._block_e,
             )
-            consts = (
-                put(ml.lsrc),
-                put(ml.ldst),
-                put(lw),
-                put(ml.lpart),
-                put(ml.lvalid),
-                put(ml.part_of_pos),
-                put(ml.rsrc),
-                put(rw),
-                put(ml.rslot),
-                put(ml.rpart),
-                put(ml.rvalid),
-                put(ml.recv_idx),
+            consts = tuple(
+                jax.device_put(
+                    jnp.asarray(a), per_device_sharding(self.mesh, np.ndim(a))
+                )
+                for a in consts_np
             )
-            statics = None
-            if self.backend != "xla":
-                # per-device static block maps for the kernel backend: one
-                # geometry per reduction plane (local rows vs wire slots),
-                # clamped exactly as relax_blockmap_call will re-derive them
-                d_n = ml.n_devices
-                bn_l, be_l, _, _ = _block_dims(
-                    ml.n_pad, ml.e_local_pad, self._block_n, self._block_e
-                )
-                bn_w, be_w, _, _ = _block_dims(
-                    d_n * ml.w_pad, ml.e_remote_pad,
-                    self._block_n, self._block_e,
-                )
-                ls, lc, lt = ml.local_block_map(bn_l, be_l)
-                ws, wc, wt = ml.wire_block_map(bn_w, be_w)
-                consts = consts + (put(ls), put(lc), put(ws), put(wc))
-                statics = (bn_l, be_l, lt, bn_w, be_w, wt)
-            entry = (ml, consts, statics)
-            self._layout_states[key] = entry
-        self._layout_states.move_to_end(key)
-        while len(self._layout_states) > self._layout_cache_size:
-            self._layout_states.popitem(last=False)
+            return (ml, consts, statics)
+
+        entry = self._layout_states.get_or_build(ml.layout_key, build)
         self.layout, self._consts, self._statics = entry
         self._const_specs = tuple(
             per_device_spec(c.ndim) for c in self._consts
@@ -313,20 +457,6 @@ class MeshTraversalProgram:
             old, ml, state, identity=self.program.identity, mesh=self.mesh
         )
         return state, True
-
-    def _plane_shards(self, pg: PartitionedGraph, ml: MeshEdgeLayout):
-        """Per-device ``(lw, rw)`` edge planes for this program: the layout's
-        own weights for ``plane_key == "graph"``, else the program's ``[E]``
-        plane permuted through the retained layout/shard edge ids."""
-        plane = resolve_edge_plane(pg, self.program)
-        if plane is None:
-            return ml.lw, ml.rw
-        pel = partitioned_edge_layout(pg)
-        plane_l = plane[pel.local_eid]  # dst-sorted local order
-        plane_r = plane[pel.remote_eid]  # dst-sorted remote order
-        lw = np.where(ml.lvalid, plane_l[ml.l_eid], 0.0).astype(np.float32)
-        rw = np.where(ml.rvalid, plane_r[ml.r_eid], 0.0).astype(np.float32)
-        return lw, rw
 
     # -- state layout --------------------------------------------------------
 
@@ -353,29 +483,13 @@ class MeshTraversalProgram:
         it, sg, wire, pact, done)`` with ``dist``/``frontier`` in the padded
         sharded layout."""
         ml = self.layout
-        # the traced program depends on the layout only through these static
-        # shapes; shape-identical layouts (the common re-layout case) share
-        # one jitted fn, so a swap re-jits at most once per distinct shape
-        key = (
-            m_max, ml.n_pad, ml.w_pad, ml.e_local_pad, ml.e_remote_pad,
-            self.backend, self._statics,
-        )
-        fn = self._windows.get(key)
-        if fn is None:
-            fn = self._build(m_max)
-            self._windows[key] = fn
-        self._windows.move_to_end(key)
-        while len(self._windows) > self._window_cache_size:
-            self._windows.popitem(last=False)
+        key = window_cache_key(ml, m_max, self.backend, self._statics)
+        fn = self._windows.get_or_build(key, lambda: self._build(m_max))
         return fn(dist, frontier, nst0, *self._consts)
 
     def _build(self, m_max: int):
-        ml = self.layout
-        n_parts, n_pad, w_pad, d_n = self.n_parts, ml.n_pad, ml.w_pad, ml.n_devices
-        body = partial(
-            self._body, m_max=m_max, n_parts=n_parts, n_pad=n_pad,
-            w_pad=w_pad, d_n=d_n, prog=self.program,
-            n_global=self.pg.graph.n_vertices,
+        body = window_body(
+            self.pg, self.program, self.layout, m_max,
             backend=self.backend, statics=self._statics,
         )
         state = traversal_state_spec()

@@ -19,11 +19,12 @@ and cached on the ``PartitionedGraph`` instance.
 from __future__ import annotations
 
 import dataclasses
-from collections import OrderedDict
 
 import numpy as np
 
 from repro.graph.structs import (
+    _BLOCK_CACHE_MAX,
+    BoundedCache,
     CsrEdgeLayout,
     Graph,
     MeshEdgeLayout,
@@ -95,6 +96,10 @@ def contiguous_device_map(n_parts: int, n_devices: int) -> np.ndarray:
 #: layouts retained per (PartitionedGraph, canonical key); replanned runs can
 #: visit many device maps, so the cache is LRU-bounded rather than unbounded
 _LAYOUT_CACHE_MAX = 16
+
+#: incremental-rebuild bases retained per device count (one mesh width is the
+#: common case; a handful covers elastic sweeps over several widths)
+_LAST_BASE_CACHE_MAX = 4
 
 
 @dataclasses.dataclass(frozen=True)
@@ -201,12 +206,18 @@ def mesh_edge_layout(
             f"device ids must lie in [0, {n_devices}), got "
             f"[{device_of_part.min()}, {device_of_part.max()}]"
         )
-    cache = pg.__dict__.setdefault("_mesh_layouts", OrderedDict())
+    cache = pg.__dict__.get("_mesh_layouts")
+    if not isinstance(cache, BoundedCache):
+        cache = BoundedCache(_LAYOUT_CACHE_MAX)
+        pg.__dict__["_mesh_layouts"] = cache
     key = mesh_layout_key(device_of_part, n_devices)
     if key in cache:
         cache.move_to_end(key)
         return cache[key]
-    last = pg.__dict__.setdefault("_mesh_layout_last", {})
+    last = pg.__dict__.get("_mesh_layout_last")
+    if not isinstance(last, BoundedCache):
+        last = BoundedCache(_LAST_BASE_CACHE_MAX)
+        pg.__dict__["_mesh_layout_last"] = last
     if base is _AUTO_BASE:
         base = last.get(int(n_devices))
     if base is not None and (
@@ -215,11 +226,8 @@ def mesh_edge_layout(
         base = None
 
     out = _build_mesh_layout(pg, device_of_part, int(n_devices), base)
-    cache[key] = out
-    cache.move_to_end(key)
-    while len(cache) > _LAYOUT_CACHE_MAX:
-        cache.popitem(last=False)
-    last[int(n_devices)] = out
+    cache.put(key, out)
+    last.put(int(n_devices), out)
     return out
 
 
@@ -453,8 +461,8 @@ def _build_mesh_layout(
         # carried: recompute only the rows of devices whose edges were
         # rebuilt, copy the rest.  Shapes are stable here by construction
         # (any pad change degraded to base=None above).
-        carried = {}
-        for key, (bstart, bcnt, _) in base.__dict__.get("_block_maps", {}).items():
+        carried = BoundedCache(_BLOCK_CACHE_MAX)
+        for key, (bstart, bcnt, _) in (base.__dict__.get("_block_maps") or {}).items():
             kind, bn, be = key
             aff = vert_aff if kind == "local" else src_aff
             edge_rows = ldst if kind == "local" else rslot

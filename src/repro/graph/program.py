@@ -60,6 +60,25 @@ Writing a new program: subclass ``VertexProgram``, pick ``reduce``, implement
 hand it to ``get_engine(pg, program=...)``, ``ElasticBSPExecutor`` or
 ``bsp.run_program`` -- dense and mesh execution, windowing, counters, and
 elastic placement come for free.
+
+Writing an *analyzable* VertexProgram: the static-analysis layer
+(``repro.analysis``, CI-gated) abstractly traces both window programs for
+every registered program and proves hot-path invariants from the program's
+declared spec, so keep the spec honest and the traced methods pure:
+
+  * ``relax``/``combine``/``is_active``/``apply`` are traced -- jnp ops on
+    their arguments only; no ``np.``, ``.item()``, ``float()``, or Python
+    branches on traced values (rule AL01), and ``relax`` must map
+    ``identity`` to ``identity`` (rule JX05 probes this numerically).
+  * ``identity`` must equal the dtype-derived identity of ``reduce`` (what
+    the Pallas kernels pad with); override ``dtype``, not ``identity``.
+  * ``collective_signature()`` declares the per-superstep SPMD collective
+    footprint of the mesh window.  The mesh engine validates it at
+    construction and the auditor (rule JX02) checks the traced
+    ``shard_map`` body against it -- count, order, and axis name -- so a
+    conditionally-skipped or reordered collective (a deadlock at D>1) is
+    caught at trace time.  The default signature covers both engine
+    shapes; a program only overrides it alongside a new engine shape.
 """
 
 from __future__ import annotations
@@ -114,6 +133,32 @@ class VertexProgram:
     def key(self) -> tuple:
         """Hashable engine-cache key (override for parameterized programs)."""
         return (self.name,)
+
+    def collective_signature(self) -> dict:
+        """Declared SPMD collective footprint of ONE superstep of the mesh
+        window program -- the shared source of truth between the engine
+        (``graph.mesh_exchange`` validates it at construction; its wire
+        counters bill exactly ``all_to_all`` exchange rounds per superstep)
+        and the jaxpr auditor (``repro.analysis.jaxpr_audit`` checks the
+        traced ``shard_map`` body against it, rule JX02).
+
+        Keys:
+          ``all_to_all``     value-bearing exchange rounds at the superstep
+                             boundary (the engine shape runs exactly one,
+                             pre-aggregated per destination),
+          ``psum``           value psums inside the superstep body (the
+                             engine defers all counter psums to the window
+                             epilogue, so this is 0),
+          ``pmax_boundary``  scalar sync pmaxes at the superstep boundary
+                             (monotone: the next-frontier any-active sync;
+                             stationary: that plus the budget sync),
+          ``pmax_closure``   pmaxes per local-closure iteration (monotone
+                             only: the inner while's globally-synced cond
+                             plus its body's convergence sync).
+        """
+        if self.stationary:
+            return {"all_to_all": 1, "psum": 0, "pmax_boundary": 2, "pmax_closure": 0}
+        return {"all_to_all": 1, "psum": 0, "pmax_boundary": 1, "pmax_closure": 2}
 
     # -- the algebra (traced) ------------------------------------------------
 
@@ -207,6 +252,34 @@ def validate_program(program: VertexProgram) -> VertexProgram:
                 f"superstep_budget, got {budget!r}"
             )
     return program
+
+
+#: keys every ``collective_signature()`` must declare
+SIGNATURE_KEYS = ("all_to_all", "psum", "pmax_boundary", "pmax_closure")
+
+
+def validate_collective_signature(program: VertexProgram) -> dict:
+    """Validate and return the program's declared collective signature.
+
+    Called by the mesh engine at construction and by the auditor before
+    checking a trace, so a malformed declaration fails loudly in both
+    places rather than silently passing an empty expectation.
+    """
+    sig = dict(program.collective_signature())
+    missing = [k for k in SIGNATURE_KEYS if k not in sig]
+    extra = [k for k in sig if k not in SIGNATURE_KEYS]
+    if missing or extra:
+        raise ValueError(
+            f"{program.name}: collective_signature() must declare exactly "
+            f"{SIGNATURE_KEYS}; missing {missing}, unexpected {extra}"
+        )
+    for k, v in sig.items():
+        if not isinstance(v, int) or v < 0:
+            raise ValueError(
+                f"{program.name}: collective_signature()[{k!r}] must be a "
+                f"non-negative int, got {v!r}"
+            )
+    return sig
 
 
 def _source_init(

@@ -12,11 +12,47 @@ as jnp device arrays.
 from __future__ import annotations
 
 import dataclasses
+from collections import OrderedDict
 from functools import cached_property
 
 import numpy as np
 
 INF_DIST = np.float32(np.inf)
+
+#: Bound on per-layout block-map / block-range side caches.  Geometry keys are
+#: (block_n, block_e) pairs; a run touches one or two geometries, so a small
+#: LRU never thrashes while still bounding pathological sweeps.
+_BLOCK_CACHE_MAX = 8
+
+
+class BoundedCache(OrderedDict):
+    """LRU-bounded side cache: at most ``max_entries`` live entries.
+
+    The repo-wide cache discipline (checked by ``repro.analysis`` rule AL02):
+    every long-lived dict cache must be bounded, and its keys must be
+    *coerced* scalars/tuples (``int(...)``, ``str(...)``, canonical layout
+    keys via ``mesh_layout_key``) so dtype or type aliases of the same value
+    hit one entry instead of growing the cache.
+    """
+
+    def __init__(self, max_entries: int, *args):
+        super().__init__(*args)
+        self.max_entries = int(max_entries)
+
+    def put(self, key, value):
+        """Insert ``key`` as most-recently-used and evict past the bound."""
+        self[key] = value
+        self.move_to_end(key)
+        while len(self) > self.max_entries:
+            self.popitem(last=False)
+        return value
+
+    def get_or_build(self, key, build):
+        """Return the cached value for ``key``, building (and bounding) on miss."""
+        if key in self:
+            self.move_to_end(key)
+            return self[key]
+        return self.put(key, build())
 
 
 def block_ranges_for(
@@ -89,13 +125,15 @@ class CsrEdgeLayout:
         bounds the kernel's inner grid dimension (vs ``ceil(E/block_e)`` for
         the dense grid that tests intersection per tile).
         """
-        key = ("block_ranges", block_n, block_e)
-        cached = self.__dict__.setdefault("_block_cache", {})
-        if key not in cached:
-            cached[key] = block_ranges_for(
-                self.dst, self.n_vertices, block_n, block_e
-            )
-        return cached[key]
+        key = ("block_ranges", int(block_n), int(block_e))
+        cached = self.__dict__.get("_block_cache")
+        if not isinstance(cached, BoundedCache):
+            cached = BoundedCache(_BLOCK_CACHE_MAX)
+            self.__dict__["_block_cache"] = cached
+        return cached.get_or_build(
+            key,
+            lambda: block_ranges_for(self.dst, self.n_vertices, int(block_n), int(block_e)),
+        )
 
 
 def mesh_layout_key(device_of_part: np.ndarray, n_devices: int) -> tuple:
@@ -225,8 +263,12 @@ class MeshEdgeLayout:
 
     def _block_map(self, kind: str, block_n: int, block_e: int):
         key = (kind, int(block_n), int(block_e))
-        cache = self.__dict__.setdefault("_block_maps", {})
-        if key not in cache:
+        cache = self.__dict__.get("_block_maps")
+        if not isinstance(cache, BoundedCache):
+            cache = BoundedCache(_BLOCK_CACHE_MAX, cache or ())
+            self.__dict__["_block_maps"] = cache
+
+        def build():
             if kind == "local":
                 rows, nseg = self.ldst, self.n_pad
             else:
@@ -237,8 +279,9 @@ class MeshEdgeLayout:
             ]
             start = np.stack([p[0] for p in per_dev])
             count = np.stack([p[1] for p in per_dev])
-            cache[key] = (start, count, max(1, int(count.max())))
-        return cache[key]
+            return (start, count, max(1, int(count.max())))
+
+        return cache.get_or_build(key, build)
 
     def local_block_map(self, block_n: int, block_e: int):
         """(start [D, NB], count [D, NB], t_max) over per-device local edges

@@ -96,8 +96,14 @@ from repro.graph.program import (
     resolve_edge_plane,
     validate_program,
 )
-from repro.graph.structs import PartitionedGraph
+from repro.graph.structs import BoundedCache, PartitionedGraph
 from repro.kernels.bfs_relax.ops import make_relax_fn, validate_backend
+
+#: per-graph bound on cached per-program edge-plane device arrays (keyed by
+#: coerced ``plane_key``) and on cached engines (keyed by coerced knobs) --
+#: the AL02 cache discipline: bounded LRU, canonical keys
+_PLANE_CACHE_MAX = 8
+_ENGINE_CACHE_MAX = 8
 
 
 class SuperstepResult(NamedTuple):
@@ -154,15 +160,20 @@ def plane_arrays(pg: PartitionedGraph, program: VertexProgram):
     if program.plane_key == "graph":
         dev = _device_arrays(pg)
         return dev.lw, dev.rw
-    cache = pg.__dict__.setdefault("_plane_device_arrays", {})
-    if program.plane_key not in cache:
+    cache = pg.__dict__.get("_plane_device_arrays")
+    if not isinstance(cache, BoundedCache):
+        cache = BoundedCache(_PLANE_CACHE_MAX)
+        pg.__dict__["_plane_device_arrays"] = cache
+
+    def build():
         plane = resolve_edge_plane(pg, program)  # O(E); only on cache miss
         layout = partitioned_edge_layout(pg)
-        cache[program.plane_key] = (
+        return (
             jnp.asarray(plane[layout.local_eid]),
             jnp.asarray(plane[layout.remote_eid]),
         )
-    return cache[program.plane_key]
+
+    return cache.get_or_build(str(program.plane_key), build)
 
 
 def make_superstep_fn(pg: PartitionedGraph) -> Callable[[jax.Array, jax.Array], SuperstepResult]:
@@ -391,6 +402,23 @@ class TraversalEngine:
             out = self._mesh_prog.window(dist, frontier, nst0, k)
             return TraversalResult(*out[:9]), out[9], out[10]
         return self._window(dist, frontier, nst0, k)
+
+    def window_jaxpr(self, *, k: int = 3, s_batch: int = 2):
+        """Abstractly trace this engine's dense window program -- the exact
+        fn ``_launch`` jits -- for the jaxpr auditor (``repro.analysis``).
+        Mesh engines are traced device-free via
+        ``mesh_exchange.abstract_window_jaxpr`` instead."""
+        if self._mesh_prog is not None:
+            raise NotImplementedError(
+                "trace mesh engines with mesh_exchange.abstract_window_jaxpr"
+            )
+        sds = jax.ShapeDtypeStruct
+        return jax.make_jaxpr(self._window_impl, static_argnums=3)(
+            sds((s_batch, self.n), self.program.dtype),
+            sds((s_batch, self.n), np.bool_),
+            sds((s_batch,), np.int32),
+            int(k),
+        )
 
     # -- device program ------------------------------------------------------
 
@@ -697,18 +725,22 @@ def get_engine(
     default balanced contiguous partition map is assumed (construct
     ``TraversalEngine`` directly for a custom ``device_of_part``).
     """
-    engines = pg.__dict__.setdefault("_traversal_engines", {})
+    engines = pg.__dict__.get("_traversal_engines")
+    if not isinstance(engines, BoundedCache):
+        engines = BoundedCache(_ENGINE_CACHE_MAX)
+        pg.__dict__["_traversal_engines"] = engines
     mesh_key = (
-        None if mesh is None else tuple(d.id for d in mesh.devices.flat)
+        None if mesh is None else tuple(int(d.id) for d in mesh.devices.flat)
     )
     prog_key = (program or SsspProgram()).key
-    key = (m_max, collect_subgraphs, mesh_key, prog_key, backend)
-    if key not in engines:
-        engines[key] = TraversalEngine(
+    key = (int(m_max), bool(collect_subgraphs), mesh_key, prog_key, str(backend))
+    return engines.get_or_build(
+        key,
+        lambda: TraversalEngine(
             pg, program=program, m_max=m_max,
             collect_subgraphs=collect_subgraphs, mesh=mesh, backend=backend,
-        )
-    return engines[key]
+        ),
+    )
 
 
 # -- numpy reference implementations (test oracles) ---------------------------

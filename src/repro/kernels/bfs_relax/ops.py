@@ -31,13 +31,12 @@ parity mode).
 from __future__ import annotations
 
 import functools
-from collections import OrderedDict
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.graph.structs import block_ranges_for
+from repro.graph.structs import BoundedCache, block_ranges_for
 from repro.kernels.bfs_relax.kernel import (
     bfs_relax_kernel,
     bfs_relax_kernel_blockmap,
@@ -152,15 +151,10 @@ _DEVICE_CACHE_MAX = 8
 def _device_cached(layout, key: tuple, build):
     """Fetch-or-build an entry in the layout's bounded device cache."""
     cache = layout.__dict__.get("_device_cache")
-    if not isinstance(cache, OrderedDict):
-        cache = OrderedDict()
+    if not isinstance(cache, BoundedCache):
+        cache = BoundedCache(_DEVICE_CACHE_MAX)
         layout.__dict__["_device_cache"] = cache
-    if key not in cache:
-        cache[key] = build()
-    cache.move_to_end(key)
-    while len(cache) > _DEVICE_CACHE_MAX:
-        cache.popitem(last=False)
-    return cache[key]
+    return cache.get_or_build(key, build)
 
 
 def _layout_edges_on_device(layout):

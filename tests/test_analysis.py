@@ -1,0 +1,121 @@
+"""Tier-1 gate for the static-analysis layer (``repro.analysis``).
+
+Green side: the jaxpr auditor passes every builtin program x backend x
+{dense, mesh} on the current tree, the AST lint is clean over the whole
+repo, and the recompile-budget sweep stays within the PR 5 cache policy.
+Mesh audits trace through ``AbstractMesh`` -- no forced devices, no ``mesh``
+marker, they run in the plain single-device job.
+
+Red side: every fixture in the known-bad corpus (the PR 5 stale cache key,
+the PR 6 zero-size grid and uninitialized tile, dropped/conditional/unsynced
+collectives, host callbacks, numpy-in-traced source) must be flagged with
+its pinned rule id by the SAME checkers the green side runs.
+"""
+
+from __future__ import annotations
+
+import pytest
+
+from repro.analysis import __main__ as analysis_main
+from repro.analysis.findings import RULES, Finding, render
+from repro.analysis.fixtures import ALL_FIXTURES, run_fixtures
+from repro.analysis.jaxpr_audit import (
+    audit_dense,
+    audit_mesh,
+    audit_recompile_budget,
+    default_audit_graph,
+)
+from repro.analysis.lint import lint_paths
+from repro.analysis.registry import AUDIT_BACKENDS, AUDIT_MESH_WIDTH
+from repro.graph.program import BUILTIN_PROGRAMS
+
+PROGRAM_NAMES = sorted(BUILTIN_PROGRAMS)
+
+
+@pytest.fixture(scope="module")
+def pg():
+    return default_audit_graph()
+
+
+# -- green: the current tree passes the audit --------------------------------
+
+
+@pytest.mark.parametrize("backend", AUDIT_BACKENDS)
+@pytest.mark.parametrize("name", PROGRAM_NAMES)
+def test_dense_window_audits_clean(pg, name, backend):
+    findings = audit_dense(pg, BUILTIN_PROGRAMS[name](), backend)
+    assert not findings, render(findings)
+
+
+@pytest.mark.parametrize("backend", AUDIT_BACKENDS)
+@pytest.mark.parametrize("name", PROGRAM_NAMES)
+def test_mesh_window_audits_clean(pg, name, backend):
+    findings = audit_mesh(pg, BUILTIN_PROGRAMS[name](), backend,
+                          AUDIT_MESH_WIDTH)
+    assert not findings, render(findings)
+
+
+@pytest.mark.parametrize("backend", AUDIT_BACKENDS)
+def test_recompile_budget_over_relayout_sweep(pg, backend):
+    """A replan cycle (two placements revisited, window lengths swept with
+    revisits) must not mint more jit keys than (lengths x layouts) and must
+    fit the window cache."""
+    findings = audit_recompile_budget(
+        pg, None, backend=backend,
+        windows=(1, 4, 8, 4, 1), rotations=(0, 1, 0, 1),
+    )
+    assert not findings, render(findings)
+
+
+def test_lint_clean_on_tree():
+    findings = lint_paths(["src/repro", "benchmarks", "tests", "examples"])
+    assert not findings, render(findings)
+
+
+# -- red: the known-bad corpus is 100% flagged -------------------------------
+
+
+@pytest.mark.parametrize(
+    "fixture", ALL_FIXTURES, ids=[f.name for f in ALL_FIXTURES]
+)
+def test_fixture_is_flagged(fixture):
+    findings = fixture.run()
+    hits = [f for f in findings if f.rule == fixture.rule]
+    assert hits, (
+        f"{fixture.name}: no {fixture.rule} finding; got:\n"
+        + (render(findings) or "(nothing)")
+    )
+    assert any(fixture.must_match in f.message for f in hits), (
+        f"{fixture.name}: {fixture.rule} fired but no message contains "
+        f"{fixture.must_match!r}:\n" + render(hits)
+    )
+
+
+def test_corpus_covers_both_layers():
+    rules = {f.rule for f in ALL_FIXTURES}
+    assert any(r.startswith("JX") for r in rules)
+    assert any(r.startswith("AL") for r in rules)
+    assert rules <= set(RULES)
+
+
+def test_findings_reject_unknown_rule():
+    with pytest.raises(AssertionError):
+        Finding("ZZ99", "nowhere.py:1", "no such rule")
+
+
+# -- CLI ---------------------------------------------------------------------
+
+
+def test_cli_fixtures_mode_exits_zero(capsys):
+    assert analysis_main.main(["--fixtures"]) == 0
+    out = capsys.readouterr().out
+    assert f"{len(ALL_FIXTURES)}/{len(ALL_FIXTURES)} fixtures flagged" in out
+
+
+def test_cli_lint_mode_exits_zero(capsys):
+    assert analysis_main.main(["--lint", "src/repro"]) == 0
+    assert "0 finding(s)" in capsys.readouterr().out
+
+
+def test_run_fixtures_reports_all_flagged():
+    assert all(r.flagged for r in run_fixtures())

@@ -59,11 +59,32 @@ def test_mesh_job_forces_8_devices_and_runs_mesh_marked_tests():
     assert "benchmarks.traversal_bench --smoke" in runs
 
 
-def test_lint_job_is_non_blocking_ruff():
+def test_lint_job_is_blocking_and_runs_both_linters():
+    """PR 7 flipped lint from advisory to blocking: ruff E/F plus the
+    repo-specific AST rules (repro.analysis --lint) in one gating job."""
     wf = _load()
     job = wf["jobs"]["lint"]
-    assert job["continue-on-error"] is True
-    assert any("ruff check" in r for r in _run_lines(job))
+    assert "continue-on-error" not in job
+    runs = _run_lines(job)
+    assert any("ruff check" in r for r in runs)
+    assert any("repro.analysis --lint" in r for r in runs)
+
+
+def test_tier1_job_gates_on_static_analysis():
+    """Both analysis steps are pinned tier-1 gates: the fixture corpus
+    (checkers still catch every seeded known-bad) must run BEFORE the live
+    audit (tree is clean), and both before the test suite."""
+    wf = _load()
+    runs = _run_lines(wf["jobs"]["tier1"])
+    fixture_idx = next(
+        i for i, r in enumerate(runs) if "repro.analysis --fixtures" in r
+    )
+    audit_idx = next(
+        i for i, r in enumerate(runs)
+        if r.strip() == "python -m repro.analysis"
+    )
+    suite_idx = next(i for i, r in enumerate(runs) if "pytest" in r)
+    assert fixture_idx < audit_idx < suite_idx
 
 
 def test_requirements_pin_jax_cpu():
