@@ -52,12 +52,24 @@ row; projected TPU per-call cost comes from ``benchmarks.kernel_bench``'s
 roofline model and is attached to the section.  ``--kernel-path`` alone
 merges just this sweep into an existing ``BENCH_traversal.json``.
 
+The ``--mirror`` sweep (hub-vertex mirroring, also part of the full run)
+compares the mirrored mesh engine (``mirror_degree`` in ``MIRROR_DEGREES``)
+against the unmirrored path at D=8 on a denser weighted R-MAT twin
+(avg degree ``MIRROR_RMAT_DEGREE``, where hub fan-in dominates): per
+(threshold, program) it asserts result parity in-run (bit-identical state +
+counters for the min-programs, counters-exact/state-allclose for PageRank)
+and records wire slots/bytes per superstep both ways; the child asserts the
+>= 25% best-case reduction the acceptance bar requires.  ``--mirror`` alone
+merges just this sweep into an existing ``BENCH_traversal.json``.
+
 ``--smoke`` is the CI gate: on a tiny graph it asserts the wire-savings and
-elastic-vs-static invariants (plus relayout bit-identity and xla vs
-pallas-interpret mesh parity) in a short forced-device child, and
+elastic-vs-static invariants (plus relayout bit-identity, xla vs
+pallas-interpret mesh parity, and mirrored-vs-unmirrored parity with
+strictly fewer wire slots) in a short forced-device child, and
 schema-checks the *committed* ``BENCH_traversal.json`` (parses; has the
-``mesh_sweep`` / ``program_sweep`` / ``relayout`` / ``kernel_path``
-sections, with every kernel-path row recording ``parity_ok``) -- without
+``mesh_sweep`` / ``program_sweep`` / ``relayout`` / ``kernel_path`` /
+``mirror_sweep`` sections, with every kernel-path row recording
+``parity_ok`` and the mirror sweep clearing the 25% bar) -- without
 rewriting the file.
 
 Writes ``BENCH_traversal.json`` so the perf trajectory is tracked per PR.
@@ -93,9 +105,19 @@ MESH_SIZES = (1, 2, 4, 8)
 RELAYOUT_MESH_SIZES = (2, 8)
 MESH_FORCED_DEVICES = 8
 PAGERANK_ITERS = 20
+MIRROR_DEGREES = (2, 4, 8)  # hub in-degree thresholds swept by --mirror
+MIRROR_MESH_D = 8
+#: avg degree of the mirror sweep's own R-MAT twin.  Mirror-cache
+#: suppression is a fan-in effect -- a (device, hub) slot is *touched*
+#: nearly every superstep but *improves* rarely when many remote edges feed
+#: it -- so the sweep measures on a denser graph than the placement
+#: benchmarks, where hub traffic actually dominates the wire.
+MIRROR_RMAT_DEGREE = 16
 OUT_PATH = "BENCH_traversal.json"
 #: sections the committed JSON must carry (CI schema check)
-REQUIRED_SECTIONS = ("mesh_sweep", "program_sweep", "relayout", "kernel_path")
+REQUIRED_SECTIONS = (
+    "mesh_sweep", "program_sweep", "relayout", "kernel_path", "mirror_sweep"
+)
 
 
 def _bench_programs():
@@ -115,6 +137,15 @@ def _weighted_bench_pg() -> PartitionedGraph:
     not influence partitioning, so the partition structure stays comparable
     across the sweeps)."""
     g = rmat_graph(SCALE, DEGREE, seed=3)
+    pg = bfs_grow_partition(g, N_PARTS, seed=1)
+    return PartitionedGraph(weighted(g, seed=5), N_PARTS, pg.part_of_vertex)
+
+
+def _mirror_bench_pg() -> PartitionedGraph:
+    """Denser weighted R-MAT for the hub-mirroring sweep (same scale and
+    seeds as the bench graph, avg degree ``MIRROR_RMAT_DEGREE``): the
+    power-law hub fan-in that mirroring harvests."""
+    g = rmat_graph(SCALE, MIRROR_RMAT_DEGREE, seed=3)
     pg = bfs_grow_partition(g, N_PARTS, seed=1)
     return PartitionedGraph(weighted(g, seed=5), N_PARTS, pg.part_of_vertex)
 
@@ -547,6 +578,156 @@ def run_relayout_only(verbose: bool = True) -> dict:
     return out
 
 
+# -- hub-mirroring sweep ------------------------------------------------------
+
+_PARITY_COUNTERS = (
+    "n_supersteps", "edges_examined", "verts_processed", "msgs_sent",
+    "inner_iters",
+)
+
+
+def _assert_mirror_parity(name, prog, r0, r1, ctx=""):
+    """Mirroring is an optimisation, not an algorithm change: every counter
+    bit-identical for all programs, state bit-identical for min-programs
+    and rounding-equal for the stationary sum (the mirror combine
+    reassociates float adds, same convention as dense-vs-mesh)."""
+    for f in _PARITY_COUNTERS:
+        assert np.array_equal(
+            np.asarray(getattr(r1, f)), np.asarray(getattr(r0, f))
+        ), f"{ctx}{name}: counter {f} diverged under mirroring"
+    if prog.reduce == "min":
+        assert np.array_equal(np.asarray(r1.dist), np.asarray(r0.dist)), (
+            f"{ctx}{name}: mirrored state not bit-identical"
+        )
+        return "bit-identical"
+    assert np.allclose(
+        np.asarray(r1.dist), np.asarray(r0.dist), rtol=1e-5, atol=1e-9
+    ), f"{ctx}{name}: mirrored state out of tolerance"
+    return "counters-exact,state-allclose"
+
+
+def _mirror_child() -> dict:
+    """Hub-mirroring sweep body (forced-device subprocess): per hub
+    threshold x builtin program at D=8 on the weighted R-MAT bench graph,
+    mirrored-vs-unmirrored parity asserted in-run, wire slots/bytes per
+    superstep recorded.  Min-programs must save wire (mirror-cache
+    suppression); the stationary program's wire billing is unchanged by
+    design (its mirror aggregates sync every superstep)."""
+    import jax
+
+    from repro.dist.sharding import partition_mesh
+    from repro.graph.traversal import get_engine
+
+    assert len(jax.devices()) >= MIRROR_MESH_D
+    pg = _mirror_bench_pg()
+    mesh = partition_mesh(MIRROR_MESH_D)
+    base = {
+        name: get_engine(pg, program=prog, m_max=512, mesh=mesh).run([0])
+        for name, prog in _bench_programs().items()
+    }
+    per_degree = {}
+    best = None
+    for t in MIRROR_DEGREES:
+        rows = {}
+        for name, prog in _bench_programs().items():
+            r0 = base[name]
+            r1 = get_engine(
+                pg, program=prog, m_max=512, mesh=mesh, mirror_degree=t
+            ).run([0])
+            parity = _assert_mirror_parity(name, prog, r0, r1, f"degree {t}: ")
+            m = int(np.asarray(r0.n_supersteps).max())
+            w0 = int(np.asarray(r0.wire_msgs).sum())
+            w1 = int(np.asarray(r1.wire_msgs).sum())
+            itemsize = int(np.dtype(prog.dtype).itemsize)
+            reduction = None if w0 == 0 else 1.0 - w1 / w0
+            rows[name] = {
+                "supersteps": m,
+                "wire_total_unmirrored": w0,
+                "wire_total_mirrored": w1,
+                "wire_slots_per_superstep_unmirrored": w0 / m,
+                "wire_slots_per_superstep_mirrored": w1 / m,
+                "wire_bytes_per_superstep_unmirrored": w0 * itemsize / m,
+                "wire_bytes_per_superstep_mirrored": w1 * itemsize / m,
+                "wire_reduction": reduction,
+                "parity": parity,
+            }
+            if prog.reduce == "min":
+                assert 0 < w1 < w0, (
+                    f"degree {t}: {name} must put strictly fewer slots on "
+                    f"the wire ({w1} vs {w0})"
+                )
+                if best is None or reduction > best["wire_reduction"]:
+                    best = {
+                        "program": name,
+                        "mirror_degree": t,
+                        "wire_reduction": reduction,
+                    }
+            else:
+                assert w1 == w0, (
+                    f"degree {t}: {name} wire billing changed ({w1} vs {w0})"
+                )
+        per_degree[str(t)] = rows
+    assert best is not None and best["wire_reduction"] >= 0.25, (
+        f"acceptance: mirroring must cut wire slots/superstep by >= 25% at "
+        f"D={MIRROR_MESH_D}; best was {best}"
+    )
+    return {
+        "n_devices": MIRROR_MESH_D,
+        "graph": f"weighted rmat 2^{SCALE} avg degree {MIRROR_RMAT_DEGREE}",
+        "mirror_degrees": list(MIRROR_DEGREES),
+        "per_degree": per_degree,
+        "best": best,
+    }
+
+
+def _mirror_sweep_subprocess() -> dict:
+    from repro.testing.forced_devices import run_forced_devices
+
+    out = run_forced_devices(
+        os.path.abspath(__file__),
+        "--mirror-child",
+        n_devices=MESH_FORCED_DEVICES,
+        timeout=1800,
+    )
+    return json.loads(out)
+
+
+def _print_mirror_sweep(sweep: dict) -> None:
+    for t, rows in sweep["per_degree"].items():
+        for name, row in rows.items():
+            red = row["wire_reduction"]
+            print(
+                f"mirror degree>={t} {name}: "
+                f"{row['wire_slots_per_superstep_unmirrored']:.0f} -> "
+                f"{row['wire_slots_per_superstep_mirrored']:.0f} "
+                f"slots/superstep"
+                + (f" ({red:.0%} saved)" if red else "")
+                + f", parity {row['parity']}"
+            )
+    b = sweep["best"]
+    print(
+        f"mirror best: {b['program']} at degree>={b['mirror_degree']} saves "
+        f"{b['wire_reduction']:.0%} of wire slots/superstep at D="
+        f"{sweep['n_devices']}"
+    )
+
+
+def run_mirror_only(verbose: bool = True) -> dict:
+    """``--mirror``: compute just the hub-mirroring sweep and merge it into
+    an existing ``BENCH_traversal.json`` (fresh file if none)."""
+    out = {}
+    if os.path.exists(OUT_PATH):
+        with open(OUT_PATH) as f:
+            out = json.load(f)
+    out["mirror_sweep"] = _mirror_sweep_subprocess()
+    with open(OUT_PATH, "w") as f:
+        json.dump(out, f, indent=2)
+    if verbose:
+        _print_mirror_sweep(out["mirror_sweep"])
+        print(f"-> {OUT_PATH}")
+    return out
+
+
 # -- CI smoke: invariants on a tiny graph + committed-JSON schema check -------
 
 SMOKE_SCALE, SMOKE_DEGREE, SMOKE_PARTS = 8, 4, 8
@@ -582,6 +763,20 @@ def _smoke_child() -> dict:
     assert np.array_equal(
         np.asarray(res_k.wire_msgs), np.asarray(res.wire_msgs)
     ), "pallas-interpret mesh wire counters diverged from xla"
+
+    # hub-mirroring invariant: mirrored-vs-unmirrored parity on the tiny
+    # power-law graph with strictly fewer slots on the wire
+    from repro.graph.program import SsspProgram
+
+    res_m = get_engine(
+        pg, m_max=128, mesh=partition_mesh(SMOKE_DEVICES), mirror_degree=2
+    ).run([0])
+    _assert_mirror_parity("sssp", SsspProgram(), res, res_m, "smoke: ")
+    wire_m = int(np.asarray(res_m.wire_msgs).sum())
+    assert 0 < wire_m < wire, (
+        f"smoke: mirroring must put strictly fewer slots on the wire "
+        f"({wire_m} vs {wire})"
+    )
 
     # elastic-vs-static billing invariant: consolidation never costs more
     _, trace = run_sssp(pg, 0)
@@ -625,6 +820,16 @@ def check_bench_schema(path: str = OUT_PATH) -> dict:
         assert row.get("parity_ok") is True, (
             f"kernel_path[{name}]: backend parity not recorded as OK"
         )
+    ms = data["mirror_sweep"]
+    assert ms["per_degree"], "empty mirror sweep"
+    for t, rows in ms["per_degree"].items():
+        for name, row in rows.items():
+            assert row.get("parity"), (
+                f"mirror_sweep[{t}][{name}]: parity not recorded"
+            )
+    assert ms["best"]["wire_reduction"] >= 0.25, (
+        f"mirror_sweep best reduction {ms['best']} below the 25% bar"
+    )
     return data
 
 
@@ -738,6 +943,9 @@ def run(verbose: bool = True) -> dict:
     # compute-backend sweep: xla vs pallas-interpret parity + TPU roofline
     out["kernel_path"] = _kernel_path_sweep()
 
+    # hub mirroring: wire slots/bytes per superstep vs the unmirrored path
+    out["mirror_sweep"] = _mirror_sweep_subprocess()
+
     with open(OUT_PATH, "w") as f:
         json.dump(out, f, indent=2)
     if verbose:
@@ -773,6 +981,7 @@ def run(verbose: bool = True) -> dict:
         _print_program_sweep(out["program_sweep"])
         _print_relayout_sweep(out["relayout"])
         _print_kernel_path_sweep(out["kernel_path"])
+        _print_mirror_sweep(out["mirror_sweep"])
     return out
 
 
@@ -783,6 +992,8 @@ if __name__ == "__main__":
         print(json.dumps(_programs_child()))
     elif "--relayout-child" in sys.argv:
         print(json.dumps(_relayout_child()))
+    elif "--mirror-child" in sys.argv:
+        print(json.dumps(_mirror_child()))
     elif "--smoke-child" in sys.argv:
         print(json.dumps(_smoke_child()))
     elif "--programs" in sys.argv:
@@ -791,6 +1002,8 @@ if __name__ == "__main__":
         run_relayout_only()
     elif "--kernel-path" in sys.argv:
         run_kernel_path_only()
+    elif "--mirror" in sys.argv:
+        run_mirror_only()
     elif "--smoke" in sys.argv:
         run_smoke()
     else:

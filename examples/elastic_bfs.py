@@ -32,7 +32,19 @@ Knobs:
                row, so partitions *compute* on their planned devices (not
                just store their shards there).  Results are bit-identical;
                the remap bytes show up in the physical device-move ledger
-               while billed migration stays plan-derived.
+               while billed migration stays plan-derived.  ``--relayout
+               auto`` runs the cost-aware policy instead: a proposed swap is
+               committed only when the projected wire savings over the
+               remaining horizon pay for the shard-move bytes, and vetoed
+               proposals are counted in ``relayouts_skipped``.
+  --mirror-degree T
+               (with --mesh) hub-vertex mirroring: vertices whose remote
+               in-degree across wire blocks is >= T get a per-device mirror
+               slot; remote edges into them combine locally and sync one
+               value per (device, hub) per superstep, cutting wire slots on
+               power-law graphs.  Results stay bit-identical for the
+               min-programs (counters-exact for pagerank).  Omit for the
+               unmirrored wire path.
   --backend B  compute backend for the superstep hot path: ``xla`` (default,
                segment reductions), ``pallas`` (block-skipping Pallas relax
                kernels -- needs a real accelerator), or ``pallas-interpret``
@@ -161,11 +173,21 @@ def main():
         "physical per-window shard migration",
     )
     ap.add_argument(
-        "--relayout", action="store_true",
+        "--relayout", nargs="?", const=True, default=False,
+        choices=[True, "auto"], metavar="auto",
         help="(with --mesh) dynamic re-layout: the compute layout follows "
         "the planner at every window boundary -- partitions genuinely run "
         "on their planned devices, results stay bit-identical, and the "
-        "residency print shows the planned map instead of the data plane",
+        "residency print shows the planned map instead of the data plane; "
+        "pass 'auto' for the cost-aware policy that vetoes swaps whose "
+        "move bytes are not paid back by the remaining horizon",
+    )
+    ap.add_argument(
+        "--mirror-degree", type=int, default=None, metavar="T",
+        help="(with --mesh) mirror hub vertices with cross-partition "
+        "in-degree >= T: remote edges into them combine locally and sync "
+        "one value per (device, hub), cutting wire slots on power-law "
+        "graphs with bit-identical min-program results",
     )
     ap.add_argument(
         "--backend", default="xla",
@@ -214,6 +236,7 @@ def main():
         ex = ElasticBSPExecutor(
             wl.pg, program=program, tau_scale=tau_scale, billing=model,
             mesh=mesh, backend=args.backend,
+            mirror_degree=args.mirror_degree,
         )
         rep = ex.run(
             wl.source, plan, strategy_fn=strat, replan=not args.no_replan,
@@ -225,8 +248,12 @@ def main():
             f"executed {rep.n_supersteps} supersteps in windows of "
             f"{rep.window} ({rep.host_syncs} host syncs, {rep.replans} "
             f"replans, {rep.n_migrations} migrations moving "
-            f"{rep.migration_bytes} B, {rep.relayouts} compute re-layouts, "
-            f"wall {rep.wall_seconds:.1f}s on this host)"
+            f"{rep.migration_bytes} B, {rep.relayouts} compute re-layouts"
+            + (
+                f" ({rep.relayouts_skipped} vetoed by the payback policy)"
+                if rep.relayouts_skipped else ""
+            )
+            + f", wall {rep.wall_seconds:.1f}s on this host)"
         )
         if mesh is not None:
             _print_residency(rep, args.mesh)

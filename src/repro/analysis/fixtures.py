@@ -157,6 +157,63 @@ def _fx_dropped_psum():
     return findings
 
 
+_MINI_SIG_MIRRORED = {
+    "all_to_all": 2, "psum": 0, "pmax_boundary": 1, "pmax_closure": 0
+}
+
+
+def _mini_window_mirrored(x, *, drop_mirror_sync: bool):
+    """The hub-mirrored window shape: wire exchange plus the mirror->owner
+    sync (two boundary all_to_alls, as the mirrored signature declares).
+    The defect variant drops the sync -- mirrors accumulate hub aggregates
+    that never reach their owners, while the engine still declares (and
+    bills) the mirrored signature."""
+
+    def cond(c):
+        s, x, we = c
+        return (s < 3) & (
+            jax.lax.pmax((x > 0).any().astype(jnp.int32), PARTS) > 0
+        )
+
+    def step(c):
+        s, x, we = c
+        nst = jax.lax.pmax((x > 0).any().astype(jnp.int32), PARTS)
+        recv = jax.lax.all_to_all(
+            x.reshape(2, _D, -1), PARTS, split_axis=1, concat_axis=1, tiled=True
+        ).reshape(x.shape)
+        x = jnp.minimum(x, recv)
+        if not drop_mirror_sync:
+            mrecv = jax.lax.all_to_all(
+                x.reshape(2, _D, -1), PARTS,
+                split_axis=1, concat_axis=1, tiled=True,
+            ).reshape(x.shape)
+            x = jnp.minimum(x, mrecv)
+        return s + 1, x, we + nst
+
+    _, x, we = jax.lax.while_loop(cond, step, (jnp.int32(0), x, jnp.int32(0)))
+    return x, jax.lax.psum(we, PARTS)
+
+
+def _fx_dropped_mirror_sync():
+    body = _spmd_jaxpr(
+        lambda x: _mini_window_mirrored(x, drop_mirror_sync=True)
+    )
+    findings = check_window_collectives(
+        body, _MINI_SIG_MIRRORED, "fixture/dropped-mirror-sync",
+        epilogue=_MINI_EPILOGUE,
+    )
+    # the intact mirrored twin must pass the mirrored declaration clean
+    good = _spmd_jaxpr(
+        lambda x: _mini_window_mirrored(x, drop_mirror_sync=False)
+    )
+    clean = check_window_collectives(
+        good, _MINI_SIG_MIRRORED, "fixture/dropped-mirror-sync-control",
+        epilogue=_MINI_EPILOGUE,
+    )
+    assert not clean, f"control fixture must audit clean, got {clean}"
+    return findings
+
+
 def _fx_conditional_collective():
     def body(x):
         def cond(c):
@@ -300,6 +357,12 @@ ALL_FIXTURES = (
         "dropped-psum", "JX02", "epilogue",
         "window returns a per-device counter without its epilogue psum",
         _fx_dropped_psum,
+    ),
+    Fixture(
+        "dropped-mirror-sync", "JX02", "superstep-boundary collectives",
+        "mirrored engine whose mirror->owner sync all_to_all was dropped "
+        "while the signature still declares it",
+        _fx_dropped_mirror_sync,
     ),
     Fixture(
         "conditional-collective", "JX02", "branch-dependent",

@@ -36,7 +36,11 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.analysis.findings import Finding
-from repro.analysis.registry import AUDIT_BACKENDS, AUDIT_MESH_WIDTH
+from repro.analysis.registry import (
+    AUDIT_BACKENDS,
+    AUDIT_MESH_WIDTH,
+    AUDIT_MIRROR_DEGREE,
+)
 from repro.dist.sharding import PARTS
 from repro.graph.mesh_exchange import (
     MESH_SUPERSTEP_COND,
@@ -355,9 +359,18 @@ def check_window_collectives(
     return findings
 
 
-def check_mesh_trace(closed, program, label: str) -> list[Finding]:
+def check_mesh_trace(
+    closed, program, label: str, *, mirrored: bool = False
+) -> list[Finding]:
     """Full JX02 pass over an ``abstract_window_jaxpr`` trace: locate the
-    shard_map and check its body against the program's declaration."""
+    shard_map and check its body against the program's declaration.
+
+    ``mirrored`` selects the hub-mirroring variant of the declared
+    signature (one extra ``all_to_all``: the mirror->owner sync) -- pass it
+    iff the traced layout has a non-empty mirror plane, so a trace that
+    runs the mirror sync without declaring it (or vice versa) fails the
+    boundary-count check.
+    """
     sms = [e for e, _ in iter_eqns(closed.jaxpr) if e.primitive.name == "shard_map"]
     if len(sms) != 1:
         return [Finding(
@@ -365,7 +378,7 @@ def check_mesh_trace(closed, program, label: str) -> list[Finding]:
             f"expected exactly one shard_map in the mesh window trace, "
             f"found {len(sms)}",
         )]
-    sig = validate_collective_signature(program)
+    sig = validate_collective_signature(program, mirrored=mirrored)
     return check_window_collectives(sms[0].params["jaxpr"], sig, label)
 
 
@@ -461,6 +474,7 @@ def audit_recompile_budget(
     d_n: int = AUDIT_MESH_WIDTH,
     windows: tuple = (1, 4, 8, 4, 1),
     rotations: tuple = (0, 1, 0, 1),
+    mirror_degrees: tuple = (None,),
     label: str | None = None,
 ) -> list[Finding]:
     """Scripted relayout/window sweep: distinct jit cache keys must stay
@@ -471,6 +485,9 @@ def audit_recompile_budget(
     ``window_cache_key``s must not exceed ``DEFAULT_WINDOW_CACHE_SIZE`` --
     and must factor as (distinct window lengths) x (distinct layout
     shapes), i.e. revisiting a placement or a window length never re-jits.
+    ``mirror_degrees`` extends the sweep over the hub-mirroring knob:
+    every (placement, degree) pair must mint exactly one layout key
+    (revisiting a degree never re-jits either).
     """
     from repro.graph.mesh_exchange import DEFAULT_WINDOW_CACHE_SIZE
     from repro.graph.program import SsspProgram
@@ -481,27 +498,30 @@ def audit_recompile_budget(
 
     base = contiguous_device_map(pg.n_parts, d_n)
     maps = [np.roll(base, r) for r in rotations]
+    degrees = [None if md is None else int(md) for md in mirror_degrees]
     layout_keys, window_keys, shape_keys = set(), set(), set()
     for dmap in maps:
-        ml = mesh_edge_layout(pg, dmap, d_n)
-        layout_keys.add(mesh_layout_key(dmap, d_n))
-        _, statics = build_window_consts(pg, program, ml, backend=backend)
-        for k in windows:
-            key = window_cache_key(ml, k, backend, statics)
-            window_keys.add(key)
-            shape_keys.add(key[1:])
+        for md in degrees:
+            ml = mesh_edge_layout(pg, dmap, d_n, mirror_degree=md)
+            layout_keys.add(ml.layout_key)
+            _, statics = build_window_consts(pg, program, ml, backend=backend)
+            for k in windows:
+                key = window_cache_key(ml, k, backend, statics)
+                window_keys.add(key)
+                shape_keys.add(key[1:])
 
     n_maps = len({mesh_layout_key(m, d_n) for m in maps})
-    if len(layout_keys) != n_maps:
+    n_layouts = n_maps * len(set(degrees))
+    if len(layout_keys) != n_layouts:
         findings.append(Finding(
             "JX04", label,
-            f"{n_maps} distinct placements produced {len(layout_keys)} "
-            "layout keys",
+            f"{n_maps} distinct placements x {len(set(degrees))} mirror "
+            f"degrees produced {len(layout_keys)} layout keys",
         ))
-    if n_maps > _LAYOUT_CACHE_MAX:
+    if n_layouts > _LAYOUT_CACHE_MAX:
         findings.append(Finding(
             "JX04", label,
-            f"sweep visits {n_maps} layouts > layout cache bound "
+            f"sweep visits {n_layouts} layouts > layout cache bound "
             f"{_LAYOUT_CACHE_MAX}",
         ))
     budget = len(set(windows)) * len(shape_keys)
@@ -538,13 +558,32 @@ def audit_dense(pg, program, backend: str) -> list[Finding]:
     return findings
 
 
-def audit_mesh(pg, program, backend: str, d_n: int = AUDIT_MESH_WIDTH) -> list[Finding]:
-    """Trace + audit one mesh window over an abstract D-device mesh."""
-    label = f"mesh/{program.name}/{backend}/d{d_n}"
-    closed = abstract_window_jaxpr(pg, program, d_n=d_n, backend=backend)
+def audit_mesh(
+    pg,
+    program,
+    backend: str,
+    d_n: int = AUDIT_MESH_WIDTH,
+    mirror_degree: int | None = None,
+) -> list[Finding]:
+    """Trace + audit one mesh window over an abstract D-device mesh.
+
+    ``mirror_degree`` audits the hub-mirroring variant: the trace is built
+    over the mirrored layout and checked against the mirrored collective
+    signature iff that layout actually has hubs (the degenerate zero-hub
+    layout must trace -- and audit -- exactly like the unmirrored one).
+    """
+    tag = "" if mirror_degree is None else f"/mirror{int(mirror_degree)}"
+    label = f"mesh/{program.name}/{backend}/d{d_n}{tag}"
+    closed = abstract_window_jaxpr(
+        pg, program, d_n=d_n, backend=backend, mirror_degree=mirror_degree
+    )
+    ml = mesh_edge_layout(
+        pg, contiguous_device_map(pg.n_parts, d_n), d_n,
+        mirror_degree=mirror_degree,
+    )
     findings = check_hot_path(closed, label)
     findings += check_pallas_grids(closed, label, expect_kernel=backend != "xla")
-    findings += check_mesh_trace(closed, program, label)
+    findings += check_mesh_trace(closed, program, label, mirrored=ml.m_pad > 0)
     return findings
 
 
@@ -561,7 +600,9 @@ def default_audit_graph():
 
 def audit_tree(pg=None, *, backends=AUDIT_BACKENDS, d_n: int = AUDIT_MESH_WIDTH) -> list[Finding]:
     """The full matrix: every builtin program x backend x {dense, mesh},
-    plus the recompile-budget sweep per program."""
+    the mirrored mesh trace per program (hub threshold
+    ``AUDIT_MIRROR_DEGREE``, xla, plus one kernel-backend trace), plus the
+    recompile-budget sweep per program and one sweep over the mirror knob."""
     pg = pg if pg is not None else default_audit_graph()
     findings = []
     for ctor in BUILTIN_PROGRAMS.values():
@@ -569,6 +610,18 @@ def audit_tree(pg=None, *, backends=AUDIT_BACKENDS, d_n: int = AUDIT_MESH_WIDTH)
         for backend in backends:
             findings += audit_dense(pg, program, backend)
             findings += audit_mesh(pg, program, backend, d_n)
+        findings += audit_mesh(
+            pg, program, "xla", d_n, mirror_degree=AUDIT_MIRROR_DEGREE
+        )
         findings += audit_recompile_budget(pg, program, backend="xla", d_n=d_n)
     findings += audit_recompile_budget(pg, None, backend="pallas-interpret", d_n=d_n)
+    findings += audit_mesh(
+        pg, BUILTIN_PROGRAMS["sssp"](), "pallas-interpret", d_n,
+        mirror_degree=AUDIT_MIRROR_DEGREE,
+    )
+    findings += audit_recompile_budget(
+        pg, None, backend="xla", d_n=d_n, windows=(1, 8, 1),
+        mirror_degrees=(None, AUDIT_MIRROR_DEGREE, None),
+        label=f"budget/mirror-sweep/xla/d{d_n}",
+    )
     return findings

@@ -46,6 +46,7 @@ TRACED_FUNCTIONS = (
             "dist", "frontier", "nst0",
             "lsrc", "ldst", "lw", "lpart", "lvalid", "part_of_pos",
             "rsrc", "rw", "rslot", "rpart", "rvalid", "recv_idx",
+            "msrc", "mw", "mslot", "mpart", "mvalid", "mrecv_idx",
         ),
         "shard_map body; keyword-only params are static",
     ),
@@ -78,3 +79,8 @@ AUDIT_BACKENDS = ("xla", "pallas-interpret")
 #: abstract mesh width for the SPMD audits (any D >= 2 exercises the same
 #: collective structure; 4 keeps padded shard shapes interesting)
 AUDIT_MESH_WIDTH = 4
+
+#: hub threshold the auditor uses for the mirrored mesh audits -- low enough
+#: that the default audit graph has qualifying hubs (a zero-hub threshold
+#: would silently audit the unmirrored trace)
+AUDIT_MIRROR_DEGREE = 2

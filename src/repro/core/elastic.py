@@ -123,6 +123,8 @@ class ExecutionReport:
     residency: np.ndarray | None = None  # [n_windows, P] device per partition
     # (-1 = not yet placed), recorded at each window boundary
     relayouts: int = 0  # windows whose compute layout was actually swapped
+    relayouts_skipped: int = 0  # proposed swaps vetoed by the "auto" policy
+    # (projected move bytes exceeded the estimated remaining locality gain)
 
     @property
     def migration_secs(self) -> float:
@@ -146,6 +148,7 @@ class ElasticBSPExecutor:
         billing: BillingModel | None = None,
         mesh=None,
         backend: str = "xla",
+        mirror_degree: int | None = None,
     ):
         self.pg = pg
         self.program = program or SsspProgram()
@@ -155,8 +158,10 @@ class ElasticBSPExecutor:
         self.billing = billing or BillingModel()
         self.mesh = mesh
         self.backend = backend
+        self.mirror_degree = mirror_degree
         self.engine = get_engine(
-            pg, program=self.program, mesh=mesh, backend=backend
+            pg, program=self.program, mesh=mesh, backend=backend,
+            mirror_degree=mirror_degree,
         )
         self.devices = (
             list(mesh.devices.flat) if mesh is not None else jax.devices()
@@ -176,6 +181,11 @@ class ElasticBSPExecutor:
         self.partition_bytes = (itemsize * nv).astype(np.int64)
 
     _PART_INDICES_CACHE_MAX = 8
+
+    #: ``relayout="auto"`` break-even horizon: a proposed swap is committed
+    #: only if the moved partitions' remaining planned-active supersteps
+    #: (byte-weighted) cover at least this many windows' worth of the move
+    AUTO_RELAYOUT_MIN_STEPS = 4
 
     def _state_part_indices(self) -> list:
         """Per-partition device-array indices into the carried state's
@@ -220,11 +230,26 @@ class ElasticBSPExecutor:
         devices, with remap bytes billed to the physical
         ``device_moves``/``device_move_bytes`` ledger and results
         bit-identical to the static-layout run.
+
+        ``relayout="auto"`` is the cost-aware variant: each proposed swap's
+        projected ``device_move_bytes`` (the physical ledger's own pricing
+        of the moved partitions) is weighed against the estimated locality
+        gain over the remaining horizon -- the moved partitions'
+        byte-weighted count of remaining planned-active supersteps in
+        ``vm_of``.  Swaps whose payback horizon falls under
+        ``AUTO_RELAYOUT_MIN_STEPS`` are skipped (counted in
+        ``ExecutionReport.relayouts_skipped``); committed swaps behave
+        exactly like ``relayout=True``.  Results stay bit-identical either
+        way -- the policy only changes *where* partitions compute.
         """
         pg = self.pg
         t0 = time.perf_counter()
         window = max(1, int(window))
-        relayout = bool(relayout) and self.engine.device_of_part is not None
+        auto_relayout = isinstance(relayout, str) and relayout == "auto"
+        relayout = (
+            (auto_relayout or bool(relayout))
+            and self.engine.device_of_part is not None
+        )
 
         state = self.engine.init_state([source])
         replanner = OnlineReplanner(
@@ -246,6 +271,7 @@ class ElasticBSPExecutor:
         mig_events: list[tuple[int, int, float]] = []  # (superstep, vm, secs)
         replans = 0
         relayouts = 0
+        relayouts_skipped = 0
         host_syncs = 0
         taus: list[np.ndarray] = []
         vm_rows: list[np.ndarray] = []
@@ -300,9 +326,24 @@ class ElasticBSPExecutor:
                     target_map = None
                 else:
                     moved = np.flatnonzero(target_map != cur)
-                    relayouts += 1
-                    device_moves += int(moved.size)
-                    device_move_bytes += int(self.partition_bytes[moved].sum())
+                    move_bytes = int(self.partition_bytes[moved].sum())
+                    if auto_relayout:
+                        # payback test: bytes moved now must be covered by
+                        # the moved partitions' remaining planned activity
+                        # (each future planned-active superstep of a moved
+                        # partition benefits from the better locality, so
+                        # weight it by the partition's shard bytes)
+                        future_steps = (vm_of[s:, moved] >= 0).sum(axis=0)
+                        gain = int(
+                            (self.partition_bytes[moved] * future_steps).sum()
+                        )
+                        if move_bytes * self.AUTO_RELAYOUT_MIN_STEPS > gain:
+                            target_map = None
+                            relayouts_skipped += 1
+                    if target_map is not None:
+                        relayouts += 1
+                        device_moves += int(moved.size)
+                        device_move_bytes += move_bytes
 
             # -- one device launch, one bulk counter pull --------------------
             wres = self.engine.run_window(state, k, device_of_part=target_map)
@@ -412,4 +453,5 @@ class ElasticBSPExecutor:
                 else np.zeros((0, pg.n_parts), dtype=np.int64)
             ),
             relayouts=relayouts,
+            relayouts_skipped=relayouts_skipped,
         )

@@ -97,9 +97,47 @@ def contiguous_device_map(n_parts: int, n_devices: int) -> np.ndarray:
 #: visit many device maps, so the cache is LRU-bounded rather than unbounded
 _LAYOUT_CACHE_MAX = 16
 
-#: incremental-rebuild bases retained per device count (one mesh width is the
-#: common case; a handful covers elastic sweeps over several widths)
+#: incremental-rebuild bases retained per (device count, mirror knob) (one
+#: mesh width is the common case; a handful covers elastic sweeps)
 _LAST_BASE_CACHE_MAX = 4
+
+#: hub plans retained per (pg, mirror_degree); a run uses one threshold, a
+#: mirror sweep a handful
+_HUB_PLAN_CACHE_MAX = 8
+
+
+def _mirror_hub_plan(
+    pg: PartitionedGraph, mirror_degree: int | None
+) -> tuple[np.ndarray, np.ndarray]:
+    """(hub_edge [E_remote] bool, nr_hub [P] int64) for a degree threshold.
+
+    A *hub* is a vertex whose cross-partition in-degree (count of remote
+    edges targeting it) meets ``mirror_degree``.  The predicate depends only
+    on the partition map -- never on the device map -- so the hub set (and
+    with it the mirrored collective signature) is stable across elastic
+    relayout swaps.  ``mirror_degree=None`` selects no hubs.
+    """
+    cache = pg.__dict__.get("_mirror_hub_plans")
+    if not isinstance(cache, BoundedCache):
+        cache = BoundedCache(_HUB_PLAN_CACHE_MAX)
+        pg.__dict__["_mirror_hub_plans"] = cache
+
+    def build():
+        layout = partitioned_edge_layout(pg)
+        if mirror_degree is None:
+            hub_edge = np.zeros(layout.remote.n_edges, dtype=bool)
+        else:
+            indeg = np.bincount(
+                layout.remote.dst, minlength=pg.graph.n_vertices
+            )
+            hub_edge = indeg[layout.remote.dst] >= int(mirror_degree)
+        nr_hub = np.bincount(
+            layout.remote_src_part[hub_edge], minlength=pg.n_parts
+        ).astype(np.int64)
+        return hub_edge, nr_hub
+
+    key = None if mirror_degree is None else int(mirror_degree)
+    return cache.get_or_build(key, build)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -166,17 +204,25 @@ def mesh_edge_layout(
     n_devices: int,
     *,
     base: MeshEdgeLayout | None | object = _AUTO_BASE,
+    mirror_degree: int | None = None,
 ) -> MeshEdgeLayout:
     """Build the static mesh-aware layout for a fixed partition -> device map.
 
-    Host-side numpy, cached per ``(pg, mesh_layout_key(...))`` (LRU-bounded:
-    dynamic re-layout visits a map per replan).  See ``structs.MeshEdgeLayout``
-    for the contract; the key invariants preserved from the single-device
-    layout are (a) per-device local ``dst`` rows stay ascending (a
-    device-filtered subsequence of the globally dst-sorted local edges,
-    renumbered by a per-device monotone map), and (b) per-device remote edges
-    are ``(dst_device, dst_vertex)``-sorted so wire-slot ids ascend too --
-    every segment reduction keeps the ``indices_are_sorted`` fast path.
+    Host-side numpy, cached per ``(pg, mesh_layout_key(...), mirror_degree)``
+    (LRU-bounded: dynamic re-layout visits a map per replan).  See
+    ``structs.MeshEdgeLayout`` for the contract; the key invariants preserved
+    from the single-device layout are (a) per-device local ``dst`` rows stay
+    ascending (a device-filtered subsequence of the globally dst-sorted local
+    edges, renumbered by a per-device monotone map), and (b) per-device
+    remote edges are ``(dst_device, dst_vertex)``-sorted so wire-slot ids
+    ascend too -- every segment reduction keeps the ``indices_are_sorted``
+    fast path.
+
+    ``mirror_degree`` selects hub destinations (``_mirror_hub_plan``) whose
+    incoming remote edges move to the structurally identical *mirror* plane
+    (``msrc``/``mslot``/... with ``m_pad`` slots per block); ``None`` (the
+    default) and zero-hub graphs build layouts whose pre-existing fields are
+    byte-identical to an unmirrored build, with zero-width mirror arrays.
 
     **Incremental rebuild** (the dynamic re-layout hot path): when ``base`` is
     a previously built layout for the same ``(pg, n_devices)`` (the default
@@ -206,11 +252,17 @@ def mesh_edge_layout(
             f"device ids must lie in [0, {n_devices}), got "
             f"[{device_of_part.min()}, {device_of_part.max()}]"
         )
+    if mirror_degree is not None:
+        mirror_degree = int(mirror_degree)
+        if mirror_degree < 1:
+            raise ValueError(
+                f"mirror_degree must be >= 1 or None, got {mirror_degree}"
+            )
     cache = pg.__dict__.get("_mesh_layouts")
     if not isinstance(cache, BoundedCache):
         cache = BoundedCache(_LAYOUT_CACHE_MAX)
         pg.__dict__["_mesh_layouts"] = cache
-    key = mesh_layout_key(device_of_part, n_devices)
+    key = mesh_layout_key(device_of_part, n_devices) + (mirror_degree,)
     if key in cache:
         cache.move_to_end(key)
         return cache[key]
@@ -218,16 +270,21 @@ def mesh_edge_layout(
     if not isinstance(last, BoundedCache):
         last = BoundedCache(_LAST_BASE_CACHE_MAX)
         pg.__dict__["_mesh_layout_last"] = last
+    last_key = (int(n_devices), mirror_degree)
     if base is _AUTO_BASE:
-        base = last.get(int(n_devices))
+        base = last.get(last_key)
     if base is not None and (
-        base.n_devices != int(n_devices) or base.n_parts != pg.n_parts
+        base.n_devices != int(n_devices)
+        or base.n_parts != pg.n_parts
+        or base.mirror_degree != mirror_degree
     ):
         base = None
 
-    out = _build_mesh_layout(pg, device_of_part, int(n_devices), base)
+    out = _build_mesh_layout(
+        pg, device_of_part, int(n_devices), base, mirror_degree
+    )
     cache.put(key, out)
-    last.put(int(n_devices), out)
+    last.put(last_key, out)
     return out
 
 
@@ -236,25 +293,30 @@ def _build_mesh_layout(
     device_of_part: np.ndarray,
     d_n: int,
     base: MeshEdgeLayout | None,
+    mirror_degree: int | None = None,
 ) -> MeshEdgeLayout:
     layout = partitioned_edge_layout(pg)
     slices = _mesh_part_slices(pg)
     n = pg.graph.n_vertices
     parts_of_dev = _group_by(device_of_part.astype(np.int64), d_n)
     dev_of_vertex = device_of_part[pg.part_of_vertex]
+    hub_edge, nr_hub = _mirror_hub_plan(pg, mirror_degree)
 
     # pad shapes from the cached per-partition counts (O(P), no edge scans)
     nv_dev = np.array([slices.nv[q].sum() for q in parts_of_dev])
     nl_dev = np.array([slices.nl[q].sum() for q in parts_of_dev])
-    nr_dev = np.array([slices.nr[q].sum() for q in parts_of_dev])
+    nr_wire = slices.nr - nr_hub
+    nr_dev = np.array([nr_wire[q].sum() for q in parts_of_dev])
+    nm_dev = np.array([nr_hub[q].sum() for q in parts_of_dev])
     n_pad = max(1, int(nv_dev.max()))
     e_local_pad = max(1, int(nl_dev.max()))
     e_remote_pad = max(1, int(nr_dev.max()))
+    e_mirror_pad = int(nm_dev.max())
 
     # -- which devices must be rebuilt ---------------------------------------
     all_devs = np.ones(d_n, dtype=bool)
-    if base is None or (n_pad, e_local_pad, e_remote_pad) != (
-        base.n_pad, base.e_local_pad, base.e_remote_pad
+    if base is None or (n_pad, e_local_pad, e_remote_pad, e_mirror_pad) != (
+        base.n_pad, base.e_local_pad, base.e_remote_pad, base.e_mirror_pad
     ):
         vert_aff = src_aff = all_devs
         base = None
@@ -336,40 +398,57 @@ def _build_mesh_layout(
         # local row, so the ascending (indices_are_sorted) contract holds
 
     # -- remote edges: (src_device, dst_device) blocks + wire slots ----------
+    # with mirroring, hub-targeting remote edges leave the wire plane for the
+    # structurally identical mirror plane (one slot per (owner_device, hub))
     rem = layout.remote
     ddev = dev_of_vertex[rem.dst]
     remote_block_edges = np.zeros((d_n, d_n), dtype=np.int64)
     wire_slots = np.zeros((d_n, d_n), dtype=np.int64)
+    mirror_block_edges = np.zeros((d_n, d_n), dtype=np.int64)
+    mirror_slots = np.zeros((d_n, d_n), dtype=np.int64)
     if base is not None:
         keep = ~src_aff
         remote_block_edges[keep] = base.remote_block_edges[keep]
         wire_slots[keep] = base.wire_slots[keep]
+        mirror_block_edges[keep] = base.mirror_block_edges[keep]
+        mirror_slots[keep] = base.mirror_slots[keep]
     # first pass: per-block raw and distinct-dst counts fix the pad shapes
     per_dev: dict[int, tuple[np.ndarray, np.ndarray, np.ndarray]] = {}
+    per_dev_m: dict[int, tuple[np.ndarray, np.ndarray, np.ndarray]] = {}
+
+    def _plane_pass(sel: np.ndarray, blocks: np.ndarray, slots: np.ndarray):
+        order = np.lexsort((rem.dst[sel], ddev[sel]))
+        sel = sel[order]  # (dst_device, dst_vertex)-sorted
+        bd = ddev[sel]
+        key_dd = bd.astype(np.int64) * n + rem.dst[sel]
+        uniq, inv = (
+            np.unique(key_dd, return_inverse=True)
+            if sel.size
+            else (np.empty(0, np.int64), np.empty(0, np.int64))
+        )
+        blocks[:] = 0
+        np.add.at(blocks, bd, 1)
+        u_dd = (uniq // n).astype(np.int64)
+        slots[:] = 0
+        np.add.at(slots, u_dd, 1)
+        return (sel, uniq, inv)
 
     def _first_pass(devs: np.ndarray) -> None:
         for d in devs:
             sel = _dev_sel(slices.rsel, d)
-            order = np.lexsort((rem.dst[sel], ddev[sel]))
-            sel = sel[order]  # (dst_device, dst_vertex)-sorted
-            bd = ddev[sel]
-            key_dd = bd.astype(np.int64) * n + rem.dst[sel]
-            uniq, inv = (
-                np.unique(key_dd, return_inverse=True)
-                if sel.size
-                else (np.empty(0, np.int64), np.empty(0, np.int64))
+            hub = hub_edge[sel]
+            per_dev[int(d)] = _plane_pass(
+                sel[~hub], remote_block_edges[d], wire_slots[d]
             )
-            remote_block_edges[d] = 0
-            np.add.at(remote_block_edges[d], bd, 1)
-            u_dd = (uniq // n).astype(np.int64)
-            wire_slots[d] = 0
-            np.add.at(wire_slots[d], u_dd, 1)
-            per_dev[int(d)] = (sel, uniq, inv)
+            per_dev_m[int(d)] = _plane_pass(
+                sel[hub], mirror_block_edges[d], mirror_slots[d]
+            )
 
     _first_pass(np.flatnonzero(src_aff))
     w_pad = max(1, int(wire_slots.max()))
-    if base is not None and w_pad != base.w_pad:
-        # slot encoding (dd * w_pad + rank) is global: a w_pad change
+    m_pad = int(mirror_slots.max())
+    if base is not None and (w_pad != base.w_pad or m_pad != base.m_pad):
+        # slot encoding (dd * pad + rank) is global: a w_pad / m_pad change
         # invalidates every block -- degrade to the from-scratch path
         base = None
         vert_aff = src_aff = all_devs
@@ -384,6 +463,15 @@ def _build_mesh_layout(
         rvalid = np.zeros((d_n, e_remote_pad), dtype=bool)
         r_eid = np.zeros((d_n, e_remote_pad), dtype=np.int64)
         recv_idx = np.zeros((d_n, d_n, w_pad), dtype=np.int32)
+        msrc = np.zeros((d_n, e_mirror_pad), dtype=np.int32)
+        mw = np.zeros((d_n, e_mirror_pad), dtype=np.float32)
+        mslot = np.full(
+            (d_n, e_mirror_pad), max(0, d_n * m_pad - 1), dtype=np.int32
+        )
+        mpart = np.zeros((d_n, e_mirror_pad), dtype=np.int32)
+        mvalid = np.zeros((d_n, e_mirror_pad), dtype=bool)
+        m_eid = np.zeros((d_n, e_mirror_pad), dtype=np.int64)
+        mrecv_idx = np.zeros((d_n, d_n, m_pad), dtype=np.int32)
     else:
         rsrc = base.rsrc.copy()
         rw = base.rw.copy()
@@ -392,6 +480,13 @@ def _build_mesh_layout(
         rvalid = base.rvalid.copy()
         r_eid = base.r_eid.copy()
         recv_idx = base.recv_idx.copy()
+        msrc = base.msrc.copy()
+        mw = base.mw.copy()
+        mslot = base.mslot.copy()
+        mpart = base.mpart.copy()
+        mvalid = base.mvalid.copy()
+        m_eid = base.m_eid.copy()
+        mrecv_idx = base.mrecv_idx.copy()
     part32 = pg.part_of_vertex.astype(np.int32)
     for d in np.flatnonzero(src_aff):
         sel, uniq, inv = per_dev[int(d)]
@@ -418,6 +513,31 @@ def _build_mesh_layout(
             # receive side: block (d -> dd) slot s lands on the dst vertex's
             # device-local row on device dd
             recv_idx[u_dd, d, slot_of_uniq] = (
+                pos_of_vertex[u_dst] - u_dd * n_pad
+            ).astype(np.int32)
+        # mirror plane: same construction over the hub-targeting edges, with
+        # mirror slots in place of wire slots
+        sel, uniq, inv = per_dev_m[int(d)]
+        m = sel.size
+        msrc[d] = 0
+        mw[d] = 0.0
+        mslot[d] = max(0, d_n * m_pad - 1)
+        mpart[d] = 0
+        mvalid[d] = False
+        m_eid[d] = 0
+        mrecv_idx[:, d, :] = 0
+        if m:
+            u_dd = (uniq // n).astype(np.int64)
+            u_dst = (uniq % n).astype(np.int64)
+            first_of_dd = np.searchsorted(u_dd, np.arange(d_n))
+            slot_of_uniq = np.arange(uniq.size) - first_of_dd[u_dd]
+            msrc[d, :m] = pos_of_vertex[rem.src[sel]] - d * n_pad
+            mw[d, :m] = rem.weights[sel]
+            mslot[d, :m] = (u_dd[inv] * m_pad + slot_of_uniq[inv]).astype(np.int32)
+            mpart[d, :m] = part32[rem.src[sel]]
+            mvalid[d, :m] = True
+            m_eid[d, :m] = sel
+            mrecv_idx[u_dd, d, slot_of_uniq] = (
                 pos_of_vertex[u_dst] - u_dd * n_pad
             ).astype(np.int32)
 
@@ -449,6 +569,18 @@ def _build_mesh_layout(
         recv_idx=recv_idx,
         wire_slots=wire_slots,
         remote_block_edges=remote_block_edges,
+        mirror_degree=mirror_degree,
+        e_mirror_pad=e_mirror_pad,
+        m_pad=m_pad,
+        msrc=msrc,
+        mw=mw,
+        mslot=mslot,
+        mpart=mpart,
+        mvalid=mvalid,
+        m_eid=m_eid,
+        mrecv_idx=mrecv_idx,
+        mirror_slots=mirror_slots,
+        mirror_block_edges=mirror_block_edges,
     )
     out.__dict__["_build_info"] = {
         "incremental": base is not None,
@@ -464,9 +596,12 @@ def _build_mesh_layout(
         carried = BoundedCache(_BLOCK_CACHE_MAX)
         for key, (bstart, bcnt, _) in (base.__dict__.get("_block_maps") or {}).items():
             kind, bn, be = key
-            aff = vert_aff if kind == "local" else src_aff
-            edge_rows = ldst if kind == "local" else rslot
-            nseg = n_pad if kind == "local" else d_n * w_pad
+            if kind == "local":
+                aff, edge_rows, nseg = vert_aff, ldst, n_pad
+            elif kind == "mirror":
+                aff, edge_rows, nseg = src_aff, mslot, d_n * m_pad
+            else:
+                aff, edge_rows, nseg = src_aff, rslot, d_n * w_pad
             start = bstart.copy()
             cnt = bcnt.copy()
             for d in np.flatnonzero(aff):

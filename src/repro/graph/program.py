@@ -134,7 +134,7 @@ class VertexProgram:
         """Hashable engine-cache key (override for parameterized programs)."""
         return (self.name,)
 
-    def collective_signature(self) -> dict:
+    def collective_signature(self, *, mirrored: bool = False) -> dict:
         """Declared SPMD collective footprint of ONE superstep of the mesh
         window program -- the shared source of truth between the engine
         (``graph.mesh_exchange`` validates it at construction; its wire
@@ -145,7 +145,9 @@ class VertexProgram:
         Keys:
           ``all_to_all``     value-bearing exchange rounds at the superstep
                              boundary (the engine shape runs exactly one,
-                             pre-aggregated per destination),
+                             pre-aggregated per destination; under hub
+                             mirroring a second round syncs mirror
+                             aggregates to their owners),
           ``psum``           value psums inside the superstep body (the
                              engine defers all counter psums to the window
                              epilogue, so this is 0),
@@ -155,10 +157,16 @@ class VertexProgram:
           ``pmax_closure``   pmaxes per local-closure iteration (monotone
                              only: the inner while's globally-synced cond
                              plus its body's convergence sync).
+
+        ``mirrored=True`` declares the hub-mirroring variant of the engine
+        shape (``mesh_edge_layout(mirror_degree=...)`` resolved to a
+        non-empty mirror plane): the wire exchange plus the mirror->owner
+        sync, i.e. exactly one extra ``all_to_all`` and nothing else.
         """
+        a2a = 2 if mirrored else 1
         if self.stationary:
-            return {"all_to_all": 1, "psum": 0, "pmax_boundary": 2, "pmax_closure": 0}
-        return {"all_to_all": 1, "psum": 0, "pmax_boundary": 1, "pmax_closure": 2}
+            return {"all_to_all": a2a, "psum": 0, "pmax_boundary": 2, "pmax_closure": 0}
+        return {"all_to_all": a2a, "psum": 0, "pmax_boundary": 1, "pmax_closure": 2}
 
     # -- the algebra (traced) ------------------------------------------------
 
@@ -258,14 +266,18 @@ def validate_program(program: VertexProgram) -> VertexProgram:
 SIGNATURE_KEYS = ("all_to_all", "psum", "pmax_boundary", "pmax_closure")
 
 
-def validate_collective_signature(program: VertexProgram) -> dict:
+def validate_collective_signature(
+    program: VertexProgram, *, mirrored: bool = False
+) -> dict:
     """Validate and return the program's declared collective signature.
 
     Called by the mesh engine at construction and by the auditor before
     checking a trace, so a malformed declaration fails loudly in both
-    places rather than silently passing an empty expectation.
+    places rather than silently passing an empty expectation.  ``mirrored``
+    selects the hub-mirroring variant of the declaration (one extra
+    ``all_to_all`` for the mirror->owner sync).
     """
-    sig = dict(program.collective_signature())
+    sig = dict(program.collective_signature(mirrored=mirrored))
     missing = [k for k in SIGNATURE_KEYS if k not in sig]
     extra = [k for k in sig if k not in SIGNATURE_KEYS]
     if missing or extra:

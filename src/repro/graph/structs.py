@@ -171,7 +171,17 @@ class MeshEdgeLayout:
         block), so the superstep-boundary exchange aggregates per-destination
         minima **before** the collective -- one message per
         ``(dst_vertex, dst_device)``, not one per edge -- and the all-to-all
-        payload is the fixed ``[n_devices, w_pad]`` buffer.
+        payload is the fixed ``[n_devices, w_pad]`` buffer,
+      * optionally (``mirror_degree`` is not None), *hub* destinations --
+        vertices whose cross-partition in-degree meets the threshold -- are
+        pulled out of the wire plane into a structurally identical *mirror*
+        plane: every source device holds one mirror slot per
+        ``(owner_device, hub)`` it sends into (``m_pad`` slots per block),
+        remote edges targeting a hub are rewritten to target the local
+        mirror, and a second all-to-all syncs each mirror to its owner once
+        per superstep.  The mirror cache lets the engine suppress re-sends
+        of unimproved hub values, which is where the wire savings come from
+        (``mesh_exchange`` docstring has the exactness argument).
 
     All index arrays carry explicit validity masks; padded entries are wired
     to contribute identity values (``inf`` under min, ``0`` under sum), so no
@@ -222,6 +232,21 @@ class MeshEdgeLayout:
     # -- static exchange metadata (bench / diagnostics) ----------------------
     wire_slots: np.ndarray  # [D_send, D_recv] int64 distinct-dst slot counts
     remote_block_edges: np.ndarray  # [D_send, D_recv] int64 raw edge counts
+    # -- hub mirroring (all fields zero-width when mirror_degree selects no
+    # hubs; the defaults below are only placeholders -- ``_build_mesh_layout``
+    # always constructs every field explicitly) ------------------------------
+    mirror_degree: int | None = None  # threshold the layout was built with
+    e_mirror_pad: int = 0  # padded hub edges per source device
+    m_pad: int = 0  # mirror slots per (src_device, owner_device) block
+    msrc: np.ndarray | None = None  # [D, e_mirror_pad] int32 device-local src
+    mw: np.ndarray | None = None  # [D, e_mirror_pad] float32
+    mslot: np.ndarray | None = None  # [D, e_mirror_pad] int32 in [0, D*m_pad)
+    mpart: np.ndarray | None = None  # [D, e_mirror_pad] int32 src partition
+    mvalid: np.ndarray | None = None  # [D, e_mirror_pad] bool
+    m_eid: np.ndarray | None = None  # [D, e_mirror_pad] int64 remote-set row
+    mrecv_idx: np.ndarray | None = None  # [D_recv, D_send, m_pad] int32
+    mirror_slots: np.ndarray | None = None  # [D_send, D_recv] int64 hub slots
+    mirror_block_edges: np.ndarray | None = None  # [D_send, D_recv] int64
 
     @property
     def state_width(self) -> int:
@@ -231,8 +256,11 @@ class MeshEdgeLayout:
     @property
     def layout_key(self) -> tuple:
         """This layout's canonical cache key (``mesh_layout_key`` of its own
-        map) -- what the mesh program's per-layout const/jit caches hash."""
-        return mesh_layout_key(self.device_of_part, self.n_devices)
+        map plus the mirror knob) -- what the mesh program's per-layout
+        const/jit caches hash."""
+        return mesh_layout_key(self.device_of_part, self.n_devices) + (
+            self.mirror_degree,
+        )
 
     # -- shared state indexing (one implementation for dense + mesh) ---------
 
@@ -271,6 +299,8 @@ class MeshEdgeLayout:
         def build():
             if kind == "local":
                 rows, nseg = self.ldst, self.n_pad
+            elif kind == "mirror":
+                rows, nseg = self.mslot, self.n_devices * self.m_pad
             else:
                 rows, nseg = self.rslot, self.n_devices * self.w_pad
             per_dev = [
@@ -292,6 +322,11 @@ class MeshEdgeLayout:
         """(start [D, NBw], count [D, NBw], t_max) over per-device remote
         edges (``rslot`` rows, ``n_devices * w_pad`` wire-slot segments)."""
         return self._block_map("wire", block_n, block_e)
+
+    def mirror_block_map(self, block_n: int, block_e: int):
+        """(start [D, NBm], count [D, NBm], t_max) over per-device hub edges
+        (``mslot`` rows, ``n_devices * m_pad`` mirror-slot segments)."""
+        return self._block_map("mirror", block_n, block_e)
 
 
 def dst_sorted_layout(

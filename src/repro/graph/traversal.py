@@ -306,6 +306,7 @@ class TraversalEngine:
         backend: str = "xla",
         block_n: int = 512,
         block_e: int = 512,
+        mirror_degree: int | None = None,
     ):
         self.pg = pg
         self.program = validate_program(program or SsspProgram())
@@ -324,6 +325,11 @@ class TraversalEngine:
         # bit-identical across backends.
         interpret = validate_backend(backend)
         self.backend = backend
+        # hub mirroring is a mesh-layout concern; the dense engine has no
+        # wire plane, so the knob only flows into the mesh program
+        self.mirror_degree = (
+            None if mirror_degree is None else int(mirror_degree)
+        )
         self._mesh_prog = None
         if mesh is not None and int(mesh.devices.size) > 1:
             if collect_subgraphs:
@@ -337,6 +343,7 @@ class TraversalEngine:
                 pg, mesh, device_of_part=device_of_part,
                 program=self.program, backend=backend,
                 block_n=block_n, block_e=block_e,
+                mirror_degree=self.mirror_degree,
             )
         self._relax_l_kern = self._relax_r_kern = None
         if backend != "xla" and self._mesh_prog is None:
@@ -716,14 +723,16 @@ def get_engine(
     collect_subgraphs: bool = False,
     mesh=None,
     backend: str = "xla",
+    mirror_degree: int | None = None,
 ) -> TraversalEngine:
     """Per-graph engine cache (keyed by the knobs, stored on the instance).
 
     Engines are keyed by ``program.key`` (default ``SsspProgram``), the
     compute ``backend`` (``"xla"`` | ``"pallas"`` | ``"pallas-interpret"``,
-    see ``TraversalEngine``) and, in mesh mode, the mesh's device ids; the
-    default balanced contiguous partition map is assumed (construct
-    ``TraversalEngine`` directly for a custom ``device_of_part``).
+    see ``TraversalEngine``), the mesh-mode ``mirror_degree`` hub threshold
+    and, in mesh mode, the mesh's device ids; the default balanced
+    contiguous partition map is assumed (construct ``TraversalEngine``
+    directly for a custom ``device_of_part``).
     """
     engines = pg.__dict__.get("_traversal_engines")
     if not isinstance(engines, BoundedCache):
@@ -733,12 +742,17 @@ def get_engine(
         None if mesh is None else tuple(int(d.id) for d in mesh.devices.flat)
     )
     prog_key = (program or SsspProgram()).key
-    key = (int(m_max), bool(collect_subgraphs), mesh_key, prog_key, str(backend))
+    mirror_key = None if mirror_degree is None else int(mirror_degree)
+    key = (
+        int(m_max), bool(collect_subgraphs), mesh_key, prog_key,
+        str(backend), mirror_key,
+    )
     return engines.get_or_build(
         key,
         lambda: TraversalEngine(
             pg, program=program, m_max=m_max,
             collect_subgraphs=collect_subgraphs, mesh=mesh, backend=backend,
+            mirror_degree=mirror_degree,
         ),
     )
 

@@ -223,11 +223,13 @@ for k in WINDOWS:
 # the compute layout changes every window; dist/counters must not notice.
 
 
-def run_with_swaps(pgx, prog, srcs, d_n, swap_seq, k=2, backend="xla"):
+def run_with_swaps(
+    pgx, prog, srcs, d_n, swap_seq, k=2, backend="xla", mirror_degree=None
+):
     """Windowed run forcing a different device_of_part each window."""
     eng = TraversalEngine(
         pgx, program=prog, m_max=M_MAX, mesh=partition_mesh(d_n),
-        backend=backend,
+        backend=backend, mirror_degree=mirror_degree,
     )
     state = eng.init_state(srcs)
     chunks = []
@@ -356,6 +358,128 @@ for backend in ("xla", "pallas-interpret"):
         np.testing.assert_array_equal(r.dist, r_ref.dist)
         np.testing.assert_array_equal(r.edges_examined, r_ref.edges_examined)
 print("backend degenerate: no-remote-edge mesh agrees across backends")
+
+# -- hub mirroring: mirrored engine parity ------------------------------------
+# remote edges into high-in-degree vertices are rewritten onto local mirror
+# slots and synced through a second all_to_all; results must be bit-identical
+# (state + every counter) for min-programs, counters-exact/state-allclose for
+# PageRank, with strictly fewer wire messages for the monotone programs
+# (cache suppression) and unchanged wire billing for the stationary one.
+MIRROR_DEGREE = 3  # pg5 at this threshold: 110 hubs / 422 of 698 remote edges
+for prog_name, prog_ctor, pgx, m_srcs, state_exact in (
+    ("bfs", BfsProgram, pg5, srcs, True),
+    ("sssp", SsspProgram, pg5w, srcs, True),
+    ("wcc", WccProgram, pg5, [0], True),
+    ("pagerank", lambda: PageRankProgram(num_iters=12), pg5, [0], False),
+):
+    for d_n in (2, 8):
+        r0 = get_engine(
+            pgx, program=prog_ctor(), m_max=M_MAX, mesh=partition_mesh(d_n)
+        ).run(m_srcs)
+        r1 = get_engine(
+            pgx, program=prog_ctor(), m_max=M_MAX, mesh=partition_mesh(d_n),
+            mirror_degree=MIRROR_DEGREE,
+        ).run(m_srcs)
+        for field in COUNTERS:
+            np.testing.assert_array_equal(
+                getattr(r1, field), getattr(r0, field),
+                err_msg=f"mirror {prog_name} D={d_n} field={field}",
+            )
+        assert_state(
+            r1.dist, r0.dist, state_exact,
+            err_msg=f"mirror {prog_name} D={d_n} dist",
+        )
+        w0, w1 = int(r0.wire_msgs.sum()), int(r1.wire_msgs.sum())
+        if prog_name == "pagerank":
+            assert w1 == w0, f"mirror pagerank D={d_n}: {w1} != {w0}"
+        else:
+            assert 0 < w1 < w0, (
+                f"mirror {prog_name} D={d_n}: mirroring must shrink the "
+                f"wire ({w1} vs {w0})"
+            )
+    print(f"mirror parity {prog_name}: mirrored==unmirrored for D in (2, 8)")
+
+# mid-traversal relayout swaps UNDER mirroring: the mirror plane is carried
+# through the incremental layout rebuild; swapping every window must keep
+# results identical to the static unmirrored run (hub set is
+# partition-determined, so it survives device-map changes)
+for d_n in (2, 8):
+    base = get_engine(
+        pg5w, program=SsspProgram(), m_max=M_MAX, mesh=partition_mesh(d_n)
+    ).run(srcs)
+    swap_seq = [
+        np.arange(5, dtype=np.int32) % d_n,
+        (np.arange(5, dtype=np.int32)[::-1] % d_n).copy(),
+    ]
+    eng, state, we, wv, ms = run_with_swaps(
+        pg5w, SsspProgram(), srcs, d_n, swap_seq,
+        mirror_degree=MIRROR_DEGREE,
+    )
+    m = we.shape[1]
+    np.testing.assert_array_equal(we, base.edges_examined[:, :m])
+    np.testing.assert_array_equal(wv, base.verts_processed[:, :m])
+    np.testing.assert_array_equal(ms, base.msgs_sent[:, :m])
+    np.testing.assert_array_equal(
+        eng.gather_global(np.asarray(state.dist)), base.dist
+    )
+    print(f"mirror relayout D={d_n}: swapped mirrored layouts, same results")
+
+# kernel backend under mirroring: the mirror combine routes through the
+# same block-map Pallas kernels; counters and state must match xla exactly
+for d_n in (2, 8):
+    rx = get_engine(
+        pg5w, program=SsspProgram(), m_max=M_MAX, mesh=partition_mesh(d_n),
+        backend="xla", mirror_degree=MIRROR_DEGREE,
+    ).run(srcs)
+    rk = get_engine(
+        pg5w, program=SsspProgram(), m_max=M_MAX, mesh=partition_mesh(d_n),
+        backend="pallas-interpret", mirror_degree=MIRROR_DEGREE,
+    ).run(srcs)
+    for field in BACKEND_COUNTERS:
+        np.testing.assert_array_equal(
+            getattr(rk, field), getattr(rx, field),
+            err_msg=f"mirror backend D={d_n} field={field}",
+        )
+    np.testing.assert_array_equal(rk.dist, rx.dist)
+print("mirror backend parity: pallas-interpret==xla for D in (2, 8)")
+
+# -- executor relayout="auto": same results, skips recorded -------------------
+# the cost-aware policy may veto swaps but never changes results or the
+# billed economics; relayout=True keeps its unconditional behavior.
+_, trace5 = run_sssp(graphs["rmat"], 0)
+plan5 = ffd_placement(TimeFunction.from_trace(trace5))
+mesh8 = partition_mesh(8)
+rep_s = ElasticBSPExecutor(graphs["rmat"], mesh=mesh8).run(0, plan5, window=1)
+rep_t = ElasticBSPExecutor(graphs["rmat"], mesh=mesh8).run(
+    0, plan5, window=1, relayout=True
+)
+rep_a = ElasticBSPExecutor(graphs["rmat"], mesh=mesh8).run(
+    0, plan5, window=1, relayout="auto"
+)
+assert rep_t.relayouts_skipped == 0, "relayout=True must never skip"
+np.testing.assert_array_equal(rep_a.dist, rep_s.dist)
+np.testing.assert_array_equal(rep_a.actual_tau.tau, rep_s.actual_tau.tau)
+assert rep_a.cost.migration_secs == rep_s.cost.migration_secs
+assert rep_a.cost.cost_quanta == rep_s.cost.cost_quanta
+assert rep_a.relayouts <= rep_t.relayouts
+
+# force the payback bar impossibly high: every proposed swap is vetoed,
+# the skip counter records each veto, and results are still identical
+ex_never = ElasticBSPExecutor(graphs["rmat"], mesh=mesh8)
+ex_never.AUTO_RELAYOUT_MIN_STEPS = 10**9
+rep_n = ex_never.run(0, plan5, window=1, relayout="auto")
+assert rep_n.relayouts == 0, "an infinite payback bar must veto every swap"
+if rep_t.relayouts:
+    assert rep_n.relayouts_skipped > 0, (
+        "relayout=True swapped but the always-veto auto run recorded no skips"
+    )
+assert rep_n.device_move_bytes <= rep_t.device_move_bytes
+np.testing.assert_array_equal(rep_n.dist, rep_s.dist)
+print(
+    f"executor relayout=auto: {rep_a.relayouts} committed, "
+    f"{rep_a.relayouts_skipped} skipped (always-veto run: "
+    f"{rep_n.relayouts_skipped} skips), results identical"
+)
 
 # -- executor dynamic re-layout: identical economics, planned residency ------
 for name, pg_x in graphs.items():

@@ -261,6 +261,166 @@ def test_relayout_rows_rejects_mismatched_graphs():
         relayout_rows(la, lb, np.zeros((1, la.state_width), np.float32), 0.0)
 
 
+# -- hub mirroring: host-side layout pieces -----------------------------------
+
+
+@pytest.mark.parametrize("n_parts,n_dev", [(5, 2), (5, 8), (8, 4)])
+def test_mirror_layout_invariants(n_parts, n_dev):
+    """Mirror slots must obey the same contracts as the wire plane: sorted
+    segment indices, exact edge conservation (wire + mirror partition the
+    remote set), and slots that decode to a hub vertex on the right device."""
+    g = erdos_renyi_graph(300, 4.0, seed=11)
+    pg = bfs_grow_partition(g, n_parts, seed=2)
+    lay = partitioned_edge_layout(pg)
+    dmap = contiguous_device_map(n_parts, n_dev)
+    ml0 = mesh_edge_layout(pg, dmap, n_dev)
+    ml = mesh_edge_layout(pg, dmap, n_dev, mirror_degree=2)
+    assert ml.m_pad > 0, "threshold 2 must find hubs on this graph"
+
+    # hub selection is partition-determined: in-degree over the remote set
+    indeg = np.bincount(lay.remote.dst, minlength=g.n_vertices)
+    hub = indeg >= 2
+
+    # wire + mirror edges partition the unmirrored wire plane exactly
+    kept_wire = np.sort(ml.r_eid[ml.rvalid])
+    kept_mir = np.sort(ml.m_eid[ml.mvalid])
+    assert kept_wire.size + kept_mir.size == lay.remote.n_edges
+    assert np.array_equal(
+        np.sort(np.concatenate([kept_wire, kept_mir])),
+        np.sort(ml0.r_eid[ml0.rvalid]),
+    )
+    assert hub[lay.remote.dst[kept_mir]].all()
+    assert not hub[lay.remote.dst[kept_wire]].any()
+    # mirror weights reproduce the remote plane on the rerouted edges
+    assert np.array_equal(ml.mw[ml.mvalid], lay.remote.weights[kept_mir])
+
+    # segment indices ascending per device (indices_are_sorted contract)
+    for d in range(n_dev):
+        assert (np.diff(ml.mslot[d]) >= 0).all()
+        assert (np.diff(ml.rslot[d]) >= 0).all()
+
+    # slots decode back to a hub vertex owned by the slot's device
+    dev_of_vertex = ml.device_of_part[pg.part_of_vertex]
+    for d in range(n_dev):
+        m = int(ml.mvalid[d].sum())
+        for i in range(0, m, max(1, m // 25)):
+            slot = int(ml.mslot[d, i])
+            dd, s = slot // ml.m_pad, slot % ml.m_pad
+            gv = int(
+                ml.vertex_of_pos[dd * ml.n_pad + int(ml.mrecv_idx[dd, d, s])]
+            )
+            assert gv >= 0 and dev_of_vertex[gv] == dd and hub[gv]
+    assert (ml.mirror_slots <= ml.mirror_block_edges).all()
+    assert ml.mirror_slots.sum() > 0
+
+
+@pytest.mark.parametrize("n_parts,n_dev", [(5, 2), (8, 4)])
+def test_mirror_incremental_rebuild_matches_from_scratch(n_parts, n_dev):
+    """PR 5's incremental rebuild must carry the mirror plane: every field
+    of an incrementally rebuilt mirrored layout is byte-identical to the
+    from-scratch build of the same (map, degree)."""
+    g = erdos_renyi_graph(350, 4.0, seed=9)
+    pg = bfs_grow_partition(g, n_parts, seed=2)
+    rng = np.random.default_rng(4)
+    base = contiguous_device_map(n_parts, n_dev)
+    mesh_edge_layout(pg, base, n_dev, mirror_degree=2)  # seed the base
+    for _ in range(6):
+        m = base.copy()
+        idx = rng.choice(n_parts, size=int(rng.integers(1, 3)), replace=False)
+        m[idx] = rng.integers(0, n_dev, size=idx.size)
+        inc = mesh_edge_layout(pg, m, n_dev, mirror_degree=2)
+        scratch = mesh_edge_layout(_fresh_pg(pg), m, n_dev, mirror_degree=2)
+        for f in dataclasses.fields(scratch):
+            a, b = getattr(inc, f.name), getattr(scratch, f.name)
+            if isinstance(a, np.ndarray):
+                np.testing.assert_array_equal(a, b, err_msg=f.name)
+            else:
+                assert a == b, f.name
+
+
+def test_mirror_state_round_trips_through_relayout():
+    """State remap between mirrored layouts is the same padded-position
+    permutation as the unmirrored path (mirrors never move vertices):
+    A -> B -> A is bit-identical, content preserved through B."""
+    g = erdos_renyi_graph(300, 4.0, seed=5)
+    pg = bfs_grow_partition(g, 5, seed=2)
+    lay_a = mesh_edge_layout(
+        pg, np.array([0, 1, 0, 1, 1], np.int32), 2, mirror_degree=2
+    )
+    lay_b = mesh_edge_layout(
+        pg, np.array([1, 0, 0, 1, 0], np.int32), 2, mirror_degree=2
+    )
+    assert lay_a.m_pad > 0 and lay_b.m_pad > 0
+    rng = np.random.default_rng(0)
+    n = g.n_vertices
+    dist_g = rng.random((3, n)).astype(np.float32)
+    fr_g = rng.random((3, n)) < 0.3
+
+    dist_a = np.full((3, lay_a.state_width), np.inf, np.float32)
+    dist_a[:, lay_a.pos_of_vertex] = dist_g
+    fr_a = np.zeros((3, lay_a.state_width), bool)
+    fr_a[:, lay_a.pos_of_vertex] = fr_g
+    state_a = WindowState(dist_a, fr_a, np.zeros(3, np.int32))
+
+    state_b = relayout_state(lay_a, lay_b, state_a, identity=np.float32(np.inf))
+    np.testing.assert_array_equal(lay_b.gather_global(state_b.dist), dist_g)
+    np.testing.assert_array_equal(lay_b.gather_global(state_b.frontier), fr_g)
+    back = relayout_state(lay_b, lay_a, state_b, identity=np.float32(np.inf))
+    np.testing.assert_array_equal(np.asarray(back.dist), dist_a)
+    np.testing.assert_array_equal(np.asarray(back.frontier), fr_a)
+
+
+def test_mirror_degenerate_builds_are_byte_identical():
+    """``mirror_degree=None`` (the default) and a zero-hub threshold must
+    build layouts byte-identical to today's on every pre-existing field,
+    with zero-width mirror arrays -- and mint no new jit keys (the JX04
+    recompile-budget sweep extended over the mirror knob)."""
+    from repro.analysis.jaxpr_audit import audit_recompile_budget
+    from repro.graph.mesh_exchange import build_window_consts, window_cache_key
+    from repro.graph.program import SsspProgram
+
+    g = erdos_renyi_graph(300, 4.0, seed=11)
+    pg = bfs_grow_partition(g, 5, seed=2)
+    dmap = contiguous_device_map(5, 2)
+    ml_default = mesh_edge_layout(pg, dmap, 2)
+    # a threshold no vertex reaches: hubless, but a distinct layout-cache key
+    ml_zero = mesh_edge_layout(pg, dmap, 2, mirror_degree=10**6)
+    assert ml_default.mirror_degree is None and ml_default.m_pad == 0
+    assert ml_zero.m_pad == 0 and ml_zero.e_mirror_pad == 0
+
+    mirror_fields = {
+        "mirror_degree", "e_mirror_pad", "m_pad", "msrc", "mw", "mslot",
+        "mpart", "mvalid", "m_eid", "mrecv_idx", "mirror_slots",
+        "mirror_block_edges",
+    }
+    for f in dataclasses.fields(ml_default):
+        if f.name in mirror_fields:
+            continue
+        a, b = getattr(ml_default, f.name), getattr(ml_zero, f.name)
+        if isinstance(a, np.ndarray):
+            np.testing.assert_array_equal(a, b, err_msg=f.name)
+        else:
+            assert a == b, f.name
+
+    # the zero-hub jit key equals the default key: no recompile is minted
+    prog = SsspProgram()
+    for backend in ("xla", "pallas-interpret"):
+        _, st0 = build_window_consts(pg, prog, ml_default, backend=backend)
+        _, st1 = build_window_consts(pg, prog, ml_zero, backend=backend)
+        assert st0 == st1
+        assert window_cache_key(ml_default, 4, backend, st0) == window_cache_key(
+            ml_zero, 4, backend, st1
+        )
+
+    # JX04 sweep over the mirror knob: (map, degree) pairs key uniquely and
+    # the window-jit budget holds with the knob in play
+    findings = audit_recompile_budget(
+        pg, prog, backend="xla", d_n=2, windows=(1, 8, 1),
+        mirror_degrees=(None, 2, None, 2),
+    )
+    assert not findings, [str(f) for f in findings]
+
+
 # -- single-device fallback (runs on the real 1-CPU pytest process) ----------
 
 
