@@ -62,14 +62,33 @@ and records wire slots/bytes per superstep both ways; the child asserts the
 >= 25% best-case reduction the acceptance bar requires.  ``--mirror`` alone
 merges just this sweep into an existing ``BENCH_traversal.json``.
 
+The ``--serving`` sweep (the ``repro.serve`` subsystem, also part of the
+full run) replays a seeded open-loop Poisson ``TraversalQuery`` trace at
+several arrival rates through ``TraversalService`` twice per rate -- elastic
+per-window VM capacity (activity forecast + queue-drift rule) vs statically
+provisioned at ``max_vms`` -- and records throughput, sojourn percentiles,
+occupancy, billed quanta and cost per 1k queries for both.  The sweep
+asserts the elastic acceptance bar in-run: at >= 1 rate elastic must beat
+static on cost per 1k queries while keeping p99 sojourn within 2x of
+static.  Everything runs off the service's simulated clock, so the rows are
+bit-for-bit reproducible.  ``--serving`` alone merges just this sweep into
+an existing ``BENCH_traversal.json``.
+
+``--serve-smoke`` is the serving CI gate (dense engine, in-process, no
+forced devices): a tiny-graph fixed-seed trace served elastic and static,
+asserting throughput > 0, finite p99 sojourn, elastic billed cost <= static,
+and deterministic replay (two ``service.run(trace)`` calls return equal
+reports).
+
 ``--smoke`` is the CI gate: on a tiny graph it asserts the wire-savings and
 elastic-vs-static invariants (plus relayout bit-identity, xla vs
 pallas-interpret mesh parity, and mirrored-vs-unmirrored parity with
 strictly fewer wire slots) in a short forced-device child, and
 schema-checks the *committed* ``BENCH_traversal.json`` (parses; has the
 ``mesh_sweep`` / ``program_sweep`` / ``relayout`` / ``kernel_path`` /
-``mirror_sweep`` sections, with every kernel-path row recording
-``parity_ok`` and the mirror sweep clearing the 25% bar) -- without
+``mirror_sweep`` / ``serving`` sections, with every kernel-path row
+recording ``parity_ok``, the mirror sweep clearing the 25% bar, and the
+serving sweep clearing its cost/latency acceptance bar) -- without
 rewriting the file.
 
 Writes ``BENCH_traversal.json`` so the perf trajectory is tracked per PR.
@@ -116,8 +135,18 @@ MIRROR_RMAT_DEGREE = 16
 OUT_PATH = "BENCH_traversal.json"
 #: sections the committed JSON must carry (CI schema check)
 REQUIRED_SECTIONS = (
-    "mesh_sweep", "program_sweep", "relayout", "kernel_path", "mirror_sweep"
+    "mesh_sweep", "program_sweep", "relayout", "kernel_path", "mirror_sweep",
+    "serving",
 )
+#: serving sweep shape (see repro.serve): arrival rates are in queries per
+#: simulated second; tau_scale keeps the whole busy span of a run inside one
+#: billing quantum so elastic consolidation shows up in billed quanta
+SERVE_SCALE, SERVE_DEGREE, SERVE_PARTS = 9, 8, 8
+SERVE_RATES = (5.0, 20.0, 80.0)
+SERVE_QUERIES = 120
+SERVE_TAU_SCALE = 1e3
+#: elastic acceptance bar: at >= 1 rate, cost/1k win with p99 within this
+SERVE_P99_STRETCH = 2.0
 
 
 def _bench_programs():
@@ -728,6 +757,155 @@ def run_mirror_only(verbose: bool = True) -> dict:
     return out
 
 
+# -- elastic serving sweep ----------------------------------------------------
+
+
+def _serve_row(rep) -> dict:
+    """One ServiceReport flattened to the bench JSON row."""
+    return {
+        "completed": rep.completed,
+        "rejected": rep.rejected,
+        "requeued": rep.requeued,
+        "queries_per_sec": rep.queries_per_sec,
+        "sojourn_p50": rep.sojourn_p50,
+        "sojourn_p95": rep.sojourn_p95,
+        "sojourn_p99": rep.sojourn_p99,
+        "occupancy": rep.occupancy,
+        "capacity_mean": rep.capacity_mean,
+        "capacity_peak": rep.capacity_peak,
+        "cost_quanta": rep.cost.cost_quanta,
+        "cost_per_1k_queries": rep.cost_per_1k_queries,
+    }
+
+
+def _serving_sweep() -> dict:
+    """Open-loop Poisson serving at ``SERVE_RATES``: elastic vs static
+    ``TraversalService`` runs on the same seeded trace per rate (see module
+    docstring).  Asserts the elastic acceptance bar in-run."""
+    import dataclasses
+
+    from repro.graph.partition import hash_partition
+    from repro.serve import ServiceConfig, TraversalService, poisson_trace
+
+    g = rmat_graph(SERVE_SCALE, SERVE_DEGREE, seed=0)
+    pg = hash_partition(g, SERVE_PARTS, seed=0)
+    cfg = ServiceConfig(s_batch=8, window=8, tau_scale=SERVE_TAU_SCALE)
+    static_cfg = dataclasses.replace(cfg, static_vms=cfg.max_vms)
+    per_rate = {}
+    bar_met = False
+    for rate in SERVE_RATES:
+        trace = poisson_trace(SERVE_QUERIES, rate, g.n_vertices, seed=0)
+        elastic = TraversalService(pg, config=cfg).run(trace)
+        static = TraversalService(pg, config=static_cfg).run(trace)
+        p99_ratio = (
+            elastic.sojourn_p99 / static.sojourn_p99
+            if static.sojourn_p99 > 0
+            else 1.0
+        )
+        cost_win = elastic.cost_per_1k_queries < static.cost_per_1k_queries
+        if cost_win and p99_ratio <= SERVE_P99_STRETCH:
+            bar_met = True
+        per_rate[str(rate)] = {
+            "elastic": _serve_row(elastic),
+            "static": _serve_row(static),
+            "p99_ratio_elastic_vs_static": p99_ratio,
+            "elastic_cost_win": cost_win,
+        }
+    assert bar_met, (
+        f"serving acceptance: no rate in {SERVE_RATES} has elastic beating "
+        f"static on cost/1k with p99 within {SERVE_P99_STRETCH}x"
+    )
+    return {
+        "graph": f"rmat 2^{SERVE_SCALE} avg degree {SERVE_DEGREE}",
+        "n_parts": SERVE_PARTS,
+        "n_queries": SERVE_QUERIES,
+        "tau_scale": SERVE_TAU_SCALE,
+        "rates": list(SERVE_RATES),
+        "s_batch": cfg.s_batch,
+        "window": cfg.window,
+        "vm_range": [cfg.min_vms, cfg.max_vms],
+        "p99_stretch_bar": SERVE_P99_STRETCH,
+        "per_rate": per_rate,
+    }
+
+
+def _print_serving_sweep(sweep: dict) -> None:
+    for rate, row in sweep["per_rate"].items():
+        e, s = row["elastic"], row["static"]
+        print(
+            f"serving rate {rate}: elastic {e['queries_per_sec']:.1f} qps, "
+            f"{e['cost_quanta']} quanta ({e['cost_per_1k_queries']:.0f}/1k) "
+            f"vs static {s['cost_quanta']} quanta "
+            f"({s['cost_per_1k_queries']:.0f}/1k), p99 ratio "
+            f"{row['p99_ratio_elastic_vs_static']:.2f}"
+            + (" [cost win]" if row["elastic_cost_win"] else "")
+        )
+
+
+def run_serving_only(verbose: bool = True) -> dict:
+    """``--serving``: compute just the serving sweep and merge it into an
+    existing ``BENCH_traversal.json`` (fresh file if none)."""
+    out = {}
+    if os.path.exists(OUT_PATH):
+        with open(OUT_PATH) as f:
+            out = json.load(f)
+    out["serving"] = _serving_sweep()
+    with open(OUT_PATH, "w") as f:
+        json.dump(out, f, indent=2)
+    if verbose:
+        _print_serving_sweep(out["serving"])
+        print(f"-> {OUT_PATH}")
+    return out
+
+
+SERVE_SMOKE_SCALE, SERVE_SMOKE_DEGREE = 8, 4
+SERVE_SMOKE_QUERIES = 40
+SERVE_SMOKE_RATE = 10.0
+
+
+def run_serve_smoke(verbose: bool = True) -> None:
+    """``--serve-smoke``: serving CI gate (dense engine, in-process).
+
+    On a tiny fixed-seed graph/trace: elastic throughput > 0, finite p99
+    sojourn, elastic billed cost <= static, and deterministic replay (two
+    ``run(trace)`` calls return equal reports, query records included).
+    Never writes ``BENCH_traversal.json``.
+    """
+    import dataclasses
+
+    from repro.graph.partition import hash_partition
+    from repro.serve import ServiceConfig, TraversalService, poisson_trace
+
+    g = rmat_graph(SERVE_SMOKE_SCALE, SERVE_SMOKE_DEGREE, seed=0)
+    pg = hash_partition(g, SERVE_PARTS, seed=0)
+    cfg = ServiceConfig(s_batch=4, window=8, tau_scale=SERVE_TAU_SCALE)
+    trace = poisson_trace(
+        SERVE_SMOKE_QUERIES, SERVE_SMOKE_RATE, g.n_vertices, seed=0
+    )
+    elastic = TraversalService(pg, config=cfg).run(trace)
+    replay = TraversalService(pg, config=cfg).run(trace)
+    assert elastic == replay, "serve smoke: replay not deterministic"
+    static = TraversalService(
+        pg, config=dataclasses.replace(cfg, static_vms=cfg.max_vms)
+    ).run(trace)
+    assert elastic.completed == SERVE_SMOKE_QUERIES, (
+        f"serve smoke: {elastic.completed}/{SERVE_SMOKE_QUERIES} completed"
+    )
+    assert elastic.queries_per_sec > 0, "serve smoke: zero throughput"
+    assert math.isfinite(elastic.sojourn_p99), "serve smoke: p99 not finite"
+    assert elastic.cost.cost <= static.cost.cost, (
+        f"serve smoke: elastic {elastic.cost.cost} > static {static.cost.cost}"
+    )
+    if verbose:
+        print(
+            f"serve smoke: {elastic.completed} queries at "
+            f"{elastic.queries_per_sec:.1f} qps, p99 "
+            f"{elastic.sojourn_p99:.3f}s, elastic {elastic.cost.cost_quanta} "
+            f"<= static {static.cost.cost_quanta} quanta, replay "
+            f"deterministic: True"
+        )
+
+
 # -- CI smoke: invariants on a tiny graph + committed-JSON schema check -------
 
 SMOKE_SCALE, SMOKE_DEGREE, SMOKE_PARTS = 8, 4, 8
@@ -829,6 +1007,17 @@ def check_bench_schema(path: str = OUT_PATH) -> dict:
             )
     assert ms["best"]["wire_reduction"] >= 0.25, (
         f"mirror_sweep best reduction {ms['best']} below the 25% bar"
+    )
+    sv = data["serving"]
+    assert sv["per_rate"], "empty serving sweep"
+    stretch = sv.get("p99_stretch_bar", SERVE_P99_STRETCH)
+    assert any(
+        row["elastic_cost_win"]
+        and row["p99_ratio_elastic_vs_static"] <= stretch
+        for row in sv["per_rate"].values()
+    ), (
+        "serving: no rate shows elastic beating static on cost/1k with p99 "
+        f"within {stretch}x"
     )
     return data
 
@@ -946,6 +1135,9 @@ def run(verbose: bool = True) -> dict:
     # hub mirroring: wire slots/bytes per superstep vs the unmirrored path
     out["mirror_sweep"] = _mirror_sweep_subprocess()
 
+    # elastic serving: open-loop Poisson traces through TraversalService
+    out["serving"] = _serving_sweep()
+
     with open(OUT_PATH, "w") as f:
         json.dump(out, f, indent=2)
     if verbose:
@@ -982,6 +1174,7 @@ def run(verbose: bool = True) -> dict:
         _print_relayout_sweep(out["relayout"])
         _print_kernel_path_sweep(out["kernel_path"])
         _print_mirror_sweep(out["mirror_sweep"])
+        _print_serving_sweep(out["serving"])
     return out
 
 
@@ -1004,6 +1197,10 @@ if __name__ == "__main__":
         run_kernel_path_only()
     elif "--mirror" in sys.argv:
         run_mirror_only()
+    elif "--serving" in sys.argv:
+        run_serving_only()
+    elif "--serve-smoke" in sys.argv:
+        run_serve_smoke()
     elif "--smoke" in sys.argv:
         run_smoke()
     else:

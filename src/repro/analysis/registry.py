@@ -51,6 +51,13 @@ TRACED_FUNCTIONS = (
         "shard_map body; keyword-only params are static",
     ),
     TracedFn(
+        "graph/traversal.py",
+        "_backfill_impl",
+        ("dist", "frontier", "nst", "rows", "f_dist", "f_frontier", "live",
+         "ident"),
+        "jitted at a distance via _BACKFILL_FN_CACHE (serving row surgery)",
+    ),
+    TracedFn(
         "kernels/bfs_relax/ops.py",
         "relax_blockmap_call",
         ("start", "cnt", "dst", "cand", "base"),

@@ -286,6 +286,33 @@ class WindowResult(NamedTuple):
     done: np.ndarray  # [S] bool, frontier empty (traversal converged)
 
 
+#: Serving-path row surgery: one jitted scatter per coerced batch-shape key
+#: (``(S, state_width, n_rows, dtype)``).  Each key gets its own ``jax.jit``
+#: wrapper so evicting an entry also frees its compiled executable -- the
+#: AL02 batch-shape cache discipline (bounded LRU, coerced keys).
+_BACKFILL_FN_CACHE = BoundedCache(8)
+
+
+def _backfill_impl(dist, frontier, nst, rows, f_dist, f_frontier, live, ident):
+    """Scatter freshly-initialized batch rows into carried window state.
+
+    ``rows`` indexes the batch axis; ``live`` marks rows that receive the
+    matching fresh ``(f_dist, f_frontier)`` row, while dead rows are
+    *deactivated*: state pinned at the program identity with an empty
+    frontier, so a retired or requeued row stops contributing work (and
+    counters) to subsequent windows.  ``n_supersteps`` restarts at 0 for
+    every touched row.  Jitted at a distance via ``_BACKFILL_FN_CACHE``.
+    """
+    fd = jnp.where(live[:, None], f_dist, ident)
+    ff = f_frontier & live[:, None]
+    zeros = jnp.zeros(rows.shape, nst.dtype)
+    return (
+        dist.at[rows].set(fd),
+        frontier.at[rows].set(ff),
+        nst.at[rows].set(zeros),
+    )
+
+
 class TraversalEngine:
     """Device-resident multi-source BSP traversal over a static CSR layout.
 
@@ -626,6 +653,62 @@ class TraversalEngine:
             jnp.asarray(state), jnp.asarray(frontier),
             jnp.zeros((s_batch,), jnp.int32),
         )
+
+    def backfill_rows(self, state: WindowState, rows, sources) -> WindowState:
+        """Replace carried-state batch rows at a window boundary (in place of
+        re-initializing the whole batch -- the serving micro-batcher's
+        retire/backfill surgery).
+
+        ``sources[i] >= 0`` re-initializes row ``rows[i]`` from that source
+        through ``program.init`` -- bit-identical to the row a fresh
+        ``init_state`` batch would carry, because the window math is
+        row-independent (the batcher's backfill test pins this).
+        ``sources[i] == -1`` *deactivates* the row: identity state, empty
+        frontier, so it contributes no further work or counters.  Either way
+        the row's ``n_supersteps`` restarts at 0.
+
+        In mesh mode the fresh rows are scattered through the same padded
+        device-major permutation the relayout machinery uses
+        (``MeshTraversalProgram.init_state`` routes ``pos_of_vertex``), and
+        the surgered state is re-committed to the engine's active sharding;
+        the surgery assumes the state is laid out for the engine's *current*
+        ``device_of_part`` (run any re-layout first).
+        """
+        rows = np.atleast_1d(np.asarray(rows, dtype=np.int64))
+        sources = np.atleast_1d(np.asarray(sources, dtype=np.int64))
+        if rows.shape != sources.shape:
+            raise ValueError(
+                f"rows {rows.shape} and sources {sources.shape} must match"
+            )
+        if rows.size == 0:
+            return state
+        s_batch = int(state.dist.shape[0])
+        if np.unique(rows).size != rows.size or (rows < 0).any() or (
+            rows >= s_batch
+        ).any():
+            raise ValueError(f"rows must be unique in [0, {s_batch}): {rows}")
+        live = sources >= 0
+        fresh = self.init_state(np.where(live, sources, 0))
+        key = (
+            s_batch,
+            int(state.dist.shape[1]),
+            int(rows.size),
+            str(np.dtype(self.program.dtype)),
+        )
+        fn = _BACKFILL_FN_CACHE.get_or_build(key, lambda: jax.jit(_backfill_impl))
+        ident = jnp.asarray(self.program.identity, state.dist.dtype)
+        dist, frontier, nst = fn(
+            state.dist, state.frontier, state.n_supersteps,
+            jnp.asarray(rows), fresh.dist, fresh.frontier,
+            jnp.asarray(live), ident,
+        )
+        if self._mesh_prog is not None:
+            # pin the surgered state back to the engine's canonical sharding
+            # (scatter output sharding is compiler-chosen; this is a no-copy
+            # commit when the compiler already kept it sharded)
+            dist = jax.device_put(dist, state.dist.sharding)
+            frontier = jax.device_put(frontier, state.frontier.sharding)
+        return WindowState(dist, frontier, nst)
 
     @property
     def device_of_part(self) -> np.ndarray | None:

@@ -3,9 +3,14 @@
   PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b --tokens 32
 
 Serves a reduced-config model on the host mesh: prefill the prompt batch,
-then step the decode loop.  The elastic-serving demo
-(examples/elastic_serving.py) wraps this with the paper's placement layer to
-pick replica counts from a-priori load predictions.
+then step the decode loop.
+
+This LM decode server and the graph **traversal service** (``repro.serve``,
+demoed by examples/elastic_serving.py) are separate front ends over
+different engines: this one steps a transformer decode loop on wall-clock
+time, while ``repro.serve`` admission-queues ``TraversalQuery`` streams into
+the BSP traversal engine under a simulated clock and elastic per-window VM
+capacity.  Neither layer imports the other.
 """
 
 from __future__ import annotations
@@ -48,7 +53,6 @@ def serve_batch(
 
     # prefill: replay the prompt through the decode path (fills the cache)
     t0 = time.perf_counter()
-    tok = prompts[:, :1]
     for pos in range(prompt_len):
         logits, cache = decode(params, cache, prompts[:, pos : pos + 1], jnp.int32(pos))
     t_prefill = time.perf_counter() - t0

@@ -1,0 +1,50 @@
+"""Traversal-as-a-service: the paper's elastic placement under real load.
+
+The subsystem turns the batch-oriented traversal stack into a serving front
+end: a stream of ``TraversalQuery(source, program, deadline)`` requests is
+admitted through a bounded queue with per-program lanes (``serve.queue``),
+micro-batched into the engine's fixed ``[S]`` source axis (``serve.batcher``
+-- jit keys never churn), run window by window at a per-window VM capacity
+chosen from the activity forecast plus a Ghaderi-style queue-drift rule
+(``serve.scheduler``), and billed through the existing two-ledger
+``CostReport`` split (``serve.service``).  The event loop is simulated-clock
+only, so every run is deterministic and bit-for-bit replayable.
+
+This is the graph-serving counterpart of the LM decode server in
+``repro.launch.serve`` -- two separate front ends over different engines.
+Import is jax-free until a service actually builds an engine, so the
+analysis/lint layer can import the package without a device runtime.
+"""
+
+from repro.serve.batcher import MicroBatcher
+from repro.serve.queue import Admitted, AdmissionQueue, TraversalQuery, lane_key
+from repro.serve.scheduler import (
+    CapacityDecision,
+    CapacityScheduler,
+    lpt_makespan,
+    lpt_rows,
+)
+from repro.serve.service import (
+    QueryRecord,
+    ServiceConfig,
+    ServiceReport,
+    TraversalService,
+    poisson_trace,
+)
+
+__all__ = [
+    "Admitted",
+    "AdmissionQueue",
+    "CapacityDecision",
+    "CapacityScheduler",
+    "MicroBatcher",
+    "QueryRecord",
+    "ServiceConfig",
+    "ServiceReport",
+    "TraversalQuery",
+    "TraversalService",
+    "lane_key",
+    "lpt_makespan",
+    "lpt_rows",
+    "poisson_trace",
+]

@@ -59,6 +59,15 @@ def test_mesh_job_forces_8_devices_and_runs_mesh_marked_tests():
     assert "benchmarks.traversal_bench --smoke" in runs
 
 
+def test_mesh_job_runs_the_serve_smoke():
+    """PR 9 added the elastic serving subsystem; its CI gate (throughput,
+    finite p99, elastic cost <= static, deterministic replay) is a pinned
+    mesh-job step."""
+    wf = _load()
+    runs = " && ".join(_run_lines(wf["jobs"]["mesh"]))
+    assert "benchmarks.traversal_bench --serve-smoke" in runs
+
+
 def test_lint_job_is_blocking_and_runs_both_linters():
     """PR 7 flipped lint from advisory to blocking: ruff E/F plus the
     repo-specific AST rules (repro.analysis --lint) in one gating job."""
@@ -122,3 +131,27 @@ def test_bench_json_is_valid_json_with_tracked_sweeps():
     for row in data["kernel_path"]["per_program"].values():
         assert {"xla_wall_s", "pallas_interpret_wall_s", "parity_ok"} <= set(row)
     assert data["kernel_path"]["roofline"]
+
+
+def test_bench_json_serving_section_clears_the_acceptance_bar():
+    """The committed serving sweep must show elastic beating static on cost
+    per 1k queries at >= 1 arrival rate with p99 sojourn within the stretch
+    bar -- the PR-9 acceptance criterion, pinned on the artifact itself."""
+    with open(_BENCH_JSON) as f:
+        data = json.load(f)
+    sv = data["serving"]
+    assert sv["per_rate"]
+    stretch = sv["p99_stretch_bar"]
+    winners = [
+        rate
+        for rate, row in sv["per_rate"].items()
+        if row["elastic_cost_win"]
+        and row["p99_ratio_elastic_vs_static"] <= stretch
+    ]
+    assert winners, f"no serving rate clears the bar (stretch {stretch})"
+    for row in sv["per_rate"].values():
+        for mode in ("elastic", "static"):
+            r = row[mode]
+            assert r["completed"] > 0
+            assert r["queries_per_sec"] > 0
+            assert r["cost_quanta"] > 0

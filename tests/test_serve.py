@@ -1,0 +1,293 @@
+"""The serving subsystem's contract tests.
+
+Pins the invariants the ``repro.serve`` design is stated over:
+
+  * admission: bounded backpressure, per-lane FIFO, requeue accounting;
+  * batcher: the physical batch shape never mints a new jit key whatever
+    the arrival pattern (JX04-style cache probe), and a backfilled row is
+    bit-identical to the row a fresh batch would carry;
+  * requeue path: unconverged-at-cap queries are re-admitted with partial
+    state dropped, counted, and dropped past ``max_requeues``;
+  * service loop: bit-for-bit deterministic replay on the simulated clock;
+  * scheduler: deterministic LPT, static pinning, queue-drift monotonicity;
+  * the package imports without jax (analysis layer contract).
+"""
+
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.graph.generators import rmat_graph
+from repro.graph.partition import hash_partition
+from repro.graph.program import BfsProgram, SsspProgram
+from repro.graph.traversal import get_engine
+from repro.serve import (
+    AdmissionQueue,
+    CapacityScheduler,
+    ServiceConfig,
+    TraversalQuery,
+    TraversalService,
+    lane_key,
+    lpt_makespan,
+    lpt_rows,
+    poisson_trace,
+)
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+N_PARTS = 4
+
+
+@pytest.fixture(scope="module")
+def pg():
+    g = rmat_graph(7, 4, seed=0)
+    return hash_partition(g, N_PARTS, seed=0)
+
+
+def _cfg(**kw):
+    kw.setdefault("s_batch", 4)
+    kw.setdefault("window", 4)
+    kw.setdefault("tau_scale", 1e3)
+    return ServiceConfig(**kw)
+
+
+# -- admission queue ----------------------------------------------------------
+
+
+def test_queue_backpressure_rejects_and_counts():
+    q = AdmissionQueue(2)
+    assert q.offer(TraversalQuery(0), 0.0) is not None
+    assert q.offer(TraversalQuery(1), 0.1) is not None
+    assert q.offer(TraversalQuery(2), 0.2) is None  # full
+    assert (q.admitted, q.rejected, len(q)) == (2, 1, 2)
+    q.take(q.default_key, 1)
+    assert q.offer(TraversalQuery(3), 0.3) is not None
+
+
+def test_queue_fifo_within_lane_and_lane_isolation():
+    q = AdmissionQueue(16)
+    sssp, bfs = SsspProgram(), BfsProgram()
+    for i in range(4):
+        q.offer(TraversalQuery(i, sssp), float(i))
+        q.offer(TraversalQuery(10 + i, bfs), float(i))
+    lanes = list(q.lanes())
+    assert lanes == [str(sssp.key), str(bfs.key)]  # first-seen order
+    got = q.take(str(sssp.key), 10)
+    assert [r.query.source for r in got] == [0, 1, 2, 3]  # FIFO, own lane only
+    assert q.depth(str(bfs.key)) == 4
+
+
+def test_queue_requeue_bypasses_capacity_and_counts():
+    q = AdmissionQueue(1)
+    rec = q.offer(TraversalQuery(5), 0.0)
+    q.take(q.default_key, 1)
+    q.offer(TraversalQuery(6), 0.1)  # refills to capacity
+    back = q.requeue(rec)  # exempt from the bound
+    assert back.requeues == 1 and q.requeued == 1 and len(q) == 2
+    # the requeued query sits at the lane tail, FIFO preserved
+    got = q.take(lane_key(back.query, q.default_key), 2)
+    assert [r.query.source for r in got] == [6, 5]
+
+
+# -- scheduler ----------------------------------------------------------------
+
+
+def test_lpt_rows_deterministic_and_within_capacity():
+    tau = np.array([3.0, 1.0, 4.0, 1.0, 5.0, 0.0])
+    a1, a2 = lpt_rows(tau, 3), lpt_rows(tau, 3)
+    assert np.array_equal(a1, a2)
+    assert a1[5] == -1  # inactive partition gets no slot
+    assert set(a1[a1 >= 0]) <= set(range(3))
+    assert lpt_makespan(tau, 3) <= tau.sum()
+    assert lpt_makespan(tau, 1) == tau.sum()
+
+
+def test_scheduler_static_pin_and_drift_monotonicity():
+    sched = CapacityScheduler(N_PARTS, max_vms=8, queue_weight=0.25)
+    sched.observe(np.array([1.0, 2.0, 3.0, 4.0]))
+    active = np.ones(N_PARTS, dtype=bool)
+    caps = [sched.decide(q, active).n_vms for q in (0, 4, 16, 64)]
+    assert caps == sorted(caps)  # queue drift never shrinks capacity
+    assert caps[-1] == 8  # deep backlog ramps to max
+    pinned = CapacityScheduler(N_PARTS, max_vms=8, static_vms=8)
+    assert pinned.decide(0, active).n_vms == 8
+    assert pinned.decide(100, active).n_vms == 8
+
+
+# -- batcher: jit-key stability + backfill bit-identity -----------------------
+
+
+def test_no_new_jit_key_across_arrival_patterns(pg):
+    """JX04-style cache probe: whatever the arrival pattern, the service's
+    engine launches reuse one compiled window program per (S, k)."""
+    cfg = _cfg()
+    eng = get_engine(pg)  # the same cached engine the service's lane uses
+    svc = TraversalService(pg, config=cfg)
+    svc.run(poisson_trace(12, 50.0, pg.graph.n_vertices, seed=1))  # burst
+    n0 = eng._window._cache_size()
+    assert n0 >= 1
+    svc.run(poisson_trace(12, 0.5, pg.graph.n_vertices, seed=2))  # trickle
+    svc.run(((0.0, TraversalQuery(3)),))  # single query, all-phantom padding
+    assert eng._window._cache_size() == n0
+
+
+def test_backfill_row_bit_identical_to_fresh_batch(pg):
+    """Window math is row-independent, so a backfilled row must finish
+    bit-for-bit where the same source lands in a fresh batch."""
+    eng = get_engine(pg)
+    nv = pg.graph.n_vertices
+    st = eng.init_state(np.array([1, 2, 3, 4]))
+    st = eng.run_window(st, 4).state  # mid-traversal surgery point
+    st = eng.backfill_rows(st, [1], [7])
+    for _ in range(16):
+        res = eng.run_window(st, 4)
+        st = res.state
+        if bool(np.asarray(res.done).all()):
+            break
+    fresh = eng.init_state(np.array([7] * 4))
+    for _ in range(16):
+        fres = eng.run_window(fresh, 4)
+        fresh = fres.state
+        if bool(np.asarray(fres.done).all()):
+            break
+    assert np.array_equal(
+        np.asarray(res.state.dist[1]), np.asarray(fres.state.dist[0])
+    )
+    assert int(res.n_supersteps[1]) == int(fres.n_supersteps[0])
+    assert 0 <= 7 < nv
+
+
+def test_backfill_deactivation_kills_partial_state(pg):
+    """Source -1 deactivates a row: identity state, empty frontier, zero
+    counter -- dropped partial state cannot keep computing."""
+    eng = get_engine(pg)
+    st = eng.init_state(np.array([1, 2, 3, 4]))
+    st = eng.run_window(st, 2).state
+    st = eng.backfill_rows(st, [2], [-1])
+    ident = eng.program.identity
+    assert bool((np.asarray(st.dist[2]) == ident).all())
+    assert not np.asarray(st.frontier[2]).any()
+    assert int(st.n_supersteps[2]) == 0
+
+
+def test_backfill_rejects_bad_rows(pg):
+    eng = get_engine(pg)
+    st = eng.init_state(np.array([1, 2, 3, 4]))
+    with pytest.raises(ValueError):
+        eng.backfill_rows(st, [0, 0], [1, 2])  # duplicate rows
+    with pytest.raises(ValueError):
+        eng.backfill_rows(st, [4], [1])  # out of range
+    with pytest.raises(ValueError):
+        eng.backfill_rows(st, [0, 1], [1])  # shape mismatch
+
+
+# -- service loop -------------------------------------------------------------
+
+
+def test_service_completes_all_and_fifo_dispatch_per_lane(pg):
+    cfg = _cfg()
+    trace = poisson_trace(20, 5.0, pg.graph.n_vertices, seed=3)
+    rep = TraversalService(pg, config=cfg).run(trace)
+    assert rep.completed == 20 and rep.rejected == 0 and rep.dropped == 0
+    assert rep.queries_per_sec > 0 and np.isfinite(rep.sojourn_p99)
+    # FIFO fairness: within the lane, dispatch order follows admission order
+    recs = sorted(rep.queries, key=lambda r: r.qid)
+    disp = [r.dispatched for r in recs]
+    assert disp == sorted(disp)
+    # sojourn is never negative and at least the dispatch wait
+    assert all(r.finished >= r.dispatched >= r.arrival for r in recs)
+
+
+def test_service_deterministic_replay(pg):
+    cfg = _cfg()
+    trace = poisson_trace(15, 8.0, pg.graph.n_vertices, seed=4)
+    r1 = TraversalService(pg, config=cfg).run(trace)
+    r2 = TraversalService(pg, config=cfg).run(trace)
+    assert r1 == r2  # bit-for-bit, query records included
+
+
+def test_service_backpressure_loss_system(pg):
+    cfg = _cfg(queue_capacity=2)
+    trace = poisson_trace(30, 1e6, pg.graph.n_vertices, seed=5)  # burst at t~0
+    rep = TraversalService(pg, config=cfg).run(trace)
+    assert rep.rejected > 0
+    assert rep.completed + rep.rejected + rep.dropped == rep.offered
+
+
+def test_service_requeues_then_drops_unconverged_at_cap(pg):
+    """The TraversalNotConverged twin: a cap below the traversal's depth
+    requeues every attempt (partial state dropped) and drops the query
+    after ``max_requeues`` -- and the loop still terminates."""
+    cfg = _cfg(superstep_cap=2, window=2, max_requeues=1)
+    trace = poisson_trace(6, 10.0, pg.graph.n_vertices, seed=6)
+    rep = TraversalService(pg, config=cfg).run(trace)
+    assert rep.requeued > 0
+    assert rep.dropped > 0
+    assert rep.completed + rep.dropped == rep.offered  # nothing lost silently
+    for rec in rep.queries:  # whoever completed did so within the cap
+        assert rec.supersteps <= cfg.superstep_cap
+    # replay determinism holds on the requeue path too
+    assert TraversalService(pg, config=cfg).run(trace) == rep
+
+
+def test_service_elastic_never_costs_more_than_static(pg):
+    cfg = _cfg()
+    trace = poisson_trace(16, 4.0, pg.graph.n_vertices, seed=7)
+    elastic = TraversalService(pg, config=cfg).run(trace)
+    static = TraversalService(
+        pg, config=dataclasses.replace(cfg, static_vms=cfg.max_vms)
+    ).run(trace)
+    assert elastic.cost.cost <= static.cost.cost
+    assert elastic.capacity_peak <= cfg.max_vms
+    assert static.capacity_mean == cfg.max_vms
+
+
+def test_service_per_program_lanes(pg):
+    """Queries of different programs never share a batch: each program gets
+    its own lane/engine, and every query still completes."""
+    cfg = _cfg()
+    bfs = BfsProgram()
+    trace = tuple(
+        (0.05 * i, TraversalQuery(i + 1, bfs if i % 2 else None))
+        for i in range(8)
+    )
+    rep = TraversalService(pg, config=cfg).run(trace)
+    assert rep.completed == 8
+    lanes = {r.lane for r in rep.queries}
+    assert lanes == {str(SsspProgram().key), str(bfs.key)}
+
+
+# -- import contract ----------------------------------------------------------
+
+
+def test_serve_package_imports_without_jax():
+    """The analysis layer imports ``repro.serve`` with no device runtime:
+    jax must stay a lazy dependency of ``TraversalService`` construction."""
+    code = textwrap.dedent(
+        """
+        import builtins
+        real = builtins.__import__
+        def guard(name, *a, **k):
+            if name == "jax" or name.startswith("jax."):
+                raise ImportError(f"jax import blocked: {name}")
+            return real(name, *a, **k)
+        builtins.__import__ = guard
+        import repro.serve
+        q = repro.serve.AdmissionQueue(4)
+        q.offer(repro.serve.TraversalQuery(0), 0.0)
+        assert len(q) == 1
+        print("ok")
+        """
+    )
+    env = dict(os.environ, PYTHONPATH=os.path.join(_ROOT, "src"))
+    out = subprocess.run(
+        [sys.executable, "-c", code],
+        capture_output=True, text=True, env=env, cwd=_ROOT, timeout=120,
+    )
+    assert out.returncode == 0, out.stderr
+    assert out.stdout.strip() == "ok"
