@@ -74,6 +74,25 @@ static.  Everything runs off the service's simulated clock, so the rows are
 bit-for-bit reproducible.  ``--serving`` alone merges just this sweep into
 an existing ``BENCH_traversal.json``.
 
+The ``--dynamic`` sweep (streaming graph mutations, also part of the full
+run) replays a seeded "migrant vertex" workload -- at each mutation epoch a
+fraction of vertices (the rate) gains ``DYNAMIC_MIGRANT_EDGES`` new edges
+into one far partition, delivered as ``EdgeDeltaBuffer``s merged at window
+boundaries mid-traversal -- through the elastic executor twice per rate:
+partition map frozen vs incrementally repartitioned (bounded LPA pass at
+every merge).  Both runs must converge to the *same* distances (asserted:
+repartitioning relocates computation, never changes results).  Recorded per
+rate and map policy: the mirror-aware partition penalty of the final map,
+repartition moves, the executor's own billed quanta, and the steady-state
+elastic serving cost of the mutated graph -- a BFS trace whose tau carries a
+wire term (``DYNAMIC_MSG_COST`` seconds per remote message), ffd-planned and
+billed at a fine quantum.  The staleness-vs-throughput tradeoff the section
+exists to show: a frozen map keeps paying the wire term on every migrant
+edge forever, so at nonzero rates the repartitioned map must win on penalty
+strictly and on steady-state elastic cost (strictly at >= 1 rate) -- both
+asserted in-run and by the CI schema check.  ``--dynamic`` alone merges just
+this sweep into an existing ``BENCH_traversal.json``.
+
 ``--serve-smoke`` is the serving CI gate (dense engine, in-process, no
 forced devices): a tiny-graph fixed-seed trace served elastic and static,
 asserting throughput > 0, finite p99 sojourn, elastic billed cost <= static,
@@ -82,11 +101,14 @@ reports).
 
 ``--smoke`` is the CI gate: on a tiny graph it asserts the wire-savings and
 elastic-vs-static invariants (plus relayout bit-identity, xla vs
-pallas-interpret mesh parity, and mirrored-vs-unmirrored parity with
-strictly fewer wire slots) in a short forced-device child, and
-schema-checks the *committed* ``BENCH_traversal.json`` (parses; has the
-``mesh_sweep`` / ``program_sweep`` / ``relayout`` / ``kernel_path`` /
-``mirror_sweep`` / ``serving`` sections, with every kernel-path row
+pallas-interpret mesh parity, mirrored-vs-unmirrored parity with strictly
+fewer wire slots, the delta-merge byte-identity -- merged layout ==
+from-scratch build of the mutated graph, field by field -- and the
+repartitioned-penalty/cost-never-worse pair) in a short forced-device
+child, and schema-checks the *committed* ``BENCH_traversal.json`` (parses;
+has the ``mesh_sweep`` / ``program_sweep`` / ``relayout`` / ``kernel_path``
+/ ``mirror_sweep`` / ``serving`` / ``dynamic`` sections, with every
+kernel-path row
 recording ``parity_ok``, the mirror sweep clearing the 25% bar, and the
 serving sweep clearing its cost/latency acceptance bar) -- without
 rewriting the file.
@@ -108,7 +130,7 @@ import numpy as np
 from repro.core.billing import BillingModel, evaluate
 from repro.core.elastic import ElasticBSPExecutor
 from repro.core.placement import default_placement, ffd_placement
-from repro.core.timing import TimeFunction
+from repro.core.timing import DEFAULT_ALPHA, DEFAULT_BETA, TimeFunction
 from repro.graph.bsp import run_bc_forward, run_program, run_sssp
 from repro.graph.generators import erdos_renyi_graph, rmat_graph, weighted
 from repro.graph.partition import bfs_grow_partition
@@ -136,7 +158,7 @@ OUT_PATH = "BENCH_traversal.json"
 #: sections the committed JSON must carry (CI schema check)
 REQUIRED_SECTIONS = (
     "mesh_sweep", "program_sweep", "relayout", "kernel_path", "mirror_sweep",
-    "serving",
+    "serving", "dynamic",
 )
 #: serving sweep shape (see repro.serve): arrival rates are in queries per
 #: simulated second; tau_scale keeps the whole busy span of a run inside one
@@ -147,6 +169,21 @@ SERVE_QUERIES = 120
 SERVE_TAU_SCALE = 1e3
 #: elastic acceptance bar: at >= 1 rate, cost/1k win with p99 within this
 SERVE_P99_STRETCH = 2.0
+#: dynamic-graph sweep shape: per mutation epoch, ``rate * n`` migrant
+#: vertices each gain ``DYNAMIC_MIGRANT_EDGES`` edges (both directions) into
+#: one far partition.  ``DYNAMIC_MSG_COST`` prices a remote message into the
+#: steady-state tau (the wire term a stale partition map keeps paying);
+#: ``DYNAMIC_DELTA`` is the fine billing quantum that makes the resulting
+#: cost difference visible in integer quanta.
+DYNAMIC_SCALE, DYNAMIC_DEGREE, DYNAMIC_PARTS = 10, 8, 8
+DYNAMIC_RATES = (0.0, 0.01, 0.04)  # migrant fraction of the vertex set
+DYNAMIC_EPOCHS = 3
+DYNAMIC_MIGRANT_EDGES = 12
+DYNAMIC_MSG_COST = 1e-6
+DYNAMIC_DELTA = 1e-6
+DYNAMIC_WINDOW = 1  # every superstep a boundary: merges land mid-traversal
+DYNAMIC_MAX_MOVES = 96
+DYNAMIC_BALANCE = 1.25
 
 
 def _bench_programs():
@@ -858,6 +895,204 @@ def run_serving_only(verbose: bool = True) -> dict:
     return out
 
 
+# -- dynamic graphs: streaming mutations vs incremental repartitioning -------
+
+
+def _dynamic_mutations(pg, rate: float, seed: int) -> list:
+    """Seeded migrant workload: per epoch, ``rate * n`` vertices each gain
+    ``DYNAMIC_MIGRANT_EDGES`` edges (inserted in both directions) into one
+    uniformly chosen *other* partition.  A migrant's new cross-degree
+    exceeds its original local degree, so the neighbor-majority
+    repartitioner has a strict incentive to move it -- a frozen map pays the
+    wire term on every new edge forever.  Returns the executor's
+    ``mutations=`` feed: ``[(due_superstep, EdgeDeltaBuffer), ...]``."""
+    from repro.graph.deltas import EdgeDeltaBuffer
+
+    rng = np.random.default_rng(seed)
+    n = pg.graph.n_vertices
+    part = pg.part_of_vertex
+    muts = []
+    for epoch in range(DYNAMIC_EPOCHS):
+        m = int(round(rate * n))
+        if m == 0:
+            continue
+        buf = EdgeDeltaBuffer()
+        for v in rng.choice(n, size=m, replace=False):
+            target = int(rng.integers(pg.n_parts))
+            if target == int(part[v]):
+                target = (target + 1) % pg.n_parts
+            pool = np.flatnonzero(part == target)
+            nbrs = rng.choice(
+                pool, size=min(DYNAMIC_MIGRANT_EDGES, pool.size),
+                replace=False,
+            )
+            for u in nbrs:
+                buf.insert(int(v), int(u))
+                buf.insert(int(u), int(v))
+        muts.append((epoch + 1, buf))
+    return muts
+
+
+def _dynamic_steady_cost(pg) -> dict:
+    """Steady-state elastic serving cost of ``pg``'s graph under ``pg``'s
+    partition map: one BFS trace whose tau carries a wire term
+    (``DYNAMIC_MSG_COST`` seconds per remote message) on top of the
+    calibrated alpha/beta model, ffd-planned and billed at the fine
+    ``DYNAMIC_DELTA`` quantum.  Remote messages are exactly what a stale map
+    keeps paying for migrant edges, so this is the sweep's cost axis."""
+    _, trace = run_sssp(pg, 0, collect_subgraphs=False)
+    tau = (
+        DEFAULT_ALPHA * trace.verts_processed
+        + DEFAULT_BETA * trace.edges_examined
+        + DYNAMIC_MSG_COST * trace.msgs_sent
+    )
+    tau = np.where(trace.active, tau, 0.0).astype(np.float64)
+    cost = evaluate(
+        ffd_placement(TimeFunction(tau)), BillingModel(delta=DYNAMIC_DELTA)
+    )
+    return {
+        "elastic_cost_quanta": int(cost.cost_quanta),
+        "makespan_s": float(cost.makespan),
+        "remote_msgs": int(trace.msgs_sent.sum()),
+    }
+
+
+def _dynamic_run(pg, muts, *, repartition: bool):
+    """One elastic run with mid-traversal delta merges; map frozen or
+    incrementally repartitioned at every merge.  Dogfoods the session API
+    end to end: ``open_session -> session.executor -> run(mutations=...)``.
+    Returns ``(metrics_row, final_dist)``."""
+    from repro.core.repartition import RepartitionConfig, partition_penalty
+    from repro.graph import EngineConfig, open_session
+
+    session = open_session(pg, EngineConfig(window=DYNAMIC_WINDOW))
+    _, trace0 = run_sssp(pg, 0, collect_subgraphs=False)
+    tf0 = TimeFunction.from_trace(trace0)  # the pre-mutation prior
+    ex = session.executor()
+    rcfg = (
+        RepartitionConfig(max_moves=DYNAMIC_MAX_MOVES, balance=DYNAMIC_BALANCE)
+        if repartition
+        else None
+    )
+    t0 = time.perf_counter()
+    rep = ex.run(
+        0,
+        ffd_placement(tf0),
+        strategy_fn=ffd_placement,
+        replan=True,
+        sketch=tf0,
+        mutations=muts,
+        repartition=rcfg,
+    )
+    wall = time.perf_counter() - t0
+    assert rep.mutations_applied == len(muts), (
+        f"dynamic: {rep.mutations_applied}/{len(muts)} delta buffers applied"
+    )
+    final = ex.pg
+    row = {
+        "penalty": int(partition_penalty(final.graph, final.part_of_vertex)),
+        "supersteps": int(rep.n_supersteps),
+        "mutations_applied": int(rep.mutations_applied),
+        "repartition_moves": int(rep.repartition_moves),
+        "run_cost_quanta": int(rep.cost.cost_quanta),
+        "replans": int(rep.replans),
+        "wall_s": float(wall),
+    }
+    row.update(_dynamic_steady_cost(final))
+    return row, rep.dist
+
+
+def _dynamic_sweep() -> dict:
+    """Mutation-rate sweep, frozen vs repartitioned map per rate.  The
+    staleness-vs-throughput acceptance bar is asserted in-run: at every
+    nonzero rate the repartitioned map must strictly beat the frozen one on
+    partition penalty and never lose on steady-state elastic cost, with a
+    strict cost win at >= 1 rate -- while converging to identical
+    distances."""
+    g = rmat_graph(DYNAMIC_SCALE, DYNAMIC_DEGREE, seed=3)
+    pg = bfs_grow_partition(g, DYNAMIC_PARTS, seed=1)
+    per_rate = {}
+    for i, rate in enumerate(DYNAMIC_RATES):
+        muts = _dynamic_mutations(pg, rate, seed=100 + i)
+        frozen, dist_f = _dynamic_run(pg, muts, repartition=False)
+        repart, dist_r = _dynamic_run(pg, muts, repartition=True)
+        assert np.array_equal(np.asarray(dist_f), np.asarray(dist_r)), (
+            f"dynamic rate {rate}: repartitioning changed the fixpoint"
+        )
+        if rate > 0:
+            assert repart["repartition_moves"] > 0, (
+                f"dynamic rate {rate}: repartitioner moved nothing"
+            )
+            assert repart["penalty"] < frozen["penalty"], (
+                f"dynamic rate {rate}: repartitioned penalty "
+                f"{repart['penalty']} not below frozen {frozen['penalty']}"
+            )
+            assert (
+                repart["elastic_cost_quanta"] <= frozen["elastic_cost_quanta"]
+            ), (
+                f"dynamic rate {rate}: repartitioned steady cost "
+                f"{repart['elastic_cost_quanta']} above frozen "
+                f"{frozen['elastic_cost_quanta']}"
+            )
+        else:
+            assert repart["penalty"] == frozen["penalty"], (
+                "dynamic rate 0: maps should be untouched"
+            )
+        per_rate[str(rate)] = {
+            "mutation_epochs": len(muts),
+            "inserted_edges": int(sum(len(b) for _, b in muts)),
+            "frozen": frozen,
+            "repartitioned": repart,
+        }
+    assert any(
+        row["repartitioned"]["elastic_cost_quanta"]
+        < row["frozen"]["elastic_cost_quanta"]
+        for key, row in per_rate.items()
+        if float(key) > 0
+    ), "dynamic: no rate shows a strict elastic-cost win for repartitioning"
+    return {
+        "graph": {
+            "n_vertices": g.n_vertices,
+            "n_edges": g.n_edges,
+            "n_parts": DYNAMIC_PARTS,
+        },
+        "epochs": DYNAMIC_EPOCHS,
+        "migrant_edges": DYNAMIC_MIGRANT_EDGES,
+        "msg_cost_s": DYNAMIC_MSG_COST,
+        "billing_delta_s": DYNAMIC_DELTA,
+        "per_rate": per_rate,
+    }
+
+
+def _print_dynamic_sweep(sweep: dict) -> None:
+    for rate, row in sweep["per_rate"].items():
+        fr, rp = row["frozen"], row["repartitioned"]
+        print(
+            f"dynamic rate {rate}: +{row['inserted_edges']} edges over "
+            f"{row['mutation_epochs']} epochs, penalty {fr['penalty']} -> "
+            f"{rp['penalty']} ({rp['repartition_moves']} moves), steady "
+            f"cost {fr['elastic_cost_quanta']} -> "
+            f"{rp['elastic_cost_quanta']} quanta, remote msgs "
+            f"{fr['remote_msgs']} -> {rp['remote_msgs']}"
+        )
+
+
+def run_dynamic_only(verbose: bool = True) -> dict:
+    """``--dynamic``: compute just the streaming-mutation sweep and merge it
+    into an existing ``BENCH_traversal.json`` (fresh file if none)."""
+    out = {}
+    if os.path.exists(OUT_PATH):
+        with open(OUT_PATH) as f:
+            out = json.load(f)
+    out["dynamic"] = _dynamic_sweep()
+    with open(OUT_PATH, "w") as f:
+        json.dump(out, f, indent=2)
+    if verbose:
+        _print_dynamic_sweep(out["dynamic"])
+        print(f"-> {OUT_PATH}")
+    return out
+
+
 SERVE_SMOKE_SCALE, SERVE_SMOKE_DEGREE = 8, 4
 SERVE_SMOKE_QUERIES = 40
 SERVE_SMOKE_RATE = 10.0
@@ -972,12 +1207,65 @@ def _smoke_child() -> dict:
     assert relayout["dynamic"]["relayouts"] > 0, (
         "smoke relayout pair never swapped a layout -- gate is vacuous"
     )
+
+    # delta-merge invariant: merging an EdgeDeltaBuffer into the mesh layout
+    # is byte-identical, field by field, to a from-scratch build of the
+    # mutated graph; the bounded repartitioner then never worsens the
+    # partition penalty or the steady-state elastic cost of the mutated map
+    import dataclasses
+
+    from repro.core.repartition import (
+        RepartitionConfig,
+        incremental_repartition,
+    )
+    from repro.graph.deltas import apply_delta_buffer, merged_mesh_layout
+    from repro.graph.partition import contiguous_device_map, mesh_edge_layout
+    from repro.graph.structs import MeshEdgeLayout
+
+    dmap = contiguous_device_map(SMOKE_PARTS, SMOKE_DEVICES)
+    old_layout = mesh_edge_layout(pg, dmap, SMOKE_DEVICES)
+    buf = _dynamic_mutations(pg, 0.05, seed=4)[0][1]
+    new_pg = apply_delta_buffer(pg, buf)
+    merged = merged_mesh_layout(pg, new_pg, old_layout)
+    # a second fresh apply bypasses the merged layout primed into new_pg's
+    # cache, so ``scratch`` really is a from-scratch build
+    scratch = mesh_edge_layout(apply_delta_buffer(pg, buf), dmap, SMOKE_DEVICES)
+    for f in dataclasses.fields(MeshEdgeLayout):
+        a, b = getattr(merged, f.name), getattr(scratch, f.name)
+        if isinstance(a, np.ndarray):
+            assert a.dtype == b.dtype and np.array_equal(a, b), (
+                f"smoke: merged layout field {f.name} != from-scratch build"
+            )
+        else:
+            assert a == b, f"smoke: merged layout field {f.name} differs"
+    rep = incremental_repartition(
+        new_pg, config=RepartitionConfig(balance=1.25)
+    )
+    assert rep.moves > 0 and rep.penalty_after < rep.penalty_before, (
+        f"smoke: repartition did not improve the migrant penalty "
+        f"({rep.penalty_before} -> {rep.penalty_after}, {rep.moves} moves)"
+    )
+    cost_frozen = _dynamic_steady_cost(new_pg)
+    cost_repart = _dynamic_steady_cost(rep.pg)
+    assert (
+        cost_repart["elastic_cost_quanta"] <= cost_frozen["elastic_cost_quanta"]
+    ), (
+        f"smoke: repartitioned steady cost {cost_repart} above frozen "
+        f"{cost_frozen}"
+    )
+
     return {
         "wire_total": wire,
         "pre_agg_total": pre,
         "elastic_cost_quanta": int(elastic.cost_quanta),
         "static_cost_quanta": int(static.cost_quanta),
         "relayout": relayout,
+        "delta_merge_identical": True,
+        "repart_penalty": [int(rep.penalty_before), int(rep.penalty_after)],
+        "repart_cost_quanta": [
+            int(cost_frozen["elastic_cost_quanta"]),
+            int(cost_repart["elastic_cost_quanta"]),
+        ],
     }
 
 
@@ -1019,6 +1307,27 @@ def check_bench_schema(path: str = OUT_PATH) -> dict:
         "serving: no rate shows elastic beating static on cost/1k with p99 "
         f"within {stretch}x"
     )
+    dy = data["dynamic"]
+    assert dy["per_rate"], "empty dynamic sweep"
+    strict_win = False
+    for rate, row in dy["per_rate"].items():
+        if float(rate) <= 0:
+            continue
+        fr, rp = row["frozen"], row["repartitioned"]
+        assert rp["repartition_moves"] > 0, (
+            f"dynamic[{rate}]: repartitioner moved nothing"
+        )
+        assert rp["penalty"] < fr["penalty"], (
+            f"dynamic[{rate}]: repartitioned penalty {rp['penalty']} not "
+            f"below frozen {fr['penalty']}"
+        )
+        assert rp["elastic_cost_quanta"] <= fr["elastic_cost_quanta"], (
+            f"dynamic[{rate}]: repartitioned steady-state cost above frozen"
+        )
+        strict_win |= rp["elastic_cost_quanta"] < fr["elastic_cost_quanta"]
+    assert strict_win, (
+        "dynamic: no nonzero mutation rate shows a strict elastic-cost win"
+    )
     return data
 
 
@@ -1045,7 +1354,10 @@ def run_smoke(verbose: bool = True) -> None:
             f"{child['wire_total']}/{child['pre_agg_total']}, elastic "
             f"{child['elastic_cost_quanta']} <= static "
             f"{child['static_cost_quanta']} quanta, relayout billing "
-            f"identical: {child['relayout']['billing_identical']})"
+            f"identical: {child['relayout']['billing_identical']}, delta "
+            f"merge == from-scratch: {child['delta_merge_identical']}, "
+            f"repart penalty {child['repart_penalty'][0]} -> "
+            f"{child['repart_penalty'][1]})"
         )
 
 
@@ -1138,6 +1450,9 @@ def run(verbose: bool = True) -> dict:
     # elastic serving: open-loop Poisson traces through TraversalService
     out["serving"] = _serving_sweep()
 
+    # streaming mutations: frozen vs incrementally repartitioned maps
+    out["dynamic"] = _dynamic_sweep()
+
     with open(OUT_PATH, "w") as f:
         json.dump(out, f, indent=2)
     if verbose:
@@ -1175,6 +1490,7 @@ def run(verbose: bool = True) -> dict:
         _print_kernel_path_sweep(out["kernel_path"])
         _print_mirror_sweep(out["mirror_sweep"])
         _print_serving_sweep(out["serving"])
+        _print_dynamic_sweep(out["dynamic"])
     return out
 
 
@@ -1199,6 +1515,8 @@ if __name__ == "__main__":
         run_mirror_only()
     elif "--serving" in sys.argv:
         run_serving_only()
+    elif "--dynamic" in sys.argv:
+        run_dynamic_only()
     elif "--serve-smoke" in sys.argv:
         run_serve_smoke()
     elif "--smoke" in sys.argv:

@@ -105,6 +105,7 @@ from repro.core import BillingModel, evaluate, default_placement, lap_placement,
 from repro.core.elastic import ElasticBSPExecutor
 from repro.core.metagraph import predict_time_function
 from repro.data import paper_workloads
+from repro.graph.config import EngineConfig
 
 
 def bc_demo(wl, n_sources: int, strat, model):
@@ -233,16 +234,21 @@ def main():
         tau_scale = wl.tf.t_min() / max(
             1e-12, TimeFunction.from_trace(wl.trace).t_min()
         )
-        ex = ElasticBSPExecutor(
-            wl.pg, program=program, tau_scale=tau_scale, billing=model,
+        # one EngineConfig carries every engine knob through the stack
+        # (the legacy mesh=/backend=/window= kwarg spellings still work but
+        # are deprecated -- see graph.config)
+        cfg = EngineConfig(
             mesh=mesh, backend=args.backend,
             mirror_degree=args.mirror_degree,
+            window=args.window, relayout=args.relayout,
+        )
+        ex = ElasticBSPExecutor(
+            wl.pg, program=program, tau_scale=tau_scale, billing=model,
+            config=cfg,
         )
         rep = ex.run(
             wl.source, plan, strategy_fn=strat, replan=not args.no_replan,
             sketch=None if args.no_replan else pred_tf,
-            relayout=args.relayout,
-            window=args.window,
         )
         print(
             f"executed {rep.n_supersteps} supersteps in windows of "

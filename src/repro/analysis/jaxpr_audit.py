@@ -542,6 +542,125 @@ def audit_recompile_budget(
     return findings
 
 
+def _layout_mismatch_fields(a, b) -> list:
+    """Field names where two ``MeshEdgeLayout``s are not byte-identical."""
+    import dataclasses
+
+    bad = []
+    for f in dataclasses.fields(type(a)):
+        va, vb = getattr(a, f.name), getattr(b, f.name)
+        if isinstance(va, np.ndarray) or isinstance(vb, np.ndarray):
+            same = (
+                isinstance(va, np.ndarray)
+                and isinstance(vb, np.ndarray)
+                and va.dtype == vb.dtype
+                and va.shape == vb.shape
+                and np.array_equal(va, vb)
+            )
+        else:
+            same = va == vb
+        if not same:
+            bad.append(f.name)
+    return bad
+
+
+def audit_delta_cycle(
+    pg=None, *, d_n: int = AUDIT_MESH_WIDTH, label: str | None = None
+) -> list[Finding]:
+    """JX04 over the streaming-mutation path: mutate -> merge -> mutate.
+
+    Drives two delta generations through ``merged_mesh_layout`` and checks
+    the cache discipline end to end: every generation mints a *distinct*
+    ``layout_key`` (no stale-layout cache hit is reachable), the merged
+    layout is byte-identical to a from-scratch build of the mutated graph,
+    the merge primes the new graph's layout cache (the next engine adopts it
+    instead of rebuilding), and ``window_cache_key`` stays generation-free --
+    a merge whose padded shard shapes are unchanged re-jits NOTHING.
+
+    Cycle 1 deletes an existing singleton edge and re-inserts it (content
+    churn, shapes provably stable -- the no-re-jit probe); cycle 2 inserts a
+    genuinely new edge (shapes may legitimately grow).
+    """
+    from repro.graph.deltas import (
+        EdgeDeltaBuffer,
+        apply_delta_buffer,
+        merged_mesh_layout,
+    )
+    from repro.graph.program import SsspProgram
+
+    pg = pg if pg is not None else default_audit_graph()
+    label = label or f"budget/delta-cycle/xla/d{d_n}"
+    program = validate_program(SsspProgram())
+    findings: list[Finding] = []
+
+    dmap = contiguous_device_map(pg.n_parts, d_n)
+    layout = mesh_edge_layout(pg, dmap, d_n)
+    _, statics = build_window_consts(pg, program, layout, backend="xla")
+    keys_seen = {layout.layout_key}
+    win_key0 = window_cache_key(layout, 8, "xla", statics)
+
+    g = pg.graph
+    n = g.n_vertices
+    g_key = g.src.astype(np.int64) * n + g.dst
+    uniq, counts = np.unique(g_key, return_counts=True)
+    singles = uniq[counts == 1]
+    e = int(np.flatnonzero(g_key == singles[0])[0])
+
+    churn = EdgeDeltaBuffer()
+    churn.delete(int(g.src[e]), int(g.dst[e]))
+    churn.insert(int(g.src[e]), int(g.dst[e]), float(g.weights[e]))
+    grow = EdgeDeltaBuffer()
+    grow.insert(int(singles[-1] // n), int(singles[-1] % n), 1.25)
+
+    cur = pg
+    for cycle, buf in enumerate((churn, grow)):
+        new_pg = apply_delta_buffer(cur, buf)
+        merged = merged_mesh_layout(cur, new_pg, layout)
+        if merged.layout_key in keys_seen:
+            findings.append(Finding(
+                "JX04", label,
+                f"cycle {cycle}: merged layout_key collides with an earlier "
+                "generation -- a mutate->merge->mutate cycle can serve a "
+                "stale layout under identical shapes",
+            ))
+        keys_seen.add(merged.layout_key)
+        if mesh_edge_layout(new_pg, dmap, d_n) is not merged:
+            findings.append(Finding(
+                "JX04", label,
+                f"cycle {cycle}: the merge did not prime the mutated "
+                "graph's layout cache -- the next engine rebuilds from "
+                "scratch",
+            ))
+        scratch = mesh_edge_layout(apply_delta_buffer(cur, buf), dmap, d_n)
+        bad = _layout_mismatch_fields(merged, scratch)
+        if bad:
+            findings.append(Finding(
+                "JX04", label,
+                f"cycle {cycle}: merged layout differs from a from-scratch "
+                f"build of the mutated graph in fields {bad}",
+            ))
+        _, new_statics = build_window_consts(
+            new_pg, program, merged, backend="xla"
+        )
+        new_key = window_cache_key(merged, 8, "xla", new_statics)
+        shapes_same = (
+            merged.n_pad == layout.n_pad
+            and merged.e_local_pad == layout.e_local_pad
+            and merged.e_remote_pad == layout.e_remote_pad
+            and merged.w_pad == layout.w_pad
+            and merged.m_pad == layout.m_pad
+        )
+        if shapes_same and new_key != win_key0:
+            findings.append(Finding(
+                "JX04", label,
+                f"cycle {cycle}: padded shapes are unchanged but the window "
+                "jit key moved -- every merge would re-jit the window "
+                "program",
+            ))
+        cur, layout, win_key0 = new_pg, merged, new_key
+    return findings
+
+
 # -- the audit matrix ---------------------------------------------------------
 
 
@@ -624,4 +743,5 @@ def audit_tree(pg=None, *, backends=AUDIT_BACKENDS, d_n: int = AUDIT_MESH_WIDTH)
         mirror_degrees=(None, AUDIT_MIRROR_DEGREE, None),
         label=f"budget/mirror-sweep/xla/d{d_n}",
     )
+    findings += audit_delta_cycle(pg, d_n=d_n)
     return findings

@@ -58,6 +58,13 @@ TRACED_FUNCTIONS = (
         "jitted at a distance via _BACKFILL_FN_CACHE (serving row surgery)",
     ),
     TracedFn(
+        "graph/deltas.py",
+        "_reactivate_rows",
+        ("dist", "frontier", "idx", "identity"),
+        "delta-merge entry point: inserted-source frontier reactivation "
+        "(directly @jax.jit, registered explicitly as a mutation seam)",
+    ),
+    TracedFn(
         "kernels/bfs_relax/ops.py",
         "relax_blockmap_call",
         ("start", "cnt", "dst", "cand", "base"),

@@ -98,8 +98,11 @@ import numpy as np
 
 from repro.core.billing import BillingModel, CostReport, evaluate
 from repro.core.placement import Placement, device_of_vm
+from repro.core.repartition import RepartitionConfig, incremental_repartition
 from repro.core.replan import OnlineReplanner, ReplanConfig
 from repro.core.timing import DEFAULT_ALPHA, DEFAULT_BETA, TimeFunction
+from repro.graph import deltas as graph_deltas
+from repro.graph.config import UNSET, EngineConfig, resolve_config, versioned_report
 from repro.graph.mesh_exchange import place_shard
 from repro.graph.program import SsspProgram, VertexProgram
 from repro.graph.structs import PartitionedGraph
@@ -125,12 +128,23 @@ class ExecutionReport:
     relayouts: int = 0  # windows whose compute layout was actually swapped
     relayouts_skipped: int = 0  # proposed swaps vetoed by the "auto" policy
     # (projected move bytes exceeded the estimated remaining locality gain)
+    mutations_applied: int = 0  # delta buffers merged at window boundaries
+    repartition_moves: int = 0  # vertices migrated by the bounded LPA pass
 
     @property
     def migration_secs(self) -> float:
         """bytes / move_bandwidth, billed into the makespan (single source
         of truth: the cost report)."""
         return self.cost.migration_secs
+
+    def asdict(self) -> dict:
+        """Schema-versioned named-field view (``graph.config``); consumers
+        key on names -- the dataclass field order is not a contract."""
+        fields = {
+            f.name: getattr(self, f.name)
+            for f in dataclasses.fields(self)
+        }
+        return versioned_report("execution_report", fields)
 
 
 class ElasticBSPExecutor:
@@ -146,25 +160,31 @@ class ElasticBSPExecutor:
         beta: float = DEFAULT_BETA,
         tau_scale: float = 1.0,
         billing: BillingModel | None = None,
-        mesh=None,
-        backend: str = "xla",
-        mirror_degree: int | None = None,
+        mesh=UNSET,
+        backend: str = UNSET,
+        mirror_degree: int | None = UNSET,
+        config: EngineConfig | None = None,
     ):
+        cfg = resolve_config(
+            config,
+            {"mesh": mesh, "backend": backend, "mirror_degree": mirror_degree},
+            owner="ElasticBSPExecutor",
+        )
+        self.config = cfg
         self.pg = pg
         self.program = program or SsspProgram()
         self.alpha = alpha
         self.beta = beta
         self.tau_scale = tau_scale
         self.billing = billing or BillingModel()
-        self.mesh = mesh
-        self.backend = backend
-        self.mirror_degree = mirror_degree
-        self.engine = get_engine(
-            pg, program=self.program, mesh=mesh, backend=backend,
-            mirror_degree=mirror_degree,
-        )
+        self.mesh = cfg.mesh
+        self.backend = cfg.backend
+        self.mirror_degree = cfg.mirror_degree
+        self.engine = get_engine(pg, program=self.program, config=cfg)
         self.devices = (
-            list(mesh.devices.flat) if mesh is not None else jax.devices()
+            list(cfg.mesh.devices.flat)
+            if cfg.mesh is not None
+            else jax.devices()
         )
         # per-partition index lists into the carried state's trailing axis
         # (identity layout on the dense engine, padded device-major positions
@@ -208,6 +228,69 @@ class ElasticBSPExecutor:
     def _device_of_vm(self, j: int):
         return self.devices[device_of_vm(j, len(self.devices))]
 
+    def _apply_mutation(self, buf, state, repartition, replanner):
+        """Window-boundary delta merge: swap graph + engine, carry state.
+
+        Returns ``(carried_state, repartition_moves)``.  Insert-only (a
+        delete cannot be un-relaxed from in-flight monotone state) and
+        monotone-only; the merged mesh layout is primed incrementally so the
+        new engine adopts it instead of rebuilding, and a repartition pass
+        re-primes the replanner's sketch from the fresh per-partition stats.
+        """
+        if buf.has_deletes:
+            raise ValueError(
+                "elastic mutations are insert-only: a delete cannot be "
+                "un-relaxed from in-flight state"
+            )
+        if getattr(self.program, "stationary", False):
+            raise ValueError(
+                "mid-run mutations are monotone-programs-only "
+                f"(got stationary {self.program.key})"
+            )
+        old_pg = self.pg
+        old_engine = self.engine
+        old_layout = (
+            old_engine._mesh_prog.layout
+            if old_engine._mesh_prog is not None
+            else None
+        )
+        new_pg = graph_deltas.apply_delta_buffer(old_pg, buf)
+        rep = None
+        if repartition:
+            rcfg = (
+                repartition
+                if isinstance(repartition, RepartitionConfig)
+                else RepartitionConfig(mirror_degree=self.config.mirror_degree)
+            )
+            rep = incremental_repartition(new_pg, config=rcfg)
+            new_pg = rep.pg
+        if old_layout is not None and (rep is None or rep.moves == 0):
+            graph_deltas.merged_mesh_layout(old_pg, new_pg, old_layout)
+        self.pg = new_pg
+        self.engine = get_engine(new_pg, program=self.program, config=self.config)
+        self._part_indices_cache = OrderedDict()
+        self._part_indices = self._state_part_indices()
+        itemsize = np.dtype(self.program.dtype).itemsize
+        nv, _ = new_pg.partition_sizes
+        self.partition_bytes = (itemsize * nv).astype(np.int64)
+        new_layout = (
+            self.engine._mesh_prog.layout
+            if self.engine._mesh_prog is not None
+            else None
+        )
+        identity = self.program.identity
+        state = graph_deltas.carry_state(
+            old_layout, new_layout, state, identity=identity, mesh=self.mesh
+        )
+        isrc, _, _ = buf.inserts()
+        if isrc.size:
+            state = graph_deltas.reactivate_sources(
+                state, new_layout, isrc, identity=identity
+            )
+        if rep is not None:
+            replanner.reprime(rep.part_activity)
+        return state, (rep.moves if rep is not None else 0)
+
     def run(
         self,
         source: int,
@@ -217,9 +300,11 @@ class ElasticBSPExecutor:
         replan: bool = False,
         replan_config: ReplanConfig | None = None,
         sketch: TimeFunction | None = None,
-        relayout: bool = False,
-        window: int = 8,
+        relayout: bool = UNSET,
+        window: int = UNSET,
         max_supersteps: int = 4096,
+        mutations=None,
+        repartition: RepartitionConfig | bool | None = None,
     ) -> ExecutionReport:
         """Execute the program under ``plan``; see the module docstring.
 
@@ -244,12 +329,29 @@ class ElasticBSPExecutor:
         """
         pg = self.pg
         t0 = time.perf_counter()
+        if window is not UNSET or relayout is not UNSET:
+            import warnings
+
+            warnings.warn(
+                "ElasticBSPExecutor.run(window=, relayout=) is deprecated; "
+                "set EngineConfig(window=, relayout=) on the executor",
+                DeprecationWarning,
+                stacklevel=2,
+            )
+        if window is UNSET:
+            window = self.config.window
+        if relayout is UNSET:
+            relayout = self.config.relayout
         window = max(1, int(window))
         auto_relayout = isinstance(relayout, str) and relayout == "auto"
         relayout = (
             (auto_relayout or bool(relayout))
             and self.engine.device_of_part is not None
         )
+        muts = sorted(mutations or (), key=lambda tb: int(tb[0]))
+        mut_idx = 0
+        mutations_applied = 0
+        repartition_moves = 0
 
         state = self.engine.init_state([source])
         replanner = OnlineReplanner(
@@ -285,6 +387,17 @@ class ElasticBSPExecutor:
         done = False
 
         while not done and s < max_supersteps:
+            # -- window-boundary mutations: merge due delta buffers ----------
+            # (the traversal hot path never sees the buffer -- the merge swaps
+            # graph + engine between launches and carries the state exactly)
+            while mut_idx < len(muts) and int(muts[mut_idx][0]) <= s:
+                state, moved = self._apply_mutation(
+                    muts[mut_idx][1], state, repartition, replanner
+                )
+                mut_idx += 1
+                mutations_applied += 1
+                repartition_moves += moved
+
             # -- placement point: (re-)plan, then commit to a whole window ---
             if s >= horizon or (
                 replan and bool((active_next & (vm_of[s] < 0)).any())
@@ -454,4 +567,6 @@ class ElasticBSPExecutor:
             ),
             relayouts=relayouts,
             relayouts_skipped=relayouts_skipped,
+            mutations_applied=mutations_applied,
+            repartition_moves=repartition_moves,
         )

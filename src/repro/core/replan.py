@@ -233,6 +233,36 @@ class OnlineReplanner:
         for r in rows:
             self._rows.append(r)
 
+    def reprime(
+        self, part_activity: np.ndarray, *, horizon: int | None = None
+    ) -> None:
+        """Replace the metagraph sketch with a prior built from *fresh*
+        per-partition activity (``RepartitionResult.part_activity``, tau
+        units).
+
+        After a delta merge or a repartition pass the construction-time
+        sketch describes a graph that no longer exists; everywhere the
+        sketch stands in for a too-short observed prefix (decay rates,
+        activation floors) it would feed the strategy stale weights.  The
+        synthetic replacement decays each partition's fresh activity at the
+        config default rate over ``horizon`` rows -- at least two positive
+        rows per active partition, so ``_fit_rates`` can fit from it.  The
+        observed prefix is deliberately untouched: it records what actually
+        executed, and ``replan`` asserts its length against the superstep
+        counter.
+        """
+        act = np.asarray(part_activity, dtype=np.float64)
+        if act.shape != (self.n_parts,):
+            raise ValueError(
+                f"part_activity has shape {act.shape}, "
+                f"expected ({self.n_parts},)"
+            )
+        h = max(2, int(horizon or self.config.min_horizon))
+        decay = min(self.config.decay_default, self.config.decay_clip[1])
+        decay = max(decay, self.config.decay_clip[0])
+        steps = decay ** np.arange(h, dtype=np.float64)
+        self.sketch = TimeFunction(np.clip(act, 0.0, None)[None, :] * steps[:, None])
+
     def replan(
         self, vm_of: np.ndarray, s: int, active_next: np.ndarray
     ) -> np.ndarray:

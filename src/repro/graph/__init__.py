@@ -19,8 +19,27 @@ Layers:
   bsp         -- host drivers building BSP work traces (one bulk transfer
                  per traversal batch)
   sampler     -- fanout neighbor sampler for minibatch GNN training
+  config      -- ``EngineConfig``, the one frozen knob surface every
+                 engine-shaped constructor accepts (legacy kwargs keep
+                 working for one release behind ``DeprecationWarning`` shims)
+  deltas      -- streaming edge mutations: bounded ``EdgeDeltaBuffer``
+                 merged into the static layouts at window boundaries,
+                 byte-identical to a from-scratch build
+  session     -- ``open_session(pg, config)``: the unified facade over
+                 engines, windowed traversal, and delta merges
+
+**Report stability contract.**  ``TraversalResult.asdict()``,
+``ExecutionReport.asdict()`` and ``ServiceReport.asdict()`` all return the
+shared schema-versioned dict shape from ``graph.config.versioned_report``:
+``{"schema_version": N, "kind": <report kind>, <field>: <value>, ...}``.
+Consumers must key on **field names**, never positional order -- each of
+these types has historically grown fields, and will again.  Adding a field
+is backward compatible and does not bump ``REPORT_SCHEMA_VERSION``; renaming
+or removing one does.  The ``kind`` strings (``"traversal_result"``,
+``"execution_report"``, ``"service_report"``) are stable identifiers.
 """
 
+from repro.graph.config import REPORT_SCHEMA_VERSION, EngineConfig
 from repro.graph.structs import Graph, MeshEdgeLayout, PartitionedGraph
 from repro.graph.generators import rmat_graph, road_grid_graph, erdos_renyi_graph
 from repro.graph.partition import (
@@ -55,4 +74,29 @@ __all__ = [
     "WccProgram",
     "PageRankProgram",
     "BUILTIN_PROGRAMS",
+    "EngineConfig",
+    "REPORT_SCHEMA_VERSION",
+    "EdgeDeltaBuffer",
+    "apply_delta_buffer",
+    "GraphSession",
+    "open_session",
 ]
+
+_LAZY = {
+    # jax-importing modules: resolved on first attribute access so that
+    # ``import repro.graph`` stays cheap for host-only consumers
+    "EdgeDeltaBuffer": ("repro.graph.deltas", "EdgeDeltaBuffer"),
+    "apply_delta_buffer": ("repro.graph.deltas", "apply_delta_buffer"),
+    "GraphSession": ("repro.graph.session", "GraphSession"),
+    "open_session": ("repro.graph.session", "open_session"),
+}
+
+
+def __getattr__(name: str):
+    try:
+        mod_name, attr = _LAZY[name]
+    except KeyError:
+        raise AttributeError(f"module 'repro.graph' has no attribute {name!r}")
+    import importlib
+
+    return getattr(importlib.import_module(mod_name), attr)

@@ -26,6 +26,7 @@ import dataclasses
 
 import numpy as np
 
+from repro.graph.config import EngineConfig
 from repro.graph.program import VertexProgram
 from repro.graph.structs import PartitionedGraph
 from repro.graph.traversal import TraversalResult, get_engine
@@ -86,14 +87,18 @@ def run_sssp(
     *,
     max_supersteps: int = 4096,
     collect_subgraphs: bool = True,
+    config: EngineConfig | None = None,
 ) -> tuple[np.ndarray, BSPTrace]:
     """Run subgraph-centric BFS/SSSP from ``source``; return distances + trace.
 
-    BFS is the ``weights=None`` special case (unit weights).
+    BFS is the ``weights=None`` special case (unit weights).  ``config``
+    (an ``EngineConfig``) threads mesh/backend/mirroring knobs through to the
+    engine; ``max_supersteps``/``collect_subgraphs`` override its fields.
     """
-    engine = get_engine(
-        pg, m_max=max_supersteps, collect_subgraphs=collect_subgraphs
+    cfg = (config or EngineConfig()).replace(
+        m_max=max_supersteps, collect_subgraphs=collect_subgraphs
     )
+    engine = get_engine(pg, config=cfg)
     res = engine.run([source])
     return res.dist[0], _trace_of_source(res, 0, collect_subgraphs)
 
@@ -105,6 +110,7 @@ def run_program(
     *,
     max_supersteps: int = 4096,
     collect_subgraphs: bool = False,
+    config: EngineConfig | None = None,
 ) -> tuple[np.ndarray, list[BSPTrace]]:
     """Run any ``VertexProgram`` on the device-resident engine.
 
@@ -113,10 +119,10 @@ def run_program(
     ``sources`` only sizes the batch; a single row is the common case.
     """
     sources = list(sources)  # materialize once: iterators must not re-drain
-    engine = get_engine(
-        pg, program=program, m_max=max_supersteps,
-        collect_subgraphs=collect_subgraphs,
+    cfg = (config or EngineConfig()).replace(
+        m_max=max_supersteps, collect_subgraphs=collect_subgraphs
     )
+    engine = get_engine(pg, program=program, config=cfg)
     res = engine.run(sources)
     traces = [
         _trace_of_source(res, s, collect_subgraphs)
@@ -142,6 +148,7 @@ def run_bc_forward(
     sources: list[int],
     *,
     max_supersteps: int = 4096,
+    config: EngineConfig | None = None,
 ) -> BSPTrace:
     """Betweenness-centrality forward phase (paper s7 future work): one BFS
     sweep per source, executed as consecutive waves.  The per-wave rise and
@@ -153,7 +160,10 @@ def run_bc_forward(
     the per-source traces concatenated in wave order, identical in shape and
     semantics to running the waves serially.
     """
-    engine = get_engine(pg, m_max=max_supersteps, collect_subgraphs=False)
+    cfg = (config or EngineConfig()).replace(
+        m_max=max_supersteps, collect_subgraphs=False
+    )
+    engine = get_engine(pg, config=cfg)
     res = engine.run(list(sources))
     return concat_traces(
         [_trace_of_source(res, s, False) for s in range(len(sources))]

@@ -205,6 +205,7 @@ def mesh_edge_layout(
     *,
     base: MeshEdgeLayout | None | object = _AUTO_BASE,
     mirror_degree: int | None = None,
+    changed_devices: np.ndarray | None = None,
 ) -> MeshEdgeLayout:
     """Build the static mesh-aware layout for a fixed partition -> device map.
 
@@ -262,7 +263,10 @@ def mesh_edge_layout(
     if not isinstance(cache, BoundedCache):
         cache = BoundedCache(_LAYOUT_CACHE_MAX)
         pg.__dict__["_mesh_layouts"] = cache
-    key = mesh_layout_key(device_of_part, n_devices) + (mirror_degree,)
+    generation = int(pg.__dict__.get("_delta_generation", 0))
+    key = mesh_layout_key(device_of_part, n_devices, generation) + (
+        mirror_degree,
+    )
     if key in cache:
         cache.move_to_end(key)
         return cache[key]
@@ -276,12 +280,20 @@ def mesh_edge_layout(
     if base is not None and (
         base.n_devices != int(n_devices)
         or base.n_parts != pg.n_parts
+        or base.n_vertices != pg.graph.n_vertices
         or base.mirror_degree != mirror_degree
     ):
         base = None
+    if base is not None and base.delta_generation != generation:
+        # Cross-generation reuse (the delta-merge seam) is only sound when the
+        # caller names the devices whose edge content changed; without the
+        # mask the map-diff detection below would wrongly copy stale blocks.
+        if changed_devices is None:
+            base = None
 
     out = _build_mesh_layout(
-        pg, device_of_part, int(n_devices), base, mirror_degree
+        pg, device_of_part, int(n_devices), base, mirror_degree,
+        changed_devices=changed_devices,
     )
     cache.put(key, out)
     last.put(last_key, out)
@@ -294,6 +306,7 @@ def _build_mesh_layout(
     d_n: int,
     base: MeshEdgeLayout | None,
     mirror_degree: int | None = None,
+    changed_devices: np.ndarray | None = None,
 ) -> MeshEdgeLayout:
     layout = partitioned_edge_layout(pg)
     slices = _mesh_part_slices(pg)
@@ -325,6 +338,10 @@ def _build_mesh_layout(
         changed = np.zeros(d_n, dtype=bool)
         changed[base.device_of_part[moved]] = True
         changed[device_of_part[moved]] = True
+        if changed_devices is not None:
+            # delta-merge seam: devices whose *edge content* changed under an
+            # unchanged map (graph.deltas computes the exact set per plane)
+            changed |= np.asarray(changed_devices, dtype=bool)
         vert_aff = changed
         # parts whose device-local rows may have shifted = parts hosted on a
         # changed device; src devices reaching any of them re-sort and re-slot
@@ -581,6 +598,7 @@ def _build_mesh_layout(
         mrecv_idx=mrecv_idx,
         mirror_slots=mirror_slots,
         mirror_block_edges=mirror_block_edges,
+        delta_generation=int(pg.__dict__.get("_delta_generation", 0)),
     )
     out.__dict__["_build_info"] = {
         "incremental": base is not None,

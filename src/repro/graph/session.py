@@ -1,0 +1,199 @@
+"""``GraphSession``: one handle over a (mutating) graph and its engines.
+
+The facade of the unified API (``graph.config.EngineConfig``): a session
+owns the *current* ``PartitionedGraph`` plus one frozen config, and exposes
+the workflows that used to require wiring three constructors by hand:
+
+    session = open_session(pg, EngineConfig(mesh=mesh, mirror_degree=8))
+    res = session.run(program, sources=[0, 7])          # full traversal
+    state = session.init_state([0]); ...                # windowed traversal
+    wres = session.run_window(state)
+    state = session.apply_deltas(buf, state=wres.state) # window-boundary merge
+
+``apply_deltas`` is the window-boundary mutation seam from ``graph.deltas``:
+it collapses the buffer into a new graph, optionally runs the bounded
+repartitioner (``core.repartition``), incrementally merges the mesh layout
+(byte-identical to scratch; the merged layout lands in the new graph's
+caches so the next engine adopts it instead of rebuilding), and carries any
+in-flight window state exactly -- re-activating inserted-edge sources so a
+monotone traversal continued on the merged graph converges to the mutated
+graph's fixpoint.  Deletes cannot be carried under (state must be None);
+stationary programs cannot be carried at all.
+
+Engines stay cached per graph instance (``traversal.get_engine``), so a
+session is cheap to hold and swap: mutation replaces ``session.pg`` with the
+new instance and the old engines are garbage once their queries drain.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.repartition import (
+    RepartitionConfig,
+    RepartitionResult,
+    incremental_repartition,
+)
+from repro.graph.config import EngineConfig
+from repro.graph.deltas import (
+    EdgeDeltaBuffer,
+    apply_delta_buffer,
+    carry_state,
+    merged_mesh_layout,
+    reactivate_sources,
+)
+from repro.graph.structs import PartitionedGraph
+from repro.graph.traversal import TraversalEngine, TraversalResult, get_engine
+
+
+class GraphSession:
+    """Facade over (current graph, engine config); see module docstring."""
+
+    def __init__(
+        self, pg: PartitionedGraph, config: EngineConfig | None = None
+    ):
+        self.pg = pg
+        self.config = config or EngineConfig()
+        self.last_repartition: RepartitionResult | None = None
+
+    # -- engines -------------------------------------------------------------
+
+    def engine(self, program=None) -> TraversalEngine:
+        """The cached engine for ``program`` on the session's current graph."""
+        return get_engine(self.pg, program=program, config=self.config)
+
+    # -- traversal -----------------------------------------------------------
+
+    def run(self, program=None, sources=(0,)) -> TraversalResult:
+        """One full batched traversal on the current graph."""
+        return self.engine(program).run(list(sources))
+
+    def init_state(self, sources, *, program=None):
+        return self.engine(program).init_state(list(sources))
+
+    def run_window(self, state, k: int | None = None, *, program=None,
+                   device_of_part=None):
+        """Advance ``state`` by ``k`` supersteps (default: config.window)."""
+        k = self.config.window if k is None else int(k)
+        return self.engine(program).run_window(
+            state, k, device_of_part=device_of_part
+        )
+
+    # -- mutation ------------------------------------------------------------
+
+    def apply_deltas(
+        self,
+        buf: EdgeDeltaBuffer,
+        *,
+        state=None,
+        program=None,
+        repartition: RepartitionConfig | bool | None = None,
+    ):
+        """Merge a delta buffer at a window boundary; returns the carried
+        ``state`` (or None when none was passed).
+
+        The merge path: new graph (``apply_delta_buffer``) -> optional
+        bounded repartition -> incremental mesh-layout merge primed into the
+        new graph's caches -> exact state carry + inserted-source
+        reactivation.  ``repartition=True`` uses a default
+        ``RepartitionConfig`` with the session's mirror degree.
+        """
+        old_pg = self.pg
+        old_engine = old_layout = None
+        if state is not None:
+            if buf.has_deletes:
+                raise ValueError(
+                    "cannot carry in-flight state across deletes: a delete "
+                    "cannot be un-relaxed; finish or restart the query first"
+                )
+            old_engine = self.engine(program)
+            if getattr(old_engine.program, "stationary", False):
+                raise ValueError(
+                    "state carry across a merge is monotone-programs-only "
+                    f"(got stationary {old_engine.program.key})"
+                )
+            if old_engine._mesh_prog is not None:
+                old_layout = old_engine._mesh_prog.layout
+
+        new_pg = apply_delta_buffer(old_pg, buf)
+        rep = None
+        if repartition:
+            rcfg = (
+                repartition
+                if isinstance(repartition, RepartitionConfig)
+                else RepartitionConfig(mirror_degree=self.config.mirror_degree)
+            )
+            rep = incremental_repartition(new_pg, config=rcfg)
+            new_pg = rep.pg
+        self.last_repartition = rep
+
+        if (
+            old_layout is None
+            and new_pg is not old_pg
+            and (rep is None or rep.moves == 0)
+            and self.config.mesh is not None
+            and int(self.config.mesh.devices.size) > 1
+        ):
+            # no in-flight state, but a mesh config: still prime the merged
+            # layout so the next engine build reuses unchanged device blocks
+            prev = get_engine(self.pg, program=program, config=self.config)
+            if prev._mesh_prog is not None:
+                old_layout = prev._mesh_prog.layout
+        if old_layout is not None and new_pg is not old_pg and (
+            rep is None or rep.moves == 0
+        ):
+            merged_mesh_layout(old_pg, new_pg, old_layout)
+
+        self.pg = new_pg
+        if state is None:
+            return None
+        new_engine = self.engine(program)
+        new_layout = (
+            new_engine._mesh_prog.layout
+            if new_engine._mesh_prog is not None
+            else None
+        )
+        identity = new_engine.program.identity
+        state = carry_state(
+            old_layout, new_layout, state,
+            identity=identity, mesh=self.config.mesh,
+        )
+        isrc, _, _ = buf.inserts()
+        if isrc.size:
+            state = reactivate_sources(
+                state, new_layout, isrc, identity=identity
+            )
+        return state
+
+    def repartition(
+        self, config: RepartitionConfig | None = None
+    ) -> RepartitionResult:
+        """Run one bounded repartition pass; adopt the improved map."""
+        rcfg = config or RepartitionConfig(
+            mirror_degree=self.config.mirror_degree
+        )
+        rep = incremental_repartition(self.pg, config=rcfg)
+        self.pg = rep.pg
+        self.last_repartition = rep
+        return rep
+
+    # -- downstream handles --------------------------------------------------
+
+    def executor(self, *, program=None, **kwargs):
+        """An ``ElasticBSPExecutor`` on the current graph, config-threaded."""
+        from repro.core.elastic import ElasticBSPExecutor
+
+        return ElasticBSPExecutor(
+            self.pg, program=program, config=self.config, **kwargs
+        )
+
+    def gather_global(self, rows) -> np.ndarray:
+        """Map engine-layout state rows back to global vertex order."""
+        return self.engine().gather_global(np.asarray(rows))
+
+
+def open_session(
+    pg: PartitionedGraph, config: EngineConfig | None = None
+) -> GraphSession:
+    """The front door of the unified API: a session over ``pg``."""
+    return GraphSession(pg, config)

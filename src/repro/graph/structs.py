@@ -136,18 +136,32 @@ class CsrEdgeLayout:
         )
 
 
-def mesh_layout_key(device_of_part: np.ndarray, n_devices: int) -> tuple:
+def mesh_layout_key(
+    device_of_part: np.ndarray, n_devices: int, generation: int = 0
+) -> tuple:
     """Canonical cache key of a mesh layout: ``n_devices`` plus the *coerced*
-    partition -> device map's shape, dtype, and bytes.
+    partition -> device map's shape, dtype, and bytes, plus the graph's
+    edge-delta ``generation``.
 
     Computed after the int32 coercion every consumer goes through, so callers
     passing the same placement with different dtypes (an int64 plan row vs an
     int32 stored map) hit one entry -- while ``tobytes()`` of the uncoerced
     array (the dtype/shape-blind key this replaces) would let two different
     maps alias one buffer and serve a stale layout under dynamic re-layout.
+
+    ``generation`` is the streaming-mutation counter
+    (``PartitionedGraph.__dict__['_delta_generation']``, bumped by
+    ``graph.deltas``): two layouts of the same placement built before and
+    after a delta merge carry different edge content under identical shapes,
+    so the generation must be part of every key derived from this one --
+    otherwise a mutate -> merge -> mutate cycle could serve a stale layout
+    out of a shape-keyed cache (the JX04 delta-cycle audit pins this).
     """
     coerced = np.ascontiguousarray(device_of_part, dtype=np.int32)
-    return (int(n_devices), coerced.shape, coerced.dtype.str, coerced.tobytes())
+    return (
+        int(n_devices), coerced.shape, coerced.dtype.str, coerced.tobytes(),
+        int(generation),
+    )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -247,6 +261,8 @@ class MeshEdgeLayout:
     mrecv_idx: np.ndarray | None = None  # [D_recv, D_send, m_pad] int32
     mirror_slots: np.ndarray | None = None  # [D_send, D_recv] int64 hub slots
     mirror_block_edges: np.ndarray | None = None  # [D_send, D_recv] int64
+    # -- streaming mutations -------------------------------------------------
+    delta_generation: int = 0  # graph's edge-delta counter at build time
 
     @property
     def state_width(self) -> int:
@@ -256,11 +272,14 @@ class MeshEdgeLayout:
     @property
     def layout_key(self) -> tuple:
         """This layout's canonical cache key (``mesh_layout_key`` of its own
-        map plus the mirror knob) -- what the mesh program's per-layout
-        const/jit caches hash."""
-        return mesh_layout_key(self.device_of_part, self.n_devices) + (
-            self.mirror_degree,
-        )
+        map and delta generation plus the mirror knob) -- what the mesh
+        program's per-layout const/jit caches hash.  Including the generation
+        keeps a post-merge layout from aliasing its pre-merge twin: the two
+        share every shape and the placement bytes, but their edge content
+        differs."""
+        return mesh_layout_key(
+            self.device_of_part, self.n_devices, self.delta_generation
+        ) + (self.mirror_degree,)
 
     # -- shared state indexing (one implementation for dense + mesh) ---------
 

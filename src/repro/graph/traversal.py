@@ -89,6 +89,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.graph.config import UNSET, EngineConfig, resolve_config
 from repro.graph.partition import partitioned_edge_layout
 from repro.graph.program import (
     SsspProgram,
@@ -244,6 +245,13 @@ class TraversalResult(NamedTuple):
     wire_msgs: jax.Array  # [S, m_max] int32 post-aggregation collective
     # messages per superstep (mesh mode; 0 on the dense path)
 
+    def asdict(self) -> dict:
+        """Schema-versioned named-field view (``graph.config``); the stable
+        consumer surface -- field *order* above is not part of the contract."""
+        from repro.graph.config import versioned_report
+
+        return versioned_report("traversal_result", dict(self._asdict()))
+
 
 class TraversalNotConverged(RuntimeError):
     """Raised by ``TraversalEngine.run`` when some source still has a
@@ -326,15 +334,32 @@ class TraversalEngine:
         pg: PartitionedGraph,
         *,
         program: VertexProgram | None = None,
-        m_max: int = 512,
-        collect_subgraphs: bool = False,
-        mesh=None,
+        m_max: int = UNSET,
+        collect_subgraphs: bool = UNSET,
+        mesh=UNSET,
         device_of_part: np.ndarray | None = None,
-        backend: str = "xla",
-        block_n: int = 512,
-        block_e: int = 512,
-        mirror_degree: int | None = None,
+        backend: str = UNSET,
+        block_n: int = UNSET,
+        block_e: int = UNSET,
+        mirror_degree: int | None = UNSET,
+        config: EngineConfig | None = None,
     ):
+        cfg = resolve_config(
+            config,
+            {
+                "m_max": m_max, "collect_subgraphs": collect_subgraphs,
+                "mesh": mesh, "backend": backend, "block_n": block_n,
+                "block_e": block_e, "mirror_degree": mirror_degree,
+            },
+            owner="TraversalEngine",
+        )
+        m_max = cfg.m_max
+        collect_subgraphs = cfg.collect_subgraphs
+        mesh = cfg.mesh
+        backend = cfg.backend
+        block_n, block_e = cfg.block_n, cfg.block_e
+        mirror_degree = cfg.mirror_degree
+        self.config = cfg
         self.pg = pg
         self.program = validate_program(program or SsspProgram())
         self.m_max = int(m_max)
@@ -802,11 +827,12 @@ def get_engine(
     pg: PartitionedGraph,
     *,
     program: VertexProgram | None = None,
-    m_max: int = 512,
-    collect_subgraphs: bool = False,
-    mesh=None,
-    backend: str = "xla",
-    mirror_degree: int | None = None,
+    m_max: int = UNSET,
+    collect_subgraphs: bool = UNSET,
+    mesh=UNSET,
+    backend: str = UNSET,
+    mirror_degree: int | None = UNSET,
+    config: EngineConfig | None = None,
 ) -> TraversalEngine:
     """Per-graph engine cache (keyed by the knobs, stored on the instance).
 
@@ -815,28 +841,38 @@ def get_engine(
     see ``TraversalEngine``), the mesh-mode ``mirror_degree`` hub threshold
     and, in mesh mode, the mesh's device ids; the default balanced
     contiguous partition map is assumed (construct ``TraversalEngine``
-    directly for a custom ``device_of_part``).
+    directly for a custom ``device_of_part``).  Knobs come from ``config``
+    (an ``EngineConfig``); the bare kwargs are the deprecated legacy
+    spelling and override the config when passed.
     """
+    cfg = resolve_config(
+        config,
+        {
+            "m_max": m_max, "collect_subgraphs": collect_subgraphs,
+            "mesh": mesh, "backend": backend, "mirror_degree": mirror_degree,
+        },
+        owner="get_engine",
+    )
     engines = pg.__dict__.get("_traversal_engines")
     if not isinstance(engines, BoundedCache):
         engines = BoundedCache(_ENGINE_CACHE_MAX)
         pg.__dict__["_traversal_engines"] = engines
     mesh_key = (
-        None if mesh is None else tuple(int(d.id) for d in mesh.devices.flat)
+        None
+        if cfg.mesh is None
+        else tuple(int(d.id) for d in cfg.mesh.devices.flat)
     )
     prog_key = (program or SsspProgram()).key
-    mirror_key = None if mirror_degree is None else int(mirror_degree)
+    mirror_key = (
+        None if cfg.mirror_degree is None else int(cfg.mirror_degree)
+    )
     key = (
-        int(m_max), bool(collect_subgraphs), mesh_key, prog_key,
-        str(backend), mirror_key,
+        int(cfg.m_max), bool(cfg.collect_subgraphs), mesh_key, prog_key,
+        str(cfg.backend), mirror_key,
     )
     return engines.get_or_build(
         key,
-        lambda: TraversalEngine(
-            pg, program=program, m_max=m_max,
-            collect_subgraphs=collect_subgraphs, mesh=mesh, backend=backend,
-            mirror_degree=mirror_degree,
-        ),
+        lambda: TraversalEngine(pg, program=program, config=cfg),
     )
 
 

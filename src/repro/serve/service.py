@@ -58,6 +58,7 @@ from repro.core.billing import BillingModel, CostReport, evaluate
 from repro.core.placement import Placement
 from repro.core.replan import ReplanConfig
 from repro.core.timing import DEFAULT_ALPHA, DEFAULT_BETA
+from repro.graph.config import UNSET, EngineConfig, resolve_config, versioned_report
 from repro.serve.batcher import MicroBatcher
 from repro.serve.queue import Admitted, AdmissionQueue, TraversalQuery, lane_key
 from repro.serve.scheduler import CapacityScheduler, lpt_rows
@@ -128,6 +129,14 @@ class ServiceReport:
     cost: CostReport  # billed through the existing two-ledger split
     cost_per_1k_queries: float
     queries: tuple[QueryRecord, ...]  # completed queries, admission order
+    mutations_applied: int = 0  # delta buffers merged during the run
+
+    def asdict(self) -> dict:
+        """Schema-versioned dict form (see ``graph.config``; contract in
+        ``graph/__init__``).  Nested reports recurse: ``cost`` and each
+        ``QueryRecord`` become plain dicts."""
+        fields = dataclasses.asdict(self)
+        return versioned_report("service_report", fields)
 
 
 def poisson_trace(
@@ -183,26 +192,35 @@ class TraversalService:
         *,
         config: ServiceConfig | None = None,
         default_program=None,
-        mesh=None,
-        backend: str = "xla",
+        mesh=UNSET,
+        backend: str = UNSET,
+        engine_config: EngineConfig | None = None,
     ):
         from repro.graph.program import SsspProgram
         from repro.graph.traversal import get_engine
 
+        ecfg = resolve_config(
+            engine_config,
+            {"mesh": mesh, "backend": backend},
+            owner="TraversalService",
+        )
         self.pg = pg
         self.config = config or ServiceConfig()
         self.default_program = default_program or SsspProgram()
-        self.mesh = mesh
-        self.backend = backend
+        self.engine_config = ecfg
+        self.mesh = ecfg.mesh
+        self.backend = ecfg.backend
         self._get_engine = get_engine
         self._default_key = str(self.default_program.key)
         itemsize = np.dtype(self.default_program.dtype).itemsize
         nv, _ = pg.partition_sizes
         self.partition_bytes = (itemsize * nv).astype(np.int64)
 
-    def _engine_for(self, program):
+    def _engine_for(self, program, pg=None):
         return self._get_engine(
-            self.pg, program=program, mesh=self.mesh, backend=self.backend
+            pg if pg is not None else self.pg,
+            program=program,
+            config=self.engine_config,
         )
 
     def _program_of_lane(self, rec: Admitted):
@@ -212,11 +230,94 @@ class TraversalService:
             else self.default_program
         )
 
-    def run(self, trace) -> ServiceReport:
-        """Serve ``trace`` to completion and return the ``ServiceReport``."""
+    def _apply_mutation(self, buf, lanes: dict) -> None:
+        """Merge one due delta buffer into the serving graph, in place.
+
+        The graph swap happens *between* service turns (a window boundary for
+        every lane), so in-flight batch state is carried exactly: edge-only
+        inserts leave the vertex plane untouched (identity carry, or a pure
+        ``relayout_state`` permutation when an edge-pad grew), and every
+        inserted-edge source re-enters the frontier so monotone lanes converge
+        to the mutated graph's fixpoint (``graph.deltas``).  Mesh lanes merge
+        their layout incrementally (``merged_mesh_layout``) and the merged
+        layout is primed into the new graph's caches, so rebuilding each
+        lane's engine reuses unchanged device blocks.  Deletes cannot be
+        un-relaxed, so a buffer with deletes is only accepted while no lane
+        holds live rows (idle lanes drop their phantom-only state instead).
+        """
+        from repro.graph import deltas as graph_deltas
+
+        live = [ln for ln in lanes.values() if ln.batcher.n_live > 0]
+        if buf.has_deletes and live:
+            raise ValueError(
+                "cannot merge deletes while queries are in flight: a delete "
+                "cannot be un-relaxed (drain the lanes first)"
+            )
+        for lane in live:
+            if getattr(lane.engine.program, "stationary", False):
+                raise ValueError(
+                    "state carry across a merge is monotone-programs-only "
+                    f"(lane {lane.key} is stationary with live rows)"
+                )
+        old_pg = self.pg
+        new_pg = graph_deltas.apply_delta_buffer(old_pg, buf)
+        if new_pg is old_pg:
+            return
+        isrc, _, _ = buf.inserts()
+        for lane in lanes.values():
+            old_engine = lane.engine
+            old_layout = (
+                old_engine._mesh_prog.layout
+                if old_engine._mesh_prog is not None
+                else None
+            )
+            if old_layout is not None:
+                graph_deltas.merged_mesh_layout(old_pg, new_pg, old_layout)
+            new_engine = self._engine_for(old_engine.program, new_pg)
+            batcher = lane.batcher
+            if batcher.state is not None and batcher.n_live == 0:
+                # phantom-only state: cheaper to cold-start than to carry
+                batcher.state = None
+                batcher.last_nst[:] = 0
+                batcher._kills.clear()
+            elif batcher.state is not None:
+                new_layout = (
+                    new_engine._mesh_prog.layout
+                    if new_engine._mesh_prog is not None
+                    else None
+                )
+                identity = new_engine.program.identity
+                state = graph_deltas.carry_state(
+                    old_layout, new_layout, batcher.state,
+                    identity=identity, mesh=self.mesh,
+                )
+                if isrc.size:
+                    state = graph_deltas.reactivate_sources(
+                        state, new_layout, isrc, identity=identity
+                    )
+                batcher.state = state
+            lane.engine = new_engine
+            batcher.engine = new_engine
+        self.pg = new_pg
+        itemsize = np.dtype(self.default_program.dtype).itemsize
+        nv, _ = new_pg.partition_sizes
+        self.partition_bytes = (itemsize * nv).astype(np.int64)
+
+    def run(self, trace, mutations=None) -> ServiceReport:
+        """Serve ``trace`` to completion and return the ``ServiceReport``.
+
+        ``mutations`` is an optional feed of ``(sim_time, EdgeDeltaBuffer)``
+        pairs: each buffer merges into the serving graph at the first turn
+        boundary whose simulated clock has passed its time, interleaved with
+        query traffic (``_apply_mutation``).  The run drains both the arrival
+        trace and the mutation feed before returning.
+        """
         cfg = self.config
         arrivals = sorted(trace, key=lambda tq: tq[0])
         offered = len(arrivals)
+        muts = sorted(mutations or (), key=lambda tb: float(tb[0]))
+        next_mut = 0
+        mutations_applied = 0
         queue = AdmissionQueue(cfg.queue_capacity, default_key=self._default_key)
         sched = CapacityScheduler(
             self.pg.n_parts,
@@ -253,6 +354,12 @@ class TraversalService:
             return lane
 
         for _turn in range(self.MAX_TURNS):
+            # -- 0. merge delta buffers the clock has passed -----------------
+            while next_mut < len(muts) and muts[next_mut][0] <= clock + 1e-12:
+                self._apply_mutation(muts[next_mut][1], lanes)
+                next_mut += 1
+                mutations_applied += 1
+
             # -- 1. admit everything that has arrived by now -----------------
             while (
                 next_arrival < offered
@@ -272,9 +379,14 @@ class TraversalService:
                 if queue.depth(k) > 0 or lanes[k].batcher.n_live > 0
             ]
             if not runnable:
-                if next_arrival >= offered:
-                    break  # drained: no arrivals, queue empty, rows idle
-                clock = max(clock, arrivals[next_arrival][0])
+                if next_arrival >= offered and next_mut >= len(muts):
+                    break  # drained: no arrivals, no mutations, rows idle
+                jumps = []
+                if next_arrival < offered:
+                    jumps.append(float(arrivals[next_arrival][0]))
+                if next_mut < len(muts):
+                    jumps.append(float(muts[next_mut][0]))
+                clock = max(clock, min(jumps))
                 continue
             key = runnable[rr % len(runnable)]
             rr += 1
@@ -427,4 +539,5 @@ class TraversalService:
                 cost.cost / n_done * 1000.0 if n_done else float("inf")
             ),
             queries=tuple(completed),
+            mutations_applied=mutations_applied,
         )

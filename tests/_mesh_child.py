@@ -548,4 +548,60 @@ for name, pg in graphs.items():
             f"D={MESH_SIZES}, physical moves D=8: {base[k].n_migrations and 'yes' or 'n/a'}"
         )
 
+# -- streaming delta merges: mid-traversal state carried exactly -------------
+# between windows, merge an EdgeDeltaBuffer through GraphSession.apply_deltas
+# at D in {2, 8} on the ragged P=5 weighted graph: the carried state must be
+# bit-identical across the merge (gathered dist + superstep counters
+# unchanged), and the continued traversal must land exactly on the mutated
+# graph's fixpoint (the inserted 0.5-weight shortcuts change it, so the
+# reactivation path is what makes this pass).
+from repro.graph import EngineConfig, open_session
+from repro.graph.deltas import EdgeDeltaBuffer, apply_delta_buffer
+
+rng_d = np.random.default_rng(21)
+buf5 = EdgeDeltaBuffer()
+for v in rng_d.choice(n5, size=12, replace=False):
+    u = int((int(v) + n5 // 2) % n5)
+    buf5.insert(int(v), u, 0.5)
+    buf5.insert(u, int(v), 0.5)
+
+new_pg5w = apply_delta_buffer(pg5w, buf5)
+for d_n in (2, 8):
+    cfg = EngineConfig(mesh=partition_mesh(d_n), m_max=M_MAX)
+    sess = open_session(pg5w, cfg)
+    state = sess.init_state(srcs)
+    w = sess.run_window(state, 3)
+    state = w.state
+    pre_dist = sess.gather_global(state.dist)
+    pre_steps = np.asarray(state.n_supersteps).copy()
+
+    state = sess.apply_deltas(buf5, state=state)
+    assert sess.pg is not pg5w and sess.pg.graph.n_edges == new_pg5w.graph.n_edges
+    np.testing.assert_array_equal(
+        sess.gather_global(state.dist), pre_dist,
+        err_msg=f"delta merge D={d_n}: carried dist not bit-identical",
+    )
+    np.testing.assert_array_equal(
+        np.asarray(state.n_supersteps), pre_steps,
+        err_msg=f"delta merge D={d_n}: superstep counters changed",
+    )
+
+    for _ in range(M_MAX):
+        w = sess.run_window(state, 3)
+        state = w.state
+        if w.done.all():
+            break
+    assert w.done.all(), f"delta merge D={d_n}: continued run never converged"
+    fresh = sess.run(sources=srcs)  # fresh fixpoint on the mutated graph
+    np.testing.assert_array_equal(
+        sess.gather_global(state.dist), fresh.dist,
+        err_msg=f"delta merge D={d_n}: continued run != mutated fixpoint",
+    )
+    # the shortcuts must actually matter, or the reactivation is untested
+    base5 = get_engine(pg5w, m_max=M_MAX, mesh=partition_mesh(d_n)).run(srcs)
+    assert not np.array_equal(np.asarray(fresh.dist), np.asarray(base5.dist)), (
+        f"delta merge D={d_n}: inserted shortcuts changed nothing"
+    )
+    print(f"delta merge D={d_n}: carried state bit-identical, fixpoint exact")
+
 print("ALL MESH CHECKS PASSED")
